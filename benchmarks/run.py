@@ -1,0 +1,42 @@
+"""Benchmark harness: one benchmark per paper table/figure + the roofline.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only softmax_accuracy
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+BENCHES = ("op_breakdown", "pim_cycles", "softmax_accuracy",
+           "attention_accuracy", "pipeline_model", "kernel_bench",
+           "roofline_bench")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args(argv)
+    names = args.only.split(",") if args.only else BENCHES
+    t0 = time.time()
+    failed = []
+    for name in names:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            t = time.time()
+            mod.run()
+            print(f"[benchmarks] {name} done in {time.time() - t:.1f}s")
+        except Exception as e:
+            import traceback
+            traceback.print_exc()
+            failed.append((name, repr(e)))
+    print(f"\n[benchmarks] total {time.time() - t0:.1f}s; "
+          f"{len(names) - len(failed)}/{len(names)} passed"
+          + (f"; FAILED: {failed}" if failed else ""))
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,93 @@
+"""Quickstart: the AttentionLego stack in five minutes (CPU).
+
+1. PIM macro behavioral model: int8 weight-stationary matmul (+6-bit ADC)
+2. LUT softmax (256-entry exp table, two-phase normalization)
+3. Full PIM attention over an int8 KV cache vs fp32 attention
+4. A tiny LM built from these blocks: train a few steps on the copy task,
+   then greedy-decode with the paper's serve dataflow.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import LUTSoftmaxConfig, PIMConfig, TrainConfig
+from repro.core import attention as A
+from repro.core import lut_softmax as LS
+from repro.core import pim
+from repro.data import pipeline as data
+from repro.models.model_zoo import build_model
+from repro.runtime import serve_lib, train_lib
+
+key = jax.random.PRNGKey(0)
+
+# --- 1. PIM macro matmul ----------------------------------------------------
+print("=== 1. PIM weight-stationary matmul (paper §3.2) ===")
+x = jax.random.normal(key, (4, 256))
+lin = pim.pim_linear_init(key, 256, 128)
+y_ideal = pim.pim_linear_apply(lin, x, PIMConfig())
+y_adc = pim.pim_linear_apply(lin, x, PIMConfig(adc_mode="quantized"))
+y_fp = x @ lin["w"]
+for name, y in (("ideal ADC", y_ideal), ("6-bit ADC", y_adc)):
+    rel = jnp.linalg.norm(y - y_fp) / jnp.linalg.norm(y_fp)
+    print(f"  {name:10s} rel err vs fp32: {float(rel):.4f}")
+dep = pim.deploy_params(lin, PIMConfig())
+print(f"  deployed ('load once'): w_q {dep['w_q'].dtype} {dep['w_q'].shape}, "
+      f"macros={pim.macro_grid(256, 128, PIMConfig())}")
+
+# --- 2. LUT softmax -----------------------------------------------------------
+print("\n=== 2. LUT softmax (paper §3.4) ===")
+lut = LUTSoftmaxConfig()
+scores = jnp.clip(jnp.round(jax.random.normal(key, (2, 64)) * 32),
+                  -128, 127).astype(jnp.int32)
+p = LS.lut_softmax(scores, lut)
+ref = jax.nn.softmax(scores * lut.score_scale, axis=-1)
+print(f"  256-entry table, Q1.15 -> Q0.16; max |p - softmax| = "
+      f"{float(jnp.max(jnp.abs(p - ref))):.2e}; row sums ~ "
+      f"{float(p.sum(-1).mean()):.6f}")
+
+# --- 3. PIM attention ---------------------------------------------------------
+print("\n=== 3. PIM attention (int8 KV cache + LUT softmax) ===")
+B, S, H, Hkv, Dh = 2, 32, 4, 2, 64
+q = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, Dh)) * 0.5
+k = jax.random.normal(jax.random.PRNGKey(2), (B, S, Hkv, Dh)) * 0.5
+v = jax.random.normal(jax.random.PRNGKey(3), (B, S, Hkv, Dh)) * 0.5
+cache = A.cache_write(A.init_kv_cache(B, S, Hkv, Dh), k, v, 0, PIMConfig())
+o_pim = A.pim_attention(q, cache, PIMConfig(), lut, 0, out_dtype=jnp.float32)
+o_fp = A.fp_attention(q, k, v, 0)
+rel = jnp.linalg.norm(o_pim - o_fp) / jnp.linalg.norm(o_fp)
+print(f"  two-pass behavioral path rel err vs fp: {float(rel):.4f}")
+from repro.kernels import ops
+o_k = ops.pim_flash_attention(q, cache, 0, out_dtype=jnp.float32)
+rel = jnp.linalg.norm(o_k - o_fp) / jnp.linalg.norm(o_fp)
+print(f"  fused flash-PIM Pallas kernel rel err:  {float(rel):.4f}")
+
+# --- 4. tiny LM end to end -----------------------------------------------------
+print("\n=== 4. Tiny AttentionLego LM: train on a Markov LM, then serve ===")
+cfg = get_config("internlm2-1.8b", smoke=True)
+model = build_model(cfg)
+params = model.init(key)
+tcfg = TrainConfig(learning_rate=1e-2, warmup_steps=10, total_steps=80)
+step = train_lib.make_train_step(model, tcfg)
+opt = train_lib.init_opt_state(params, tcfg)
+for s in range(80):
+    batch = {"tokens": jnp.asarray(
+        data.lm_batch(s, 16, 32, cfg.vocab_size))}
+    params, opt, m = step(params, opt, batch)
+    if s % 20 == 0 or s == 79:
+        print(f"  step {s:3d}  loss {float(m['loss']):.3f}  "
+              f"(init ~ log V = {jnp.log(cfg.vocab_size):.2f}, "
+              f"task floor ~ log 4 = 1.39)")
+
+prompt = {"tokens": jnp.asarray(data.lm_batch(999, 2, 16, cfg.vocab_size))}
+out = serve_lib.greedy_generate(model, params, prompt, 8, 40)
+# every generated transition must be one of the 4 legal Markov successors
+table = data._markov_table(cfg.vocab_size, 0)
+seq = jnp.concatenate([prompt["tokens"], out], axis=1)
+legal = sum(int(seq[b, t + 1] in table[int(seq[b, t])])
+            for b in range(2) for t in range(15, seq.shape[1] - 1))
+total = 2 * (seq.shape[1] - 16)
+print(f"  generated  : {out[0].tolist()}")
+print(f"  legal Markov transitions in generation: {legal}/{total} "
+      "(random would be ~4/vocab = 1.6%)")

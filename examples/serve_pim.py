@@ -1,0 +1,45 @@
+"""Batched serving with the paper's dataflow: one-time int8 weight load
+(deploy), int8 KV cache, LUT softmax — behavioral path vs the fused
+flash-PIM Pallas kernel, with greedy-match verification between the two.
+
+Run:  PYTHONPATH=src python examples/serve_pim.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import pipeline as data
+from repro.models.model_zoo import build_model, deploy_tree
+from repro.runtime import serve_lib
+
+cfg = get_config("internlm2-1.8b", smoke=True)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+# the paper's one-time weight load: fp masters -> int8 macro contents
+deployed = deploy_tree(params, cfg)
+n_int8 = sum(x.size for x in jax.tree.leaves(deployed)
+             if hasattr(x, "dtype") and x.dtype == jnp.int8)
+print(f"[serve] deployed {n_int8/1e3:.0f}K int8 weights into PIM macros "
+      "(loaded once — the paper's key energy saving)")
+
+B, P, N = 4, 24, 12
+prompt = {"tokens": jnp.asarray(data.lm_batch(0, B, P, cfg.vocab_size))}
+
+outs = {}
+for impl in ("behavioral", "kernel"):
+    m = build_model(dataclasses.replace(cfg, attn_impl=impl))
+    t0 = time.time()
+    out = serve_lib.greedy_generate(m, deployed, prompt, N, P + N)
+    jax.block_until_ready(out)
+    outs[impl] = out
+    print(f"[serve] attn_impl={impl:10s} generated {out.shape} "
+          f"in {time.time()-t0:.1f}s (interpret-mode kernel on CPU)")
+
+agree = float((outs["behavioral"][:, :6] == outs["kernel"][:, :6]).mean())
+print(f"[serve] greedy agreement (first 6 tokens, two-pass vs fused): "
+      f"{agree:.2f}")
+print("[serve] sample:", outs["behavioral"][0].tolist())

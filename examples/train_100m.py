@@ -1,0 +1,81 @@
+"""End-to-end driver: train a ~100M-parameter AttentionLego LM for a few
+hundred steps on the synthetic Markov LM task, with checkpointing, restart
+safety, and the step watchdog — the full production loop at laptop scale.
+
+Run:  PYTHONPATH=src python examples/train_100m.py [--steps 300]
+(~100M params; on this single-core CPU container expect ~2-4 s/step at the
+default batch. Use --tiny for a 2-minute smoke version.)
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data import pipeline as data
+from repro.models.model_zoo import build_model, param_count_exact
+from repro.runtime import fault, train_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/attentionlego_100m")
+    args = ap.parse_args()
+
+    if args.tiny:
+        cfg = ModelConfig(name="lego-10m", num_layers=4, d_model=256,
+                          num_heads=4, num_kv_heads=2, d_ff=1024,
+                          vocab_size=8192, max_seq_len=1024)
+        args.steps = min(args.steps, 60)
+    else:
+        # ~100M dense decoder in the paper's style (PIM linears, GQA)
+        cfg = ModelConfig(name="lego-100m", num_layers=12, d_model=768,
+                          num_heads=12, num_kv_heads=4, d_ff=3072,
+                          vocab_size=32768, max_seq_len=2048)
+    model = build_model(cfg)
+    n = param_count_exact(cfg)
+    print(f"[100m] {cfg.name}: {n/1e6:.1f}M params, "
+          f"{cfg.num_layers}L d={cfg.d_model} vocab={cfg.vocab_size}")
+
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=30,
+                       total_steps=args.steps, microbatches=1)
+    step_fn = train_lib.make_train_step(model, tcfg)
+    shape = type("S", (), {"global_batch": args.batch, "seq_len": args.seq})()
+
+    def make_state():
+        params = model.init(jax.random.PRNGKey(0))
+        return {"params": params, "opt": train_lib.init_opt_state(params, tcfg)}
+
+    losses = []
+    t0 = time.time()
+
+    def one_step(state, step):
+        batch = {k: jnp.asarray(v) for k, v in
+                 data.make_batch(cfg, shape, step).items()}
+        p, o, m = step_fn(state["params"], state["opt"], batch)
+        loss = float(m["loss"])
+        losses.append(loss)
+        if step % 20 == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"[100m] step {step:4d} loss {loss:.4f} "
+                  f"lr {float(m['lr']):.2e} ({dt:.0f}s, "
+                  f"{(step + 1) * args.batch * args.seq / max(dt, 1e-9):,.0f} tok/s)")
+        return {"params": p, "opt": o}, m
+
+    wd = fault.StepWatchdog()
+    state, metrics = fault.run_restartable(
+        args.steps, make_state, one_step, args.ckpt_dir,
+        checkpoint_every=50, watchdog=wd)
+    print(f"[100m] done. loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(Markov task floor ~ log(4) = 1.386); median step {wd.median:.2f}s")
+    assert losses[-1] < losses[0], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: AttentionLego — PIM-based self-attention, reproduced natively on TPU in JAX."""
+__version__ = "1.0.0"

@@ -1,0 +1,50 @@
+"""Architecture registry: the 10 assigned configs (+ smoke-reduced variants)."""
+from repro.configs import (
+    dbrx_132b,
+    deepseek_moe_16b,
+    gemma_7b,
+    internlm2_1_8b,
+    mistral_large_123b,
+    phi_3_vision_4_2b,
+    qwen2_72b,
+    recurrentgemma_9b,
+    whisper_tiny,
+    xlstm_1_3b,
+)
+from repro.configs.base import (  # noqa: F401
+    LUTSoftmaxConfig, MeshConfig, ModelConfig, MoEConfig, PIMConfig,
+    ShapeConfig, TrainConfig, SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K,
+    LONG_500K,
+)
+
+_MODULES = {
+    "mistral-large-123b": mistral_large_123b,
+    "gemma-7b": gemma_7b,
+    "internlm2-1.8b": internlm2_1_8b,
+    "qwen2-72b": qwen2_72b,
+    "whisper-tiny": whisper_tiny,
+    "xlstm-1.3b": xlstm_1_3b,
+    "deepseek-moe-16b": deepseek_moe_16b,
+    "dbrx-132b": dbrx_132b,
+    "phi-3-vision-4.2b": phi_3_vision_4_2b,
+    "recurrentgemma-9b": recurrentgemma_9b,
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+# archs with sub-quadratic sequence mixing: the only ones that run long_500k
+SUBQUADRATIC = ("xlstm-1.3b", "recurrentgemma-9b")
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {ARCH_NAMES}")
+    mod = _MODULES[arch]
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def shape_applicable(arch: str, shape_name: str) -> bool:
+    """long_500k needs sub-quadratic attention (DESIGN.md §5)."""
+    if shape_name == "long_500k":
+        return arch in SUBQUADRATIC
+    return True

@@ -1,0 +1,2 @@
+"""AttentionLego core: PIM behavioral model, LUT softmax, quantized attention."""
+from repro.core import attention, lego, lut_softmax, pim, quant  # noqa: F401

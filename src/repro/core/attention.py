@@ -1,0 +1,463 @@
+"""AttentionLego attention numerics.
+
+Serve path (paper-faithful dataflow):
+  Input-Process : Q/K/V projections through PIM linears (int8 weights)
+  KV write      : K, V quantized to int8 on write — "writing K^T into the
+                  Score module's PIM macros" (paper §3.3)
+  Score         : int8 QK^T via PIM; output requantized to 8-bit score codes
+                  (the paper's 2048x8-bit QK_output port)
+  Softmax       : LUT softmax (256-entry exp table + 2-phase normalization)
+  AV            : uint8 probabilities streamed through V-stationary PIM macros
+
+Train path: standard fp attention (the paper's blocks are inference-only;
+training is QAT through the PIM linears with straight-through gradients).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LUTSoftmaxConfig, PIMConfig
+from repro.core import quant
+from repro.core.lut_softmax import lut_softmax_codes, probs_to_uint8
+
+
+class KVCache(NamedTuple):
+    """int8 PIM-resident KV cache with per-(token, head) scales.
+
+    `positions` is used only by ring (sliding-window) caches: the absolute
+    token position stored in each slot (-1 = empty).  Linear caches keep it
+    as a zero-size placeholder.
+    """
+
+    k_q: jax.Array        # (B, S, Hkv, Dh) int8
+    v_q: jax.Array        # (B, S, Hkv, Dh) int8
+    k_scale: jax.Array    # (B, S, Hkv) f32
+    v_scale: jax.Array    # (B, S, Hkv) f32
+    length: jax.Array     # () int32 — total tokens written
+    positions: jax.Array  # (S,) int32 ring slot positions, or (0,) placeholder
+
+
+def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+                  ring: bool = False) -> KVCache:
+    return KVCache(
+        k_q=jnp.zeros((batch, max_len, n_kv, head_dim), jnp.int8),
+        v_q=jnp.zeros((batch, max_len, n_kv, head_dim), jnp.int8),
+        k_scale=jnp.zeros((batch, max_len, n_kv), jnp.float32),
+        v_scale=jnp.zeros((batch, max_len, n_kv), jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+        positions=(jnp.full((max_len,), -1, jnp.int32) if ring
+                   else jnp.zeros((0,), jnp.int32)),
+    )
+
+
+def quantize_kv(k: jax.Array, v: jax.Array, cfg: PIMConfig):
+    """Quantize-on-write (per token, per kv head)."""
+    k_scale = quant.symmetric_max_scale(k, cfg.input_bits, axis=-1)
+    v_scale = quant.symmetric_max_scale(v, cfg.input_bits, axis=-1)
+    k_q = quant.quantize(k, k_scale, cfg.input_bits)
+    v_q = quant.quantize(v, v_scale, cfg.input_bits)
+    return (k_q, v_q,
+            k_scale[..., 0].astype(jnp.float32),
+            v_scale[..., 0].astype(jnp.float32))
+
+
+def cache_write(cache: KVCache, k: jax.Array, v: jax.Array, pos, cfg: PIMConfig) -> KVCache:
+    """Write new K/V at position `pos` (scalar) — the paper's K-write dataflow."""
+    k_q, v_q, ks, vs = quantize_kv(k, v, cfg)
+    idx = (0, pos, 0, 0)
+    return KVCache(
+        k_q=jax.lax.dynamic_update_slice(cache.k_q, k_q, idx),
+        v_q=jax.lax.dynamic_update_slice(cache.v_q, v_q, idx),
+        k_scale=jax.lax.dynamic_update_slice(cache.k_scale, ks, idx[:3]),
+        v_scale=jax.lax.dynamic_update_slice(cache.v_scale, vs, idx[:3]),
+        length=jnp.asarray(pos + k.shape[1], jnp.int32),
+        positions=cache.positions,
+    )
+
+
+def cache_write_ring(cache: KVCache, k: jax.Array, v: jax.Array, offset,
+                     cfg: PIMConfig) -> KVCache:
+    """Ring write for sliding-window layers: slot = absolute position mod W.
+
+    If more than W tokens arrive, only the last W are kept (earlier ones
+    would be overwritten anyway).
+    """
+    W = cache.k_q.shape[1]
+    S = k.shape[1]
+    keep = min(S, W)
+    k, v = k[:, -keep:], v[:, -keep:]
+    abs_pos = offset + S - keep + jnp.arange(keep)
+    slots = jnp.mod(abs_pos, W)
+    k_q, v_q, ks, vs = quantize_kv(k, v, cfg)
+    return KVCache(
+        k_q=cache.k_q.at[:, slots].set(k_q),
+        v_q=cache.v_q.at[:, slots].set(v_q),
+        k_scale=cache.k_scale.at[:, slots].set(ks),
+        v_scale=cache.v_scale.at[:, slots].set(vs),
+        length=jnp.asarray(offset + S, jnp.int32),
+        positions=cache.positions.at[slots].set(abs_pos.astype(jnp.int32)),
+    )
+
+
+def _group(x: jax.Array, axis: int, g: int):
+    size = x.shape[axis]
+    rem = (-size) % g
+    if rem:
+        pads = [(0, 0)] * x.ndim
+        pads[axis] = (0, rem)
+        x = jnp.pad(x, pads)
+    new_shape = x.shape[:axis] + (x.shape[axis] // g, g) + x.shape[axis + 1:]
+    return x.reshape(new_shape)
+
+
+def pim_scores_int(q_q: jax.Array, k_q: jax.Array, cfg: PIMConfig) -> jax.Array:
+    """int8 QK^T: (B,Sq,H,Dh) x (B,Sk,H,Dh) -> (B,H,Sq,Sk) on the ADC grid."""
+    if cfg.adc_mode == "ideal":
+        # int8 operands fed to the dot directly (MXU-native; no materialized
+        # int32 copies of the KV cache)
+        return jnp.einsum(
+            "bqhd,bkhd->bhqk", q_q, k_q, preferred_element_type=jnp.int32
+        ).astype(jnp.float32)
+    g = cfg.wordline_group
+    qg = _group(q_q, 3, g).astype(jnp.int32)   # (B,Sq,H,G,g)
+    kg = _group(k_q, 3, g).astype(jnp.int32)   # (B,Sk,H,G,g)
+    psum = jnp.einsum("bqhge,bkhge->bhqkg", qg, kg)
+    from repro.core.pim import adc_full_range
+    psum = quant.adc_transfer(psum, cfg.adc_bits, adc_full_range(cfg))
+    return psum.sum(axis=-1)
+
+
+def pim_av_int(p_u8: jax.Array, v_q: jax.Array, cfg: PIMConfig) -> jax.Array:
+    """uint8 probabilities x int8 V: (B,H,Sq,Sk) x (B,Sk,H,Dh) -> (B,Sq,H,Dh).
+
+    V is stationary along the sequence (word-line) dimension, so ADC groups
+    run over Sk in quantized mode.
+    """
+    if cfg.adc_mode == "ideal":
+        return jnp.einsum(
+            "bhqk,bkhd->bqhd", p_u8, v_q, preferred_element_type=jnp.int32
+        ).astype(jnp.float32)
+    g = cfg.wordline_group
+    pg = _group(p_u8, 3, g).astype(jnp.int32)  # (B,H,Sq,G,g)
+    vg = _group(v_q, 1, g).astype(jnp.int32)   # (B,G,g,H,Dh)
+    psum = jnp.einsum("bhqge,bgehd->bqhdg", pg, vg)
+    from repro.core.pim import adc_full_range
+    psum = quant.adc_transfer(psum, cfg.adc_bits, adc_full_range(cfg))
+    return psum.sum(axis=-1)
+
+
+def _expand_kv(x: jax.Array, q_per_kv: int) -> jax.Array:
+    """(B,S,Hkv,...) -> (B,S,H,...) by head-group broadcast (GQA)."""
+    if q_per_kv == 1:
+        return x
+    return jnp.repeat(x, q_per_kv, axis=2)
+
+
+def attention_mask(
+    q_len: int, k_len: int, q_offset, causal: bool, window: int = 0,
+    kv_valid_len=None,
+) -> jax.Array:
+    """(q_len, k_len) boolean mask. q_offset: absolute position of query 0."""
+    q_pos = q_offset + jnp.arange(q_len)[:, None]
+    k_pos = jnp.arange(k_len)[None, :]
+    mask = jnp.ones((q_len, k_len), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    if kv_valid_len is not None:
+        mask &= k_pos < kv_valid_len
+    return mask
+
+
+_PIM_ATTN_CHUNK = 512
+
+
+def _pim_attend_block_grouped(qb, q_pos, k_q, ks_bh, v_q, vs_bh, vs_cum,
+                              kv_len, pim_cfg: PIMConfig,
+                              lut_cfg: LUTSoftmaxConfig,
+                              causal: bool, window: int):
+    """GQA-grouped query block: the KV cache is NEVER head-expanded — q is
+    reshaped to (B, cq, Hkv, G, Dh) and contracted against the raw int8
+    cache, so decode reads Hkv-many (not H-many) int8 KV streams.
+    (Beyond-paper optimization; see EXPERIMENTS.md §Perf cell 3.)
+
+    qb: (B, cq, H, Dh); k_q/v_q: (B, Sk, Hkv, Dh) int8;
+    ks_bh/vs_bh/vs_cum: (B, Hkv, Sk) scales.
+    """
+    B, cq, H, Dh = qb.shape
+    Sk, Hkv = k_q.shape[1], k_q.shape[2]
+    G = H // Hkv
+    sm_scale = 1.0 / (Dh ** 0.5)
+
+    q_scale = quant.symmetric_max_scale(qb, pim_cfg.input_bits, axis=-1)
+    q_q = quant.quantize(qb, q_scale, pim_cfg.input_bits)
+    qg = q_q.reshape(B, cq, Hkv, G, Dh)
+    # Score engine: direct int8 contraction (no int32 KV materialization)
+    s_int = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_q,
+                       preferred_element_type=jnp.int32)   # (B,Hkv,G,cq,Sk)
+    qs = q_scale[..., 0].reshape(B, cq, Hkv, G).transpose(0, 2, 3, 1)
+    s_real = (s_int.astype(jnp.float32)
+              * qs[..., None]
+              * ks_bh[:, :, None, None, :]
+              * sm_scale)
+    qmax = (1 << (lut_cfg.input_bits - 1)) - 1
+    s_codes = jnp.clip(jnp.round(s_real / lut_cfg.score_scale),
+                       -qmax - 1, qmax).astype(jnp.int32)
+
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = k_pos < kv_len
+    if causal:
+        mask = mask & (k_pos <= q_pos[:, None])
+    if window:
+        mask = mask & (k_pos > q_pos[:, None] - window)
+    codes = lut_softmax_codes(s_codes, lut_cfg, mask=mask[None, None, None])
+    p_u8 = probs_to_uint8(codes, lut_cfg)                  # (B,Hkv,G,cq,Sk)
+
+    if causal:
+        s_fold = jnp.maximum(
+            vs_cum[:, :, jnp.clip(q_pos, 0, Sk - 1)], 1e-8)  # (B,Hkv,cq)
+    else:
+        s_fold = jnp.maximum(jnp.max(vs_bh, axis=-1, keepdims=True), 1e-8
+                             ) * jnp.ones((1, 1, cq))
+    p255 = jnp.clip(
+        jnp.round(p_u8.astype(jnp.float32)
+                  * vs_bh[:, :, None, None, :]
+                  / s_fold[:, :, None, :, None]),
+        0, 255,
+    ).astype(jnp.int32)
+    # u8 codes (0..255) x int8 V: the KV-side operand stays int8 (the 2.9 GB
+    # stream); the small p tile rides as int32
+    o_int = jnp.einsum("bhgqk,bkhd->bqhgd", p255, v_q,
+                       preferred_element_type=jnp.int32)
+    o = (o_int.astype(jnp.float32)
+         * s_fold.transpose(0, 2, 1)[:, :, :, None, None] * (2.0 ** -8))
+    return o.reshape(B, cq, H, Dh)
+
+
+def _pim_attend_block(qb, q_pos, k_q, k_scale_bh, v_q, vs_bh, vs_cum, kv_len,
+                      pim_cfg: PIMConfig, lut_cfg: LUTSoftmaxConfig,
+                      causal: bool, window: int):
+    """One query block of the paper's Score -> LUT-Softmax -> AV pipeline.
+
+    qb: (B, cq, H, Dh); q_pos: (cq,) absolute positions.
+    k_q/v_q: (B, Sk, H, Dh) int8 (GQA-expanded); *_bh scales: (B, H, Sk).
+    """
+    B, cq, H, Dh = qb.shape
+    Sk = k_q.shape[1]
+    sm_scale = 1.0 / (Dh ** 0.5)
+
+    # --- Score module: int8 QK^T ------------------------------------------
+    q_scale = quant.symmetric_max_scale(qb, pim_cfg.input_bits, axis=-1)
+    q_qb = quant.quantize(qb, q_scale, pim_cfg.input_bits)
+    s_int = pim_scores_int(q_qb, k_q, pim_cfg)                 # (B,H,cq,Sk)
+    s_real = (
+        s_int
+        * q_scale[:, :, :, 0].transpose(0, 2, 1)[:, :, :, None]
+        * k_scale_bh[:, :, None, :]
+        * sm_scale
+    )
+    # requantize to the 8-bit score port (paper: QK_output is 2048x8 bits)
+    qmax = (1 << (lut_cfg.input_bits - 1)) - 1
+    s_codes = jnp.clip(
+        jnp.round(s_real / lut_cfg.score_scale), -qmax - 1, qmax
+    ).astype(jnp.int32)
+
+    # --- Softmax module: LUT + 2-phase normalization ----------------------
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = k_pos < kv_len
+    if causal:
+        mask = mask & (k_pos <= q_pos[:, None])
+    if window:
+        mask = mask & (k_pos > q_pos[:, None] - window)
+    codes = lut_softmax_codes(s_codes, lut_cfg, mask=mask[None, None])
+
+    # --- AV through V-stationary PIM macros --------------------------------
+    # Per-token V scales are folded into the probabilities *before* the array
+    # (a digital fixed-point pre-scale of the 8-bit DAC input), so the
+    # in-array contraction stays pure integer and remains ADC-quantizable.
+    p_u8 = probs_to_uint8(codes, lut_cfg)                      # (B,H,cq,Sk)
+    if causal:
+        # causal fold scale: running max of v scales up to each query position
+        # (never peeks at future tokens — preserves autoregressive semantics)
+        s_fold = jnp.maximum(
+            vs_cum[:, :, jnp.clip(q_pos, 0, Sk - 1)], 1e-8)    # (B,H,cq)
+    else:
+        s_fold = jnp.maximum(
+            jnp.max(vs_bh, axis=-1, keepdims=True), 1e-8
+        ) * jnp.ones((1, 1, cq))
+    p_fold = jnp.clip(
+        jnp.round(
+            p_u8.astype(jnp.float32)
+            * vs_bh[:, :, None, :]
+            / s_fold[:, :, :, None]
+        ),
+        0, 255,
+    ).astype(jnp.int32)
+    o_int = pim_av_int(p_fold, v_q, pim_cfg)                   # (B,cq,H,Dh)
+    return o_int * s_fold.transpose(0, 2, 1)[..., None] * (2.0 ** -8)
+
+
+def pim_attention(
+    q: jax.Array,                 # (B, Sq, H, Dh) float
+    cache: KVCache,
+    pim_cfg: PIMConfig,
+    lut_cfg: LUTSoftmaxConfig,
+    q_offset,
+    causal: bool = True,
+    window: int = 0,
+    out_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """Paper-faithful quantized attention over an int8 KV cache.
+
+    Query-chunked so prefill never materializes the full Sq x Sk score
+    matrix (each chunk still sees the full key axis — the two-phase LUT
+    normalization is exact, not online).
+    """
+    B, Sq, H, Dh = q.shape
+    Sk, Hkv = cache.k_q.shape[1], cache.k_q.shape[2]
+    q_per_kv = H // Hkv
+    if pim_cfg.adc_mode == "ideal":
+        # grouped GQA path: raw int8 cache, no head expansion
+        k_q, v_q = cache.k_q, cache.v_q
+        ks_bh = cache.k_scale.transpose(0, 2, 1)               # (B,Hkv,Sk)
+        vs_bh = cache.v_scale.transpose(0, 2, 1)
+        block = _pim_attend_block_grouped
+    else:
+        k_q = _expand_kv(cache.k_q, q_per_kv)
+        ks_bh = _expand_kv(cache.k_scale[..., None], q_per_kv
+                           )[..., 0].transpose(0, 2, 1)        # (B,H,Sk)
+        v_q = _expand_kv(cache.v_q, q_per_kv)
+        vs_bh = _expand_kv(cache.v_scale[..., None], q_per_kv
+                           )[..., 0].transpose(0, 2, 1)
+        block = _pim_attend_block
+    vs_cum = jax.lax.cummax(vs_bh, axis=2) if causal else vs_bh
+
+    cq = _PIM_ATTN_CHUNK
+    if Sq <= cq or Sq % cq:
+        q_pos = q_offset + jnp.arange(Sq)
+        o = block(q, q_pos, k_q, ks_bh, v_q, vs_bh, vs_cum,
+                  cache.length, pim_cfg, lut_cfg, causal, window)
+        return o.astype(out_dtype)
+    nc = Sq // cq
+    qc = jnp.moveaxis(q.reshape(B, nc, cq, H, Dh), 1, 0)
+
+    def body(_, args):
+        qb, ci = args
+        q_pos = q_offset + ci * cq + jnp.arange(cq)
+        return None, block(
+            qb, q_pos, k_q, ks_bh, v_q, vs_bh, vs_cum, cache.length,
+            pim_cfg, lut_cfg, causal, window)
+
+    _, oc = jax.lax.scan(body, None, (qc, jnp.arange(nc)))
+    o = jnp.moveaxis(oc, 0, 1).reshape(B, Sq, H, Dh)
+    return o.astype(out_dtype)
+
+
+def pim_attention_ring(
+    q: jax.Array,                 # (B, Sq, H, Dh) float
+    cache: KVCache,
+    pim_cfg: PIMConfig,
+    lut_cfg: LUTSoftmaxConfig,
+    q_offset,
+    window: int,
+    out_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """Quantized attention over a ring (sliding-window) cache.
+
+    Masking uses the per-slot absolute positions; every valid slot holds a
+    token at position <= the current query, so causality is structural.
+    """
+    B, Sq, H, Dh = q.shape
+    Sk, Hkv = cache.k_q.shape[1], cache.k_q.shape[2]
+    q_per_kv = H // Hkv
+    sm_scale = 1.0 / (Dh ** 0.5)
+    q_scale = quant.symmetric_max_scale(q, pim_cfg.input_bits, axis=-1)
+    q_q = quant.quantize(q, q_scale, pim_cfg.input_bits)
+    k_q = _expand_kv(cache.k_q, q_per_kv)
+    k_scale = _expand_kv(cache.k_scale[..., None], q_per_kv)[..., 0]
+    s_int = pim_scores_int(q_q, k_q, pim_cfg)
+    s_real = (
+        s_int
+        * q_scale[:, :, :, 0].transpose(0, 2, 1)[:, :, :, None]
+        * k_scale.transpose(0, 2, 1)[:, :, None, :]
+        * sm_scale
+    )
+    qmax = (1 << (lut_cfg.input_bits - 1)) - 1
+    s_codes = jnp.clip(
+        jnp.round(s_real / lut_cfg.score_scale), -qmax - 1, qmax
+    ).astype(jnp.int32)
+    q_pos = q_offset + jnp.arange(Sq)[:, None]                    # (Sq, 1)
+    slot_pos = cache.positions[None, :]                           # (1, Sk)
+    mask = (slot_pos >= 0) & (slot_pos <= q_pos) & (slot_pos > q_pos - window)
+    codes = lut_softmax_codes(s_codes, lut_cfg, mask=mask[None, None])
+    p_u8 = probs_to_uint8(codes, lut_cfg)
+    v_q = _expand_kv(cache.v_q, q_per_kv)
+    v_scale = _expand_kv(cache.v_scale[..., None], q_per_kv)[..., 0]
+    vs_bh = v_scale.transpose(0, 2, 1)                            # (B,H,Sk)
+    valid = (cache.positions >= 0)[None, None]
+    s_fold = jnp.maximum(
+        jnp.max(jnp.where(valid, vs_bh, 0.0), axis=-1, keepdims=True), 1e-8
+    )                                                             # (B,H,1)
+    p_fold = jnp.clip(
+        jnp.round(p_u8.astype(jnp.float32) * (vs_bh / s_fold)[:, :, None, :]),
+        0, 255,
+    ).astype(jnp.int32)
+    o_int = pim_av_int(p_fold, v_q, pim_cfg)
+    o = o_int * s_fold.transpose(0, 2, 1)[..., None] * (2.0 ** -8)
+    return o.astype(out_dtype)
+
+
+_FP_ATTN_CHUNK = 512
+
+
+def _fp_attend_block(qb, k, v, q_pos, causal, window, kv_valid_len, Dh):
+    """One query block against the full K/V. qb: (B, cq, H, Dh)."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", qb, k).astype(jnp.float32) / (Dh ** 0.5)
+    k_pos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones(s.shape[-2:], bool)
+    if causal:
+        mask &= k_pos <= q_pos[:, None]
+    if window:
+        mask &= k_pos > q_pos[:, None] - window
+    if kv_valid_len is not None:
+        mask &= k_pos < kv_valid_len
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+
+
+def fp_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    q_offset=0, causal: bool = True, window: int = 0,
+    kv_valid_len=None, out_dtype=None,
+) -> jax.Array:
+    """fp32-softmax attention (training path / accuracy baseline).
+
+    Query-chunked: only a (B, H, chunk, Sk) score tile is ever live, so long
+    sequences never materialize the full S x S score matrix.
+    """
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    k = _expand_kv(k, H // Hkv)
+    v = _expand_kv(v, H // Hkv)
+    cq = _FP_ATTN_CHUNK
+    if Sq <= cq or Sq % cq:
+        q_pos = q_offset + jnp.arange(Sq)
+        o = _fp_attend_block(q, k, v, q_pos, causal, window, kv_valid_len, Dh)
+        return o.astype(out_dtype or q.dtype)
+    nc = Sq // cq
+    qc = jnp.moveaxis(q.reshape(B, nc, cq, H, Dh), 1, 0)
+
+    def body(_, args):
+        qb, ci = args
+        q_pos = q_offset + ci * cq + jnp.arange(cq)
+        return None, _fp_attend_block(qb, k, v, q_pos, causal, window,
+                                      kv_valid_len, Dh)
+
+    _, oc = jax.lax.scan(body, None, (qc, jnp.arange(nc)))
+    o = jnp.moveaxis(oc, 0, 1).reshape(B, Sq, H, Dh)
+    return o.astype(out_dtype or q.dtype)

@@ -1,0 +1,96 @@
+"""The AttentionLego tile: macro inventory, cycle model, and pipeline schedule.
+
+This module captures the paper's *system* content (§3.1, §3.5, §3.6):
+  * how many 128x128 PIM macros one attention block occupies (spatial cost),
+  * per-token cycle counts for Input-Process / Score / Softmax stages,
+  * the 3-stage token pipeline of the top controller (overlap of q(t+1),
+    score(t), softmax(t-1)),
+  * the weight-load amortization story ("parameters are loaded only once").
+
+These analytic models drive benchmarks/pim_cycles.py and
+benchmarks/pipeline_model.py, and also document how one tile maps onto one
+TPU tensor-parallel shard (spatial scalability == the `model` mesh axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, PIMConfig
+from repro.core import pim
+
+
+@dataclasses.dataclass(frozen=True)
+class LegoTileReport:
+    """Macro inventory + cycle model for one attention block ("Lego tile")."""
+
+    arch: str
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    seq_len: int
+    macros_input_process: int   # W_Q, W_K, W_V (+W_O) storage
+    macros_score: int           # K^T-resident score engine
+    macros_av: int              # V-stationary AV engine
+    weight_load_cycles: int     # one-time (amortized over all tokens)
+    cycles_qkv_per_token: int
+    cycles_score_per_token: int
+    cycles_softmax_per_token: int
+    cycles_av_per_token: int
+
+    @property
+    def macros_total(self) -> int:
+        return self.macros_input_process + self.macros_score + self.macros_av
+
+    @property
+    def serial_cycles_per_token(self) -> int:
+        return (self.cycles_qkv_per_token + self.cycles_score_per_token
+                + self.cycles_softmax_per_token + self.cycles_av_per_token)
+
+    @property
+    def pipelined_cycles_per_token(self) -> int:
+        """Paper §3.6: the 3-stage pipeline hides everything behind the
+        slowest stage once the pipeline is full."""
+        return max(self.cycles_qkv_per_token, self.cycles_score_per_token,
+                   self.cycles_softmax_per_token + self.cycles_av_per_token)
+
+    @property
+    def pipeline_speedup(self) -> float:
+        return self.serial_cycles_per_token / max(self.pipelined_cycles_per_token, 1)
+
+
+def _n_macros(d_in: int, d_out: int, cfg: PIMConfig) -> int:
+    r, c = pim.macro_grid(d_in, d_out, cfg)
+    return r * c
+
+
+def tile_report(cfg: ModelConfig, seq_len: int) -> LegoTileReport:
+    """Analytic model of one attention block at a given (decode) context."""
+    p = cfg.pim
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    # Input-Process: W_Q (d x nq*dh), W_K/W_V (d x nkv*dh), W_O (nq*dh x d)
+    m_ip = (_n_macros(d, nq * dh, p) + 2 * _n_macros(d, nkv * dh, p)
+            + _n_macros(nq * dh, d, p))
+    # Score engine: K^T resident, one (dh x seq) engine per kv head
+    m_sc = nkv * _n_macros(dh, seq_len, p)
+    # AV engine: V resident, one (seq x dh) engine per kv head
+    m_av = nkv * _n_macros(seq_len, dh, p)
+    load = (pim.weight_load_cycles(d, nq * dh, p)
+            + 2 * pim.weight_load_cycles(d, nkv * dh, p)
+            + pim.weight_load_cycles(nq * dh, d, p))
+    # per-token decode cycles: one MVM through each engine
+    c_qkv = pim.mvm_cycles(d, (nq + 2 * nkv) * dh, p)
+    c_sc = pim.mvm_cycles(dh, seq_len, p)
+    # LUT softmax: 2 cycles per paper (load+sum, normalize) per vector chunk;
+    # chunk width = 32-number digital block (paper example) -> seq/32 chunks
+    c_sm = 2 * max(seq_len // 32, 1)
+    c_av = pim.mvm_cycles(seq_len, dh, p)
+    return LegoTileReport(
+        arch=cfg.name, d_model=d, n_heads=nq, n_kv_heads=nkv, head_dim=dh,
+        seq_len=seq_len,
+        macros_input_process=m_ip, macros_score=m_sc, macros_av=m_av,
+        weight_load_cycles=load,
+        cycles_qkv_per_token=c_qkv, cycles_score_per_token=c_sc,
+        cycles_softmax_per_token=c_sm, cycles_av_per_token=c_av,
+    )

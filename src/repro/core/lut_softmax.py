@@ -1,0 +1,114 @@
+"""Look-up-table softmax (AttentionLego §3.4).
+
+The paper computes softmax with zero floating point:
+  1. exp(x) via a 256-entry LUT: 8-bit fixed-point score in, 16-bit fixed-point out
+  2. two-cycle normalization: cycle 1 sums all exponents, cycle 2 divides.
+
+Two table modes:
+  * "paper":   table indexed by the raw int8 score byte (the paper's 256-case
+               generator, AttentionLego/Softmax/src/softmax.py).  The fixed-point
+               fraction width is auto-chosen so exp(qmax*scale) fits in 16 bits.
+  * "shifted": the row max is subtracted in the integer domain first, so the
+               table covers exp(-d*scale), d in [0, 255].  Numerically safe for
+               long rows; this is the mode used inside the models (beyond-paper).
+
+The sum accumulator is modeled in fp32, standing in for the >=40-bit digital
+accumulator a real implementation would use (a 16-bit entry summed over 512k
+positions needs 35 bits).  Kernels reproduce this bit-for-bit.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LUTSoftmaxConfig
+
+
+@functools.lru_cache(maxsize=None)
+def _table_np(cfg: LUTSoftmaxConfig):
+    n = cfg.table_size
+    qmax = (1 << (cfg.input_bits - 1)) - 1
+    out_max = (1 << cfg.table_bits) - 1
+    if cfg.mode == "paper":
+        # entries for raw byte b in [-2^(B-1), 2^(B-1)-1]
+        frac = int(math.floor(math.log2(out_max / math.exp(qmax * cfg.score_scale))))
+        frac = max(min(frac, cfg.table_frac_bits), 0)
+        b = np.arange(-(n // 2), n // 2)
+        vals = np.exp(b * cfg.score_scale) * (1 << frac)
+    else:
+        # entries for d = (max - b) in [0, 255]: exp(-d*scale) in (0, 1]
+        frac = cfg.table_frac_bits
+        d = np.arange(n)
+        vals = np.exp(-d * cfg.score_scale) * (1 << frac)
+    table = np.clip(np.round(vals), 0, out_max).astype(np.int32)
+    return table, frac
+
+
+def build_exp_table(cfg: LUTSoftmaxConfig):
+    """(table, frac_bits): int32 codes of the 16-bit exp entries."""
+    table, frac = _table_np(cfg)
+    return jnp.asarray(table), frac
+
+
+def lut_exp(scores_q: jax.Array, cfg: LUTSoftmaxConfig, row_max: Optional[jax.Array] = None):
+    """Exponent lookup. `scores_q` are int8/int32 integer score codes."""
+    table, frac = build_exp_table(cfg)
+    s = scores_q.astype(jnp.int32)
+    if cfg.mode == "paper":
+        idx = s + (cfg.table_size // 2)
+    else:
+        if row_max is None:
+            row_max = jnp.max(s, axis=-1, keepdims=True)
+        idx = jnp.clip(row_max - s, 0, cfg.table_size - 1)
+    return jnp.take(table, idx, axis=0), frac
+
+
+def lut_softmax_codes(
+    scores_q: jax.Array,
+    cfg: LUTSoftmaxConfig,
+    mask: Optional[jax.Array] = None,
+    axis: int = -1,
+):
+    """Integer probability codes in Q0.<out_frac_bits> (uint range)."""
+    assert axis == -1, "row axis must be last"
+    if mask is not None and cfg.mode == "shifted":
+        qmin = -(1 << (cfg.input_bits - 1))
+        s = jnp.where(mask, scores_q.astype(jnp.int32), qmin)
+    else:
+        s = scores_q.astype(jnp.int32)
+    e, _ = lut_exp(s, cfg)
+    if mask is not None:
+        e = jnp.where(mask, e, 0)
+    # phase 1: sum of exponents (wide digital accumulator, modeled fp32)
+    denom = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True)
+    denom = jnp.maximum(denom, 1.0)
+    # phase 2: fixed-point divide -> Q0.<out_frac_bits>
+    out_max = (1 << cfg.out_frac_bits) - 1
+    codes = jnp.clip(
+        jnp.floor(e.astype(jnp.float32) * float(1 << cfg.out_frac_bits) / denom),
+        0,
+        out_max,
+    )
+    return codes.astype(jnp.int32)
+
+
+def lut_softmax(
+    scores_q: jax.Array,
+    cfg: LUTSoftmaxConfig,
+    mask: Optional[jax.Array] = None,
+    out_dtype=jnp.float32,
+):
+    """Float probabilities from the integer pipeline."""
+    codes = lut_softmax_codes(scores_q, cfg, mask=mask)
+    return (codes.astype(jnp.float32) / float(1 << cfg.out_frac_bits)).astype(out_dtype)
+
+
+def probs_to_uint8(codes: jax.Array, cfg: LUTSoftmaxConfig) -> jax.Array:
+    """Requantize Q0.16 probability codes to uint8 inputs for the PIM AV stage."""
+    shift = cfg.out_frac_bits - 8
+    return (codes >> shift).astype(jnp.int32)

@@ -1,0 +1,69 @@
+"""Quantization primitives for the PIM behavioral model.
+
+All functions are pure jnp and jit-safe.  Integer paths are exact (bit-true
+against the Pallas kernels); float scales are fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def symmetric_max_scale(x: jax.Array, bits: int, axis=None, eps: float = 1e-8):
+    """Per-axis symmetric quantization scale so that max|x| -> qmax."""
+    qmax = (1 << (bits - 1)) - 1
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(amax, eps) / qmax
+
+
+def quantize(x: jax.Array, scale: jax.Array, bits: int, dtype=jnp.int8):
+    """Symmetric round-to-nearest-even quantization with saturation."""
+    qmax = (1 << (bits - 1)) - 1
+    qmin = -qmax - 1
+    q = jnp.clip(jnp.round(x / scale), qmin, qmax)
+    return q.astype(dtype)
+
+
+def dequantize(q: jax.Array, scale: jax.Array):
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_symmetric(x: jax.Array, bits: int, axis=None):
+    """Convenience: (q, scale) pair with per-`axis` scales."""
+    scale = symmetric_max_scale(x, bits, axis=axis)
+    return quantize(x, scale, bits), scale
+
+
+def adc_transfer(psum: jax.Array, adc_bits: int, adc_range: float) -> jax.Array:
+    """The paper's ADC: saturating uniform quantization of an analog partial sum.
+
+    `psum` is the int32 (exact) partial sum of one word-line group; the ADC
+    digitizes it to ``adc_bits`` levels over ``[-adc_range, +adc_range)``.
+    Returns the *dequantized* integer-valued reconstruction (still int32-exact
+    representable as float32 values on the ADC grid).
+    """
+    half = 1 << (adc_bits - 1)
+    step = adc_range / half
+    code = jnp.clip(jnp.round(psum.astype(jnp.float32) / step), -half, half - 1)
+    return code * step
+
+
+def fixed_point(x: jax.Array, frac_bits: int, total_bits: int, signed: bool = False):
+    """Round-to-nearest fixed-point quantization, returns integer codes."""
+    scale = float(1 << frac_bits)
+    if signed:
+        hi = (1 << (total_bits - 1)) - 1
+        lo = -(1 << (total_bits - 1))
+    else:
+        hi = (1 << total_bits) - 1
+        lo = 0
+    return jnp.clip(jnp.round(x * scale), lo, hi).astype(jnp.int32)
+
+
+def from_fixed_point(code: jax.Array, frac_bits: int):
+    return code.astype(jnp.float32) / float(1 << frac_bits)
+
+
+def ste(exact: jax.Array, quantized: jax.Array) -> jax.Array:
+    """Straight-through estimator: forward=quantized, backward=exact."""
+    return exact + jax.lax.stop_gradient(quantized - exact)

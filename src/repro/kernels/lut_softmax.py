@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: fused LUT softmax (paper §3.4, shifted mode).
+
+One row-block stays resident in VMEM; the exp lookup is realized as a
+one-hot x table matmul over column chunks (the MXU-native form of a 256-entry
+LUT gather — TPUs have no fast VMEM gather, so the LUT is broadcast through
+the systolic array).  Normalization is the paper's two-phase scheme: phase 1
+sums the exponent codes (wide accumulator, modeled f32), phase 2 divides into
+Q0.16 probability codes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.configs.base import LUTSoftmaxConfig
+from repro.core.lut_softmax import build_exp_table
+
+_NEG = -(1 << 24)  # mask fill for score codes (far below any int8 code)
+
+
+def _lut_gather_chunk(d_chunk: jax.Array, table: jax.Array) -> jax.Array:
+    """(r, c) int32 indices in [0,255] -> table values via one-hot matmul."""
+    onehot = (d_chunk[..., None] == jnp.arange(256, dtype=jnp.int32)).astype(
+        jnp.float32
+    )
+    return jax.lax.dot_general(
+        onehot.reshape(-1, 256), table.astype(jnp.float32).reshape(256, 1),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    ).reshape(d_chunk.shape)
+
+
+def _lut_softmax_kernel(
+    s_ref, mask_ref, table_ref, out_ref,
+    *, chunk: int, out_frac_bits: int, table_size: int,
+):
+    s = s_ref[...].astype(jnp.int32)          # (br, S) score codes
+    mask = mask_ref[...]                      # (br, S) bool
+    table = table_ref[...]                    # (256,) int32
+    s_m = jnp.where(mask, s, _NEG)
+    row_max = jnp.max(s_m, axis=-1, keepdims=True)
+
+    S = s.shape[-1]
+    n_chunks = S // chunk
+
+    br = s.shape[0]
+
+    def body(ci, carry):
+        e_acc, denom = carry
+        s_c = jax.lax.dynamic_slice(s_m, (0, ci * chunk), (br, chunk))
+        m_c = jax.lax.dynamic_slice(mask, (0, ci * chunk), (br, chunk))
+        d = jnp.clip(row_max - s_c, 0, table_size - 1)
+        e = jnp.where(m_c, _lut_gather_chunk(d, table), 0.0)
+        e_acc = jax.lax.dynamic_update_slice(e_acc, e, (0, ci * chunk))
+        return e_acc, denom + jnp.sum(e, axis=-1, keepdims=True)
+
+    e_acc = jnp.zeros(s.shape, jnp.float32)
+    denom = jnp.zeros((s.shape[0], 1), jnp.float32)
+    e_acc, denom = jax.lax.fori_loop(0, n_chunks, body, (e_acc, denom))
+    denom = jnp.maximum(denom, 1.0)
+    out_max = float((1 << out_frac_bits) - 1)
+    codes = jnp.clip(
+        jnp.floor(e_acc * float(1 << out_frac_bits) / denom), 0.0, out_max
+    )
+    out_ref[...] = codes.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "block_rows", "chunk", "interpret")
+)
+def lut_softmax_pallas(
+    scores_q: jax.Array,          # (R, S) int32/int8 score codes
+    mask: jax.Array,              # (R, S) bool
+    cfg: LUTSoftmaxConfig = LUTSoftmaxConfig(),
+    block_rows: int = 8,
+    chunk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Q0.16 probability codes, shifted mode. Rows padded to block_rows."""
+    assert cfg.mode == "shifted", "kernel implements the shifted-table mode"
+    R, S = scores_q.shape
+    pad_r, pad_s = (-R) % block_rows, (-S) % chunk
+    s = scores_q.astype(jnp.int32)
+    if pad_r or pad_s:
+        s = jnp.pad(s, ((0, pad_r), (0, pad_s)))
+        mask = jnp.pad(mask, ((0, pad_r), (0, pad_s)))
+    Rp, Sp = s.shape
+    table, _ = build_exp_table(cfg)
+
+    kernel = functools.partial(
+        _lut_softmax_kernel,
+        chunk=chunk,
+        out_frac_bits=cfg.out_frac_bits,
+        table_size=cfg.table_size,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(Rp // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, Sp), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, Sp), lambda i: (i, 0)),
+            pl.BlockSpec((256,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, Sp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Rp, Sp), jnp.int32),
+        interpret=interpret,
+    )(s, mask, table)
+    return out[:R, :S]

@@ -1,0 +1,84 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On a real TPU these dispatch compiled Pallas; everywhere else (this CPU
+container) they run in interpret mode, which executes the kernel bodies in
+Python and validates them against the same BlockSpec tiling the TPU would use.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LUTSoftmaxConfig, PIMConfig
+from repro.core import quant
+from repro.core.attention import KVCache
+from repro.kernels import pim_attention as _attn_k
+from repro.kernels import pim_matmul as _mm_k
+from repro.kernels import lut_softmax as _sm_k
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pim_matmul(
+    x: jax.Array,
+    w_q: jax.Array,
+    w_scale: jax.Array,
+    cfg: PIMConfig = PIMConfig(),
+    out_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """Kernel-backed PIM linear forward: quantize x, macro-tiled int matmul."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    x_scale = quant.symmetric_max_scale(x2, cfg.input_bits, axis=-1)
+    x_q = quant.quantize(x2, x_scale, cfg.input_bits)
+    y = _mm_k.pim_matmul_int_pallas(x_q, w_q, cfg, interpret=_interpret())
+    y = y * x_scale * w_scale
+    return y.reshape(lead + (w_q.shape[-1],)).astype(out_dtype)
+
+
+def lut_softmax(
+    scores_q: jax.Array,
+    mask: jax.Array,
+    cfg: LUTSoftmaxConfig = LUTSoftmaxConfig(),
+) -> jax.Array:
+    """Kernel-backed LUT softmax -> Q0.16 probability codes. Rows = leading dims."""
+    lead = scores_q.shape[:-1]
+    s2 = scores_q.reshape(-1, scores_q.shape[-1])
+    m2 = jnp.broadcast_to(mask, scores_q.shape).reshape(s2.shape)
+    codes = _sm_k.lut_softmax_pallas(s2, m2, cfg, interpret=_interpret())
+    return codes.reshape(lead + (scores_q.shape[-1],))
+
+
+def pim_flash_attention(
+    q: jax.Array,              # (B, Sq, H, Dh) float
+    cache: KVCache,
+    q_offset,
+    pim_cfg: PIMConfig = PIMConfig(),
+    lut_cfg: LUTSoftmaxConfig = LUTSoftmaxConfig(),
+    causal: bool = True,
+    window: int = 0,
+    out_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """Fused flash-style PIM attention over the int8 KV cache."""
+    B, Sq, H, Dh = q.shape
+    _, Sk, Hkv, _ = cache.k_q.shape
+    q_scale = quant.symmetric_max_scale(q, pim_cfg.input_bits, axis=-1)
+    q_q = quant.quantize(q, q_scale, pim_cfg.input_bits)
+    # (B, S, H, D) -> (B*H, S, D)
+    q_q = q_q.transpose(0, 2, 1, 3).reshape(B * H, Sq, Dh)
+    qs = q_scale[..., 0].transpose(0, 2, 1).reshape(B * H, Sq)
+    k_q = cache.k_q.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, Dh)
+    v_q = cache.v_q.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, Dh)
+    ks = cache.k_scale.transpose(0, 2, 1).reshape(B * Hkv, Sk)
+    vs = cache.v_scale.transpose(0, 2, 1).reshape(B * Hkv, Sk)
+    o = _attn_k.pim_attention_pallas(
+        q_q, qs, k_q, ks, v_q, vs,
+        jnp.asarray(q_offset, jnp.int32), cache.length,
+        pim_cfg, lut_cfg, causal=causal, window=window,
+        interpret=_interpret(),
+    )
+    return o.reshape(B, H, Sq, Dh).transpose(0, 2, 1, 3).astype(out_dtype)

@@ -1,0 +1,216 @@
+"""Pallas TPU kernel: fused flash-style PIM attention (beyond-paper).
+
+The paper's dataflow materializes full score rows (2048x8-bit), ships them
+through the DMA to the Softmax module, then back through a V-stationary PIM
+for the AV product.  This kernel fuses Score -> LUT-Softmax -> AV into one
+VMEM-resident streaming pass over KV blocks with *online* renormalization —
+removing the O(S^2) score materialization while keeping the paper's numerics:
+
+  * int8 Q, int8 PIM-resident KV cache (per-token scales),
+  * scores requantized to 8-bit codes (the paper's 8-bit score port),
+  * exp via the 256-entry LUT — realized as a one-hot x table matmul (a LUT
+    *is* a crossbar read; on TPU the MXU plays the crossbar),
+  * online rescale factors ALSO come from the same LUT (exp(-d*s) = table[d]),
+    so the running renormalization stays within the paper's arithmetic.
+
+Grid: (batch*heads, Sq/bq, Sk/bk), Sk innermost; running (max, denom, acc)
+live in VMEM scratch.  GQA is handled by index-mapping KV blocks to
+head-group bh // q_per_kv (no materialized KV expansion).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.configs.base import LUTSoftmaxConfig, PIMConfig
+from repro.core.lut_softmax import build_exp_table
+
+_NEG = float(-(1 << 24))
+
+
+def _lut_gather(d: jax.Array, table_f: jax.Array) -> jax.Array:
+    """(r, c) int32 in [0,255] -> table values, as one-hot MXU matmul."""
+    onehot = (d[..., None] == jnp.arange(256, dtype=jnp.int32)).astype(jnp.float32)
+    return jax.lax.dot_general(
+        onehot.reshape(-1, 256), table_f.reshape(256, 1),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    ).reshape(d.shape)
+
+
+def _attn_kernel(
+    scalars_ref,                       # SMEM (2,): [q_offset, kv_len]
+    q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, table_ref,
+    out_ref,
+    m_ref, denom_ref, acc_ref,
+    *, block_q: int, block_k: int, n_k_blocks: int, causal: bool,
+    window: int, sm_scale: float, score_scale: float, input_bits: int,
+    table_frac_bits: int, gather_chunk: int,
+):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        denom_ref[...] = jnp.zeros_like(denom_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_offset = scalars_ref[0]
+    kv_len = scalars_ref[1]
+
+    q = q_ref[...][0]                  # (bq, Dh) int8
+    k = k_ref[...][0]                  # (bk, Dh) int8
+    s_int = jax.lax.dot_general(       # (bq, bk) int32 — the PIM Score engine
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    qs = qs_ref[...][0]                # (bq,) f32
+    ks = ks_ref[...][0]                # (bk,) f32
+    s_real = s_int.astype(jnp.float32) * qs[:, None] * ks[None, :] * sm_scale
+
+    # requantize to the 8-bit score port
+    qmax = float((1 << (input_bits - 1)) - 1)
+    codes = jnp.clip(jnp.round(s_real / score_scale), -qmax - 1.0, qmax)
+
+    # position mask
+    qi = pl.program_id(1)
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0
+    )
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1
+    )
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    codes = jnp.where(mask, codes, _NEG)
+
+    # online LUT softmax update
+    m_old = m_ref[...]                 # (bq, 1)
+    m_new = jnp.maximum(m_old, jnp.max(codes, axis=-1, keepdims=True))
+    table_f = table_ref[...].astype(jnp.float32)
+    # rescale factor for the running sums comes from the SAME LUT
+    d_resc = jnp.clip(m_new - m_old, 0, 255).astype(jnp.int32)
+    resc = _lut_gather(d_resc, table_f) / float(1 << table_frac_bits)
+    resc = jnp.where(m_old <= _NEG / 2, jnp.zeros_like(resc), resc)
+
+    e = jnp.zeros((block_q, block_k), jnp.float32)
+    for ci in range(block_k // gather_chunk):
+        lo = ci * gather_chunk
+        c_c = jax.lax.dynamic_slice(codes, (0, lo), (block_q, gather_chunk))
+        m_c = jax.lax.dynamic_slice(mask, (0, lo), (block_q, gather_chunk))
+        d = jnp.clip(m_new - c_c, 0, 255).astype(jnp.int32)
+        e_c = jnp.where(m_c, _lut_gather(d, table_f), 0.0)
+        e = jax.lax.dynamic_update_slice(e, e_c, (0, lo))
+
+    denom_ref[...] = denom_ref[...] * resc + jnp.sum(e, axis=-1, keepdims=True)
+    v = v_ref[...][0]                  # (bk, Dh) int8
+    vs = vs_ref[...][0]                # (bk,) f32
+    v_deq = v.astype(jnp.float32) * vs[:, None]
+    pv = jax.lax.dot_general(
+        e, v_deq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = acc_ref[...] * resc + pv
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _flush():
+        out_ref[...] = (acc_ref[...] / jnp.maximum(denom_ref[...], 1.0))[None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "pim_cfg", "lut_cfg", "causal", "window",
+        "block_q", "block_k", "gather_chunk", "interpret",
+    ),
+)
+def pim_attention_pallas(
+    q_q: jax.Array,        # (BH, Sq, Dh) int8
+    q_scale: jax.Array,    # (BH, Sq) f32
+    k_q: jax.Array,        # (BHkv, Sk, Dh) int8
+    k_scale: jax.Array,    # (BHkv, Sk) f32
+    v_q: jax.Array,        # (BHkv, Sk, Dh) int8
+    v_scale: jax.Array,    # (BHkv, Sk) f32
+    q_offset: jax.Array,   # () int32 — absolute position of query 0
+    kv_len: jax.Array,     # () int32 — valid cache length
+    pim_cfg: PIMConfig = PIMConfig(),
+    lut_cfg: LUTSoftmaxConfig = LUTSoftmaxConfig(),
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 32,
+    block_k: int = 256,
+    gather_chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused PIM attention. Returns (BH, Sq, Dh) f32 (scales already applied)."""
+    BH, Sq, Dh = q_q.shape
+    BHkv, Sk, _ = k_q.shape
+    assert BH % BHkv == 0
+    q_per_kv = BH // BHkv
+    block_q = min(block_q, max(8, ((Sq + 7) // 8) * 8))
+    pad_q, pad_k = (-Sq) % block_q, (-Sk) % block_k
+    if pad_q:
+        q_q = jnp.pad(q_q, ((0, 0), (0, pad_q), (0, 0)))
+        q_scale = jnp.pad(q_scale, ((0, 0), (0, pad_q)))
+    if pad_k:
+        k_q = jnp.pad(k_q, ((0, 0), (0, pad_k), (0, 0)))
+        v_q = jnp.pad(v_q, ((0, 0), (0, pad_k), (0, 0)))
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, pad_k)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, pad_k)))
+    Sqp, Skp = Sq + pad_q, Sk + pad_k
+    grid = (BH, Sqp // block_q, Skp // block_k)
+    table, frac = build_exp_table(lut_cfg)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        block_q=block_q, block_k=block_k, n_k_blocks=grid[2],
+        causal=causal, window=window,
+        sm_scale=1.0 / (Dh ** 0.5), score_scale=lut_cfg.score_scale,
+        input_bits=lut_cfg.input_bits, table_frac_bits=frac,
+        gather_chunk=min(gather_chunk, block_k),
+    )
+    scalars = jnp.stack(
+        [jnp.asarray(q_offset, jnp.int32), jnp.asarray(kv_len, jnp.int32)]
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_q, Dh), lambda b, i, k, s: (b, i, 0)),
+                pl.BlockSpec((1, block_q), lambda b, i, k, s: (b, i)),
+                pl.BlockSpec(
+                    (1, block_k, Dh),
+                    lambda b, i, k, s, qpk=q_per_kv: (b // qpk, k, 0),
+                ),
+                pl.BlockSpec(
+                    (1, block_k), lambda b, i, k, s, qpk=q_per_kv: (b // qpk, k)
+                ),
+                pl.BlockSpec(
+                    (1, block_k, Dh),
+                    lambda b, i, k, s, qpk=q_per_kv: (b // qpk, k, 0),
+                ),
+                pl.BlockSpec(
+                    (1, block_k), lambda b, i, k, s, qpk=q_per_kv: (b // qpk, k)
+                ),
+                pl.BlockSpec((256,), lambda b, i, k, s: (0,)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, block_q, Dh), lambda b, i, k, s: (b, i, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, Dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((BH, Sqp, Dh), jnp.float32),
+        interpret=interpret,
+    )(scalars, q_q, q_scale, k_q, k_scale, v_q, v_scale, table)
+    return out[:, :Sq]

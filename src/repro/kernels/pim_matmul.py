@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: macro-tiled PIM matmul (int8 x int8 -> int32/ADC grid).
+
+Hardware mapping (DESIGN.md §2): one 128x128 PIM macro == one MXU tile.  The
+kernel keeps a (block_m, block_n) accumulator tile resident in VMEM while
+streaming x/w macro tiles, i.e. the TPU-native version of the paper's
+weight-stationary dataflow.  In "quantized" ADC mode, each 16-row word-line
+group's partial sum passes through the saturating 6-bit ADC transfer before
+digital accumulation — exactly the behavioral model in repro.core.pim.
+
+Block shapes default to the macro/MXU geometry (128x128) and must be
+hardware-aligned (multiples of (8,128) fp32 / (32,128) int8 VREG tiles).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.configs.base import PIMConfig
+from repro.core.pim import adc_full_range
+
+
+def _adc(psum_f32: jax.Array, adc_bits: int, adc_range: float) -> jax.Array:
+    half = float(1 << (adc_bits - 1))
+    step = adc_range / half
+    return jnp.clip(jnp.round(psum_f32 / step), -half, half - 1) * step
+
+
+def _pim_matmul_kernel(
+    x_ref, w_ref, out_ref, acc_ref,
+    *, n_k_blocks: int, adc_mode: str, adc_bits: int, adc_range: float,
+    wordline_group: int, block_k: int,
+):
+    """Grid: (M/bm, N/bn, K/bk) — K innermost, accumulator in VMEM scratch."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                       # (bm, bk) int8
+    w = w_ref[...]                       # (bk, bn) int8
+    if adc_mode == "ideal":
+        acc_ref[...] += jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+        ).astype(jnp.float32)
+    else:
+        # one analog step per word-line group, each digitized by the ADC
+        g = wordline_group
+        for gi in range(block_k // g):
+            psum = jax.lax.dot_general(
+                x[:, gi * g:(gi + 1) * g], w[gi * g:(gi + 1) * g, :],
+                (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32,
+            )
+            acc_ref[...] += _adc(psum.astype(jnp.float32), adc_bits, adc_range)
+
+    @pl.when(k_idx == n_k_blocks - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "block_m", "block_n", "block_k", "interpret"),
+)
+def pim_matmul_int_pallas(
+    x_q: jax.Array,               # (M, K) int8
+    w_q: jax.Array,               # (K, N) int8
+    cfg: PIMConfig = PIMConfig(),
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (M, N) float32 values on the accumulation grid (see core.pim)."""
+    M, K = x_q.shape
+    K2, N = w_q.shape
+    assert K == K2, (x_q.shape, w_q.shape)
+    # pad to block multiples (zero rows/cols contribute nothing)
+    pad_m, pad_k, pad_n = (-M) % block_m, (-K) % block_k, (-N) % block_n
+    if pad_m or pad_k:
+        x_q = jnp.pad(x_q, ((0, pad_m), (0, pad_k)))
+    if pad_k or pad_n:
+        w_q = jnp.pad(w_q, ((0, pad_k), (0, pad_n)))
+    Mp, Kp = x_q.shape
+    Np = w_q.shape[1]
+    grid = (Mp // block_m, Np // block_n, Kp // block_k)
+
+    kernel = functools.partial(
+        _pim_matmul_kernel,
+        n_k_blocks=grid[2],
+        adc_mode=cfg.adc_mode,
+        adc_bits=cfg.adc_bits,
+        adc_range=adc_full_range(cfg),
+        wordline_group=cfg.wordline_group,
+        block_k=block_k,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x_q, w_q)
+    return out[:M, :N]

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret=True
+on CPU, sweeping shapes/dtypes).  The matmul/softmax oracles delegate to the
+behavioral model in repro.core (the kernels are bit-true to it); the fused
+attention oracle implements the same LUT arithmetic in its mathematically
+clean two-pass form (the online kernel is allclose, not bit-equal, to it —
+rescale factors come from the same LUT but round differently).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LUTSoftmaxConfig, PIMConfig
+from repro.core.lut_softmax import build_exp_table, lut_softmax_codes
+from repro.core.pim import pim_matmul_int
+
+_NEG = -(1 << 24)
+
+
+def pim_matmul_int_ref(x_q: jax.Array, w_q: jax.Array, cfg: PIMConfig) -> jax.Array:
+    """(M, K) int8 x (K, N) int8 -> (M, N) f32 on the accumulation grid."""
+    return pim_matmul_int(x_q, w_q, cfg)
+
+
+def lut_softmax_ref(
+    scores_q: jax.Array, mask: jax.Array, cfg: LUTSoftmaxConfig
+) -> jax.Array:
+    """(R, S) score codes -> (R, S) Q0.16 probability codes."""
+    return lut_softmax_codes(scores_q, cfg, mask=mask)
+
+
+def pim_attention_ref(
+    q_q: jax.Array,        # (BH, Sq, Dh) int8
+    q_scale: jax.Array,    # (BH, Sq) f32
+    k_q: jax.Array,        # (BHkv, Sk, Dh) int8
+    k_scale: jax.Array,    # (BHkv, Sk) f32
+    v_q: jax.Array,        # (BHkv, Sk, Dh) int8
+    v_scale: jax.Array,    # (BHkv, Sk) f32
+    q_offset,
+    kv_len,
+    lut_cfg: LUTSoftmaxConfig = LUTSoftmaxConfig(),
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    """Two-pass oracle of the fused kernel: identical LUT arithmetic,
+    global row max instead of the online running max."""
+    BH, Sq, Dh = q_q.shape
+    BHkv, Sk, _ = k_q.shape
+    qpk = BH // BHkv
+    k_q = jnp.repeat(k_q, qpk, axis=0)
+    v_q = jnp.repeat(v_q, qpk, axis=0)
+    k_scale = jnp.repeat(k_scale, qpk, axis=0)
+    v_scale = jnp.repeat(v_scale, qpk, axis=0)
+
+    s_int = jnp.einsum(
+        "bqd,bkd->bqk", q_q.astype(jnp.int32), k_q.astype(jnp.int32)
+    ).astype(jnp.float32)
+    sm = 1.0 / (Dh ** 0.5)
+    s_real = s_int * q_scale[:, :, None] * k_scale[:, None, :] * sm
+    qmax = float((1 << (lut_cfg.input_bits - 1)) - 1)
+    codes = jnp.clip(jnp.round(s_real / lut_cfg.score_scale), -qmax - 1.0, qmax)
+
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = k_pos < kv_len
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window:
+        mask = mask & (k_pos > q_pos - window)
+    codes = jnp.where(mask[None], codes, float(_NEG))
+
+    table, frac = build_exp_table(lut_cfg)
+    m = jnp.max(codes, axis=-1, keepdims=True)
+    d = jnp.clip(m - codes, 0, 255).astype(jnp.int32)
+    e = jnp.take(table, d).astype(jnp.float32)
+    e = jnp.where(mask[None], e, 0.0)
+    denom = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1.0)
+    v_deq = v_q.astype(jnp.float32) * v_scale[..., None]
+    return jnp.einsum("bqk,bkd->bqd", e / denom, v_deq)

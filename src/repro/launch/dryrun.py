@@ -1,0 +1,259 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves:
+  * the sharding config is coherent (GSPMD partitions the whole step),
+  * it fits (memory_analysis per device),
+and records the roofline inputs (cost_analysis + trip-weighted HLO parse)
+into artifacts/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out artifacts/dryrun
+  (--mini runs reduced configs on an 8-device mesh for CI.)
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config, shape_applicable
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.launch import specs as S
+from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.models.model_zoo import build_model, param_count_exact
+from repro.roofline import analysis as R
+from repro.runtime import sharding as sh
+from repro.runtime import train_lib
+
+
+def _shardings(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_shardings(batch, mesh):
+    """Batch over DP axes, dropped when the dim doesn't divide (B=1 decode)."""
+    ba = sh.batch_axes(mesh)
+
+    def leaf(a):
+        spec = sh._fit_spec(P(ba, *([None] * (len(a.shape) - 1))), a.shape,
+                            mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(leaf, batch)
+
+
+def lower_cell(arch: str, shape: ShapeConfig, mesh, *, smoke: bool = False,
+               cfg_override: Optional[ModelConfig] = None):
+    """Returns (lowered, compiled, info dict)."""
+    cfg = cfg_override or get_config(arch, smoke=smoke)
+    model = build_model(cfg)
+    dp = 1
+    for a in sh.batch_axes(mesh):
+        dp *= mesh.shape[a]
+
+    with mesh:
+        if shape.kind == "train":
+            m = S.TRAIN_MICROBATCHES.get(arch, 1)
+            local_rows = shape.global_batch // max(dp, 1)
+            while m > 1 and local_rows % m:
+                m //= 2
+            tcfg = TrainConfig(microbatches=m)
+            step = train_lib.make_train_step(model, tcfg, mesh)
+            params, opt, batch = S.train_cell_specs(model, cfg, shape, tcfg)
+            lowered = step.lower(params, opt, batch)
+        elif shape.kind == "prefill":
+            params, batch, cache, _ = S.serve_cell_specs(model, cfg, shape)
+            pshard = _shardings(sh.param_specs(params, cfg, mesh), mesh)
+            bshard = _batch_shardings(batch, mesh)
+            cshard = sh.cache_shardings(cache, mesh, shape.global_batch)
+
+            def prefill(params, batch, cache):
+                logits, cache, _ = model.forward_serve(params, batch, cache, 0)
+                return logits, cache
+
+            lowered = jax.jit(
+                prefill, in_shardings=(pshard, bshard, cshard),
+            ).lower(params, batch, cache)
+        else:  # decode
+            params, batch, cache, enc_out = S.serve_cell_specs(model, cfg, shape)
+            pshard = _shardings(sh.param_specs(params, cfg, mesh), mesh)
+            bshard = _batch_shardings(batch, mesh)
+            cshard = sh.cache_shardings(cache, mesh, shape.global_batch)
+            offset = jax.ShapeDtypeStruct((), jnp.int32)
+
+            if enc_out is not None:
+                eshard = NamedSharding(
+                    mesh, sh._fit_spec(P(sh.batch_axes(mesh), None, None),
+                                       enc_out.shape, mesh))
+
+                def decode(params, batch, cache, offset, enc_out):
+                    logits, cache, _ = model.forward_serve(
+                        params, batch, cache, offset, enc_out=enc_out)
+                    return logits, cache
+
+                lowered = jax.jit(
+                    decode,
+                    in_shardings=(pshard, bshard, cshard, None, eshard),
+                ).lower(params, batch, cache, offset, enc_out)
+            else:
+                def decode(params, batch, cache, offset):
+                    logits, cache, _ = model.forward_serve(
+                        params, batch, cache, offset)
+                    return logits, cache
+
+                lowered = jax.jit(
+                    decode, in_shardings=(pshard, bshard, cshard, None),
+                ).lower(params, batch, cache, offset)
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+    return lowered, compiled, {"cfg": cfg, "compile_s": compile_s}
+
+
+def analyze_cell(arch: str, shape: ShapeConfig, mesh, compiled,
+                 cfg: ModelConfig):
+    n_dev = mesh.devices.size
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    hlo = R.analyze(text)
+    model_flops = R.model_flops_per_step(cfg, shape, n_dev)
+    roof = R.roofline_terms(hlo, float(ma.argument_size_in_bytes),
+                            model_flops)
+    # decode is bandwidth-bound by construction: utilization vs the
+    # weight+KV-read floor is the honest roofline for it
+    model_bytes = R.model_bytes_per_step(cfg, shape, n_dev)
+    bw_frac = ((model_bytes / R.HBM_BW) / roof.step_time_s
+               if roof.step_time_s else 0.0)
+    return {
+        "arch": arch, "shape": shape.name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "devices": int(n_dev),
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "total_per_device_gb": round(
+                (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30, 3),
+        },
+        "cost_analysis": {
+            "flops_static": float(ca.get("flops", 0.0)),
+            "bytes_accessed_static": float(ca.get("bytes accessed", 0.0)),
+        },
+        "hlo": {
+            "flops": hlo.flops, "int_flops": hlo.int_flops,
+            "trip_weight_ratio": hlo.trip_weight_ratio,
+            "collective_bytes": hlo.collective_bytes,
+        },
+        "roofline": {
+            "compute_s": roof.compute_s, "memory_s": roof.memory_s,
+            "collective_s": roof.collective_s,
+            "dominant": roof.dominant,
+            "model_flops_per_device": roof.model_flops,
+            "useful_flops_ratio": roof.useful_ratio,
+            "roofline_fraction": roof.roofline_fraction,
+            "bandwidth_fraction": bw_frac,
+            "model_bytes_per_device": model_bytes,
+            "step_time_s": roof.step_time_s,
+        },
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_label: str, out_dir: str,
+             smoke: bool = False, skip_existing: bool = False):
+    shape = SHAPES[shape_name]
+    cell_id = f"{arch}__{shape_name}__{mesh_label}"
+    path = os.path.join(out_dir, cell_id + ".json")
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") in ("ok", "N/A"):
+            print(f"[dryrun] {cell_id}: cached {rec['status']}")
+            return rec
+    if not shape_applicable(arch, shape_name):
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_label,
+               "status": "N/A",
+               "reason": "full-attention arch: long_500k requires "
+                         "sub-quadratic attention (DESIGN.md §5)"}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[dryrun] {cell_id}: N/A (full attention)")
+        return rec
+    t0 = time.time()
+    try:
+        lowered, compiled, info = lower_cell(arch, shape, mesh, smoke=smoke)
+        rec = analyze_cell(arch, shape, mesh, compiled, info["cfg"])
+        rec["status"] = "ok"
+        rec["compile_s"] = round(info["compile_s"], 1)
+        print(f"[dryrun] {cell_id}: OK compile={rec['compile_s']}s "
+              f"mem/dev={rec['memory']['total_per_device_gb']}GB "
+              f"dominant={rec['roofline']['dominant']} "
+              f"frac={rec['roofline']['roofline_fraction']:.3f}")
+        del lowered, compiled
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_label,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        print(f"[dryrun] {cell_id}: ERROR {type(e).__name__}: {e}")
+    rec["wall_s"] = round(time.time() - t0, 1)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "multipod", "both", "mini"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--mini", action="store_true",
+                    help="reduced configs on an 8-device mesh (CI)")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list(ARCH_NAMES) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+
+    meshes = []
+    if args.mini or args.mesh == "mini":
+        meshes.append(("mini_2x2x2", make_mesh((2, 2, 2),
+                                               ("pod", "data", "model"))))
+    else:
+        if args.mesh in ("pod", "both"):
+            meshes.append(("pod_16x16", make_production_mesh()))
+        if args.mesh in ("multipod", "both"):
+            meshes.append(("multipod_2x16x16",
+                           make_production_mesh(multi_pod=True)))
+
+    results = []
+    for label, mesh in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                results.append(run_cell(arch, shape_name, mesh, label,
+                                        args.out, smoke=args.mini,
+                                        skip_existing=args.skip_existing))
+    ok = sum(1 for r in results if r.get("status") == "ok")
+    na = sum(1 for r in results if r.get("status") == "N/A")
+    err = sum(1 for r in results if r.get("status") == "error")
+    print(f"[dryrun] done: {ok} ok, {na} N/A, {err} errors "
+          f"of {len(results)} cells")
+    return 0 if err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

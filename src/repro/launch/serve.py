@@ -1,0 +1,67 @@
+"""Serving entrypoint: batched prefill + greedy decode over the PIM KV cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+      --batch 4 --prompt-len 32 --new-tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import pipeline as data
+from repro.launch.mesh import make_mesh
+from repro.models.model_zoo import build_model
+from repro.runtime import serve_lib, sharding as sh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--mesh", default="")
+    ap.add_argument("--attn-impl", default="",
+                    choices=["", "behavioral", "kernel"])
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.attn_impl:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, attn_impl=args.attn_impl)
+    model = build_model(cfg)
+    mesh = None
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        mesh = make_mesh(shape, ("data", "model")[: len(shape)])
+
+    params = model.init(jax.random.PRNGKey(0))
+    if mesh is not None:
+        params = jax.device_put(params, sh.param_shardings(params, cfg, mesh))
+
+    shape = type("S", (), {"global_batch": args.batch,
+                           "seq_len": args.prompt_len})()
+    batch = {k: jnp.asarray(v)
+             for k, v in data.make_batch(cfg, shape, 0).items()}
+    max_len = args.prompt_len + args.new_tokens
+
+    t0 = time.time()
+    out = serve_lib.greedy_generate(model, params, batch, args.new_tokens,
+                                    max_len, mesh)
+    jax.block_until_ready(out)
+    dt = time.time() - t0
+    toks = args.batch * args.new_tokens
+    print(f"[serve] arch={cfg.name} attn={cfg.attn_impl} "
+          f"generated {out.shape} in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s incl. prefill+compile)")
+    print("[serve] first sequences:", out[:2, :12].tolist())
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+Weak-type-correct, shardable stand-ins: no device allocation ever happens —
+params/caches come from jax.eval_shape over the real init functions, batches
+are constructed here.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+
+
+# per-arch microbatch counts for train_4k (activation-memory control;
+# B_local = 256/16 = 16 rows per data shard, so m must divide 16)
+TRAIN_MICROBATCHES = {
+    # §Perf iteration 1 on the collective-bound cells: 16 -> 4 microbatches
+    # (seq-sharded boundary activations made the memory room; FSDP weight
+    # all-gather volume scales with the microbatch count)
+    "mistral-large-123b": 4,
+    "qwen2-72b": 4,
+    "dbrx-132b": 4,
+    "gemma-7b": 4,
+    "deepseek-moe-16b": 4,
+    "phi-3-vision-4.2b": 4,
+    "recurrentgemma-9b": 4,
+    "internlm2-1.8b": 2,
+    "xlstm-1.3b": 4,   # mLSTM matrix-memory backward state is the footprint
+                       # driver: smaller microbatches trade collective volume
+    "whisper-tiny": 1,
+}
+
+
+def batch_specs(cfg: ModelConfig, B: int, S: int) -> Dict[str, Any]:
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+    if cfg.num_image_patches:
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_image_patches, cfg.d_model), jnp.float32)
+    return specs
+
+
+def train_cell_specs(model, cfg: ModelConfig, shape: ShapeConfig,
+                     tcfg: TrainConfig):
+    """(params, opt_state, batch) ShapeDtypeStructs for a train cell."""
+    from repro.runtime import train_lib
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt = jax.eval_shape(lambda p: train_lib.init_opt_state(p, tcfg), params)
+    batch = batch_specs(cfg, shape.global_batch, shape.seq_len)
+    return params, opt, batch
+
+
+def serve_cell_specs(model, cfg: ModelConfig, shape: ShapeConfig):
+    """(params, batch, cache[, offset, enc_out]) specs for serve cells.
+
+    Serve params are DEPLOYED: int8 macro contents + per-channel scales —
+    the paper's load-once dataflow (weights never exist in fp on device)."""
+    from repro.models.model_zoo import deploy_tree
+    params = jax.eval_shape(
+        lambda k: deploy_tree(model.init(k), cfg), jax.random.PRNGKey(0))
+    B = shape.global_batch
+    max_len = shape.seq_len
+    cache = jax.eval_shape(lambda: model.init_cache(B, max_len))
+    if shape.kind == "prefill":
+        batch = batch_specs(cfg, B, shape.seq_len)
+        return params, batch, cache, None
+    # decode: one new token against a seq_len-deep cache
+    batch = batch_specs(cfg, B, 1)
+    batch.pop("image_embeds", None)   # image fused at prefill
+    enc_out = (jax.ShapeDtypeStruct((B, cfg.encoder_seq_len, cfg.d_model),
+                                    jnp.dtype(cfg.compute_dtype))
+               if cfg.is_encoder_decoder else None)
+    batch.pop("frames", None)
+    return params, batch, cache, enc_out

@@ -1,0 +1,116 @@
+"""Training entrypoint: restartable, checkpointed, watchdog-monitored.
+
+Examples:
+  # tiny CPU run (single device)
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b --smoke \
+      --steps 50 --batch 8 --seq 64
+
+  # multi-device (set XLA_FLAGS=--xla_force_host_platform_device_count=8)
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b --smoke \
+      --steps 20 --batch 8 --seq 64 --mesh 4,2
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import TrainConfig
+from repro.data import pipeline as data
+from repro.launch.mesh import make_mesh
+from repro.models.model_zoo import build_model
+from repro.runtime import fault, sharding as sh, train_lib
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--mesh", default="", help="e.g. 4,2 -> (data,model)")
+    ap.add_argument("--ckpt-dir", default="/tmp/attentionlego_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "int8_ef"])
+    ap.add_argument("--data", default="lm", choices=["lm", "copy"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    tcfg = TrainConfig(
+        learning_rate=args.lr, warmup_steps=args.warmup,
+        total_steps=args.steps, microbatches=args.microbatches,
+        grad_compression=args.compression, seed=args.seed,
+        checkpoint_every=args.ckpt_every, checkpoint_dir=args.ckpt_dir)
+
+    mesh = None
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        axes = ("data", "model")[: len(shape)] if len(shape) <= 2 else (
+            "pod", "data", "model")
+        mesh = make_mesh(shape, axes)
+        print(f"[train] mesh {dict(zip(axes, shape))} on "
+              f"{mesh.devices.size} devices")
+    step_fn = train_lib.make_train_step(model, tcfg, mesh)
+
+    def make_state():
+        params = model.init(jax.random.PRNGKey(tcfg.seed))
+        if mesh is not None:
+            params = jax.device_put(params,
+                                    sh.param_shardings(params, cfg, mesh))
+        return {"params": params,
+                "opt": train_lib.init_opt_state(params, tcfg)}
+
+    wd = fault.StepWatchdog(
+        on_straggler=lambda s, dt, med: print(
+            f"[watchdog] step {s} straggled: {dt:.2f}s vs median {med:.2f}s"))
+    t_start = time.time()
+    last_metrics = {}
+
+    def one_step(state, step):
+        batch = {
+            k: jnp.asarray(v) for k, v in data.make_batch(
+                cfg, type("S", (), {"global_batch": args.batch,
+                                    "seq_len": args.seq})(),
+                step, seed=tcfg.seed, kind=args.data).items()
+        }
+        ctx = mesh if mesh is not None else _nullcontext()
+        with ctx:
+            params, opt, metrics = step_fn(state["params"], state["opt"],
+                                           batch)
+        nonlocal_metrics = {k: float(v) for k, v in metrics.items()}
+        last_metrics.update(nonlocal_metrics)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"[train] step {step:5d} loss={nonlocal_metrics['loss']:.4f}"
+                  f" lr={nonlocal_metrics.get('lr', 0):.2e}"
+                  f" |g|={nonlocal_metrics.get('grad_norm', 0):.3f}"
+                  f" ({time.time() - t_start:.1f}s)")
+        return {"params": params, "opt": opt}, nonlocal_metrics
+
+    state, metrics = fault.run_restartable(
+        args.steps, make_state, one_step, args.ckpt_dir,
+        checkpoint_every=tcfg.checkpoint_every, watchdog=wd)
+    print(f"[train] done: final loss {metrics.get('loss'):.4f}, "
+          f"median step {wd.median:.2f}s, stragglers {wd.stragglers}")
+    return state, metrics
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Shared model layers: norms, embeddings, RoPE, MLPs (through PIM linears)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import pim
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def norm_init(d: int, kind: str):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_apply(params, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"] + params["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+def embed_init(key, vocab: int, d: int):
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed_apply(params, tokens: jax.Array, dtype) -> jax.Array:
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed_apply(params, x: jax.Array) -> jax.Array:
+    """Logits via tied or untied head table: (..., D) x (V, D)^T."""
+    return jnp.einsum("...d,vd->...v", x, params["table"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_apply(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (S,) or (B, S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (S, half)
+        ang = ang[None, :, None, :]                                    # (1,S,1,half)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs         # (B,S,half)
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    y = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return y.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq)[:, None].astype(jnp.float32)
+    div = jnp.exp(jnp.arange(0, d, 2).astype(jnp.float32) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# MLP / FFN (PIM linears)
+# ---------------------------------------------------------------------------
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    keys = jax.random.split(key, 3)
+    if cfg.activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": pim.pim_linear_init(keys[0], d, f),
+            "w_in": pim.pim_linear_init(keys[1], d, f),
+            "w_out": pim.pim_linear_init(keys[2], f, d),
+        }
+    return {
+        "w_in": pim.pim_linear_init(keys[0], d, f),
+        "w_out": pim.pim_linear_init(keys[1], f, d),
+    }
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind in ("gelu", "geglu"):
+        return jax.nn.gelu(x)
+    if kind in ("silu", "swiglu"):
+        return jax.nn.silu(x)
+    if kind == "relu_sq":
+        return jnp.square(jax.nn.relu(x))
+    raise ValueError(kind)
+
+
+def mlp_apply(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    p = cfg.pim
+    en = cfg.pim_linears
+    if "w_gate" in params:
+        g = pim.pim_linear_apply(params["w_gate"], x, p, en)
+        h = pim.pim_linear_apply(params["w_in"], x, p, en)
+        h = _act(g, cfg.activation) * h
+    else:
+        h = _act(pim.pim_linear_apply(params["w_in"], x, p, en), cfg.activation)
+    return pim.pim_linear_apply(params["w_out"], h, p, en)

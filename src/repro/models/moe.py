@@ -1,0 +1,177 @@
+"""Mixture-of-Experts FFN (DeepSeekMoE / DBRX style: shared + routed top-k).
+
+Routing is *local capacity routing with token dropping*: each shard routes its
+own tokens (top-k over all experts, per-expert capacity C = ceil(T*k*cf/E)),
+sorts assignments by expert, and builds an (E, C, D) dispatch buffer — no
+global sort, no (T, E, C) one-hot einsum.  Under a mesh, the dispatch buffer
+goes through an all_to_all over the `model` axis (expert parallelism): each
+device computes its E/ep experts over every shard's slots.  Weight-stationary
+experts are natural AttentionLego tiles (each expert's FFN lives in its own
+PIM macros and never moves — see DESIGN.md §5).
+
+Single-device path (ep_axis=None) is bit-identical math minus the collective,
+used by smoke tests and the CPU examples.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import pim
+
+
+def _expert_stack_init(key, n: int, d: int, f: int, glu: bool):
+    keys = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {
+        "w_in": jax.random.normal(keys[0], (n, d, f), jnp.float32) * s_in,
+        "w_out": jax.random.normal(keys[1], (n, f, d), jnp.float32) * s_out,
+    }
+    if glu:
+        p["w_gate"] = jax.random.normal(keys[2], (n, d, f), jnp.float32) * s_in
+    return p
+
+
+def moe_ffn_init(key, cfg: ModelConfig):
+    m = cfg.moe
+    glu = cfg.activation in ("swiglu", "geglu")
+    keys = jax.random.split(key, 3)
+    p = {
+        "router": jax.random.normal(keys[0], (cfg.d_model, m.num_experts),
+                                    jnp.float32) * 0.02,
+        "experts": _expert_stack_init(keys[1], m.num_experts, cfg.d_model,
+                                      cfg.d_ff, glu),
+    }
+    if m.num_shared:
+        p["shared"] = _expert_stack_init(keys[2], m.num_shared, cfg.d_model,
+                                         cfg.d_ff, glu)
+    return p
+
+
+def _act(x, kind):
+    return jax.nn.gelu(x) if kind in ("gelu", "geglu") else jax.nn.silu(x)
+
+
+def _expert_mm(xe: jax.Array, w: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Per-expert PIM matmul: (E, C, D) x (E, D, F) -> (E, C, F).
+
+    Each expert is an independent weight-stationary PIM engine; quantization
+    is per expert per output channel (vmapped behavioral model).
+    """
+    if not cfg.pim_linears:
+        return jnp.einsum("ecd,edf->ecf", xe, w.astype(xe.dtype))
+    return jax.vmap(
+        lambda xc, wc: pim.pim_linear_apply({"w": wc}, xc, cfg.pim)
+    )(xe, w)
+
+
+def _ffn_stack(xe: jax.Array, params, cfg: ModelConfig) -> jax.Array:
+    """(E, C, D) through the stacked expert FFNs."""
+    if "w_gate" in params:
+        g = _expert_mm(xe, params["w_gate"], cfg)
+        h = _expert_mm(xe, params["w_in"], cfg)
+        h = _act(g, cfg.activation) * h
+    else:
+        h = _act(_expert_mm(xe, params["w_in"], cfg), cfg.activation)
+    return _expert_mm(h, params["w_out"], cfg)
+
+
+def moe_ffn_local(
+    params, xf: jax.Array, cfg: ModelConfig, ep_axis: Optional[str] = None
+):
+    """Route T local tokens. xf: (T, D). Returns (y: (T, D), aux_loss)."""
+    m = cfg.moe
+    T, D = xf.shape
+    E, k = m.num_experts, m.top_k
+    logits = xf.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)                        # (T, E)
+    gate, idx = jax.lax.top_k(probs, k)                            # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    f_e = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=1), axis=0)
+    aux = E * jnp.sum(f_e * jnp.mean(probs, axis=0)) * m.router_aux_weight
+
+    C = max(int(math.ceil(T * k * m.capacity_factor / E)), 1)
+    ids = idx.reshape(-1)                                          # (T*k,)
+    order = jnp.argsort(ids)                                       # local sort
+    sorted_ids = ids[order]
+    counts = jnp.bincount(ids, length=E)
+    starts = jnp.cumsum(counts) - counts                           # (E,)
+    rank = jnp.arange(T * k) - starts[sorted_ids]
+    keep = rank < C
+    slot = sorted_ids * C + rank                                   # (T*k,)
+    token_of = order // k
+    safe_slot = jnp.where(keep, slot, E * C)                       # overflow row
+    xe = jnp.zeros((E * C + 1, D), xf.dtype).at[safe_slot].set(xf[token_of])
+    xe = xe[: E * C].reshape(E, C, D)
+
+    if ep_axis is not None:
+        ep = jax.lax.axis_size(ep_axis)
+        # (E, C, D) -> (E/ep, ep*C, D): every device gets its experts' slots
+        xe = jax.lax.all_to_all(xe, ep_axis, split_axis=0, concat_axis=1,
+                                tiled=True)
+        ye = _ffn_stack(xe, params["experts"], cfg)
+        ye = jax.lax.all_to_all(ye, ep_axis, split_axis=1, concat_axis=0,
+                                tiled=True)                        # (E, C, D)
+    else:
+        ye = _ffn_stack(xe, params["experts"], cfg)
+
+    ye_flat = ye.reshape(E * C, D)
+    gate_sorted = gate.reshape(-1)[order]
+    w = jnp.where(keep, gate_sorted, 0.0).astype(xf.dtype)
+    contrib = ye_flat[jnp.minimum(slot, E * C - 1)] * w[:, None]
+    y = jnp.zeros((T, D), xf.dtype).at[token_of].add(contrib)
+
+    if m.num_shared:
+        y = y + _ffn_stack(
+            jnp.broadcast_to(xf, (m.num_shared,) + xf.shape), params["shared"],
+            cfg,
+        ).sum(0)
+    return y, aux
+
+
+_MOE_TOKEN_CHUNK = 131_072   # global tokens per dispatch (bounds the
+                             # (E, C, D) buffer: topk*cf*chunk*D elements)
+
+
+def moe_ffn_apply(params, x: jax.Array, cfg: ModelConfig):
+    """(B, S, D) -> (B, S, D). Uses expert-parallel shard_map when a mesh with
+    a `model` axis is ambient (set by the runtime); else the local path.
+
+    Long prefill chunks the token stream so the capacity-dispatch buffer
+    stays bounded regardless of sequence length."""
+    B, S, D = x.shape
+    from repro.runtime import sharding as sh
+    mesh = sh.current_mesh()
+
+    def dispatch(xf):
+        if mesh is not None and "model" in mesh.axis_names:
+            return sh.moe_shard_map(params, xf, cfg, mesh)
+        return moe_ffn_local(params, xf, cfg, None)
+
+    T = B * S
+    # chunk along the sequence axis (keeps every DP shard busy): smallest
+    # divisor nc of S with B*S/nc <= chunk budget
+    nc = 1
+    if T > _MOE_TOKEN_CHUNK:
+        for cand in range(2, S + 1):
+            if S % cand == 0 and T // cand <= _MOE_TOKEN_CHUNK:
+                nc = cand
+                break
+    if nc == 1:
+        y, aux = dispatch(x.reshape(T, D))
+        return y.reshape(B, S, D), aux
+    xc = jnp.moveaxis(x.reshape(B, nc, S // nc, D), 1, 0)
+
+    def body(acc, xb):
+        y, aux = dispatch(xb.reshape(B * (S // nc), D))
+        return acc + aux / nc, y.reshape(B, S // nc, D)
+
+    aux, yc = jax.lax.scan(body, jnp.float32(0.0), xc)
+    return jnp.moveaxis(yc, 0, 1).reshape(B, S, D), aux

@@ -1,0 +1,350 @@
+"""Model assembly: pattern-scanned block stacks for every assigned arch.
+
+Layers are grouped by the arch's `block_pattern` (e.g. recurrentgemma's
+(rglru, rglru, attn)); parameters for each pattern position are stacked over
+repetitions and the forward is a jax.lax.scan over repetitions with the
+pattern unrolled inside — this keeps the HLO size O(pattern) instead of
+O(num_layers), which is what makes the 88-layer 123B dry-run compile.
+A remainder tail (num_layers % pattern) is unrolled separately.
+
+Serve state (KV caches / recurrent states) is stacked the same way and
+scanned alongside the parameters.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, _pattern_kinds
+from repro.core import pim
+from repro.models import blocks as B
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# block-kind registry
+# ---------------------------------------------------------------------------
+def _block_init(kind: str, key, cfg: ModelConfig):
+    if kind in ("attn", "attn_local", "enc_attn"):
+        return B.attn_block_init(key, cfg)
+    if kind == "moe":
+        return B.attn_block_init(key, cfg, moe=True)
+    if kind == "xattn":
+        return B.attn_block_init(key, cfg, cross=True)
+    if kind == "mlstm":
+        return B.mlstm_block_init(key, cfg)
+    if kind == "slstm":
+        return B.slstm_block_init(key, cfg)
+    if kind == "rglru":
+        return B.rglru_block_init(key, cfg)
+    raise ValueError(kind)
+
+
+def _block_fwd_train(kind: str, params, x, pos_ids, cfg: ModelConfig,
+                     enc_out=None):
+    if kind in ("attn", "moe"):
+        return B.attn_block_fwd_train(params, x, pos_ids, cfg,
+                                      window=0, causal=cfg.causal)
+    if kind == "attn_local":
+        return B.attn_block_fwd_train(params, x, pos_ids, cfg,
+                                      window=cfg.window, causal=True)
+    if kind == "enc_attn":
+        return B.attn_block_fwd_train(params, x, pos_ids, cfg,
+                                      window=0, causal=False)
+    if kind == "xattn":
+        return B.xattn_block_fwd_train(params, x, enc_out, pos_ids, cfg)
+    if kind == "mlstm":
+        return B.mlstm_block_fwd_train(params, x, pos_ids, cfg)
+    if kind == "slstm":
+        return B.slstm_block_fwd_train(params, x, pos_ids, cfg)
+    if kind == "rglru":
+        return B.rglru_block_fwd_train(params, x, pos_ids, cfg)
+    raise ValueError(kind)
+
+
+def _block_init_state(kind: str, cfg: ModelConfig, batch: int, max_len: int):
+    if kind in ("attn", "moe"):
+        return B.attn_block_init_state(cfg, batch, max_len)
+    if kind == "attn_local":
+        return B.attn_block_init_state(cfg, batch, max_len, window=cfg.window)
+    if kind == "xattn":
+        return B.xattn_block_init_state(cfg, batch, max_len)
+    if kind == "mlstm":
+        return B.mlstm_block_init_state(cfg, batch, max_len)
+    if kind == "slstm":
+        return B.slstm_block_init_state(cfg, batch, max_len)
+    if kind == "rglru":
+        return B.rglru_block_init_state(cfg, batch, max_len)
+    raise ValueError(kind)
+
+
+def _block_fwd_serve(kind: str, params, x, state, offset, cfg: ModelConfig,
+                     enc_out=None):
+    if kind in ("attn", "moe"):
+        return B.attn_block_fwd_serve(params, x, state, offset, cfg,
+                                      window=0, causal=cfg.causal)
+    if kind == "attn_local":
+        return B.attn_block_fwd_serve(params, x, state, offset, cfg,
+                                      window=cfg.window, causal=True)
+    if kind == "xattn":
+        return B.xattn_block_fwd_serve(params, x, state, offset, cfg,
+                                       enc_out=enc_out)
+    if kind == "mlstm":
+        return B.mlstm_block_fwd_serve(params, x, state, offset, cfg)
+    if kind == "slstm":
+        return B.slstm_block_fwd_serve(params, x, state, offset, cfg)
+    if kind == "rglru":
+        return B.rglru_block_fwd_serve(params, x, state, offset, cfg)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# pattern layout helpers
+# ---------------------------------------------------------------------------
+def pattern_layout(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+    """(pattern, repetitions, tail_kinds).
+
+    num_layers = num_dense_layers (unrolled MoE dense prefix, if any)
+               + R * len(pattern) (scanned)  + len(tail) (unrolled remainder).
+    """
+    pat = cfg.block_pattern
+    n = cfg.num_layers
+    if cfg.num_dense_layers and "moe" in pat:
+        n -= cfg.num_dense_layers
+    R = n // len(pat)
+    rem = n - R * len(pat)
+    tail = (pat * (rem // len(pat) + 1))[:rem]
+    return pat, R, tail
+
+
+def _moe_kind_for_layer(cfg: ModelConfig, kind: str, layer_idx: int) -> str:
+    """deepseek-moe keeps the first `num_dense_layers` layers dense."""
+    if kind == "moe" and layer_idx < cfg.num_dense_layers:
+        return "attn"
+    return kind
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    pat, R, tail = pattern_layout(cfg)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {"embed": L.embed_init(keys[0], cfg.vocab_size,
+                                                    cfg.d_model)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = {
+            "table": jax.random.normal(keys[1], (cfg.vocab_size, cfg.d_model),
+                                       jnp.float32) * 0.02
+        }
+    if cfg.pos == "absolute":
+        params["pos_embed"] = jax.random.normal(
+            keys[2], (cfg.max_seq_len, cfg.d_model), jnp.float32) * 0.02
+    if cfg.num_image_patches:
+        params["img_proj"] = pim.pim_linear_init(keys[3], cfg.d_model,
+                                                 cfg.d_model)
+    # stacked blocks per pattern position
+    stacks = []
+    for j, kind in enumerate(pat):
+        kj = jax.random.fold_in(keys[4], j)
+        # layer index of repetition r at position j is r*len(pat)+j; MoE
+        # dense-prefix handling only matters when the prefix is in the stack,
+        # so those layers live in a dense stack variant only if pattern is
+        # uniform "moe" — handled by giving repetition 0 its own tail below.
+        stack = jax.vmap(lambda k: _block_init(kind, k, cfg))(
+            jax.random.split(kj, R))
+        stacks.append(stack)
+    params["blocks"] = tuple(stacks)
+    params["tail"] = tuple(
+        _block_init(_moe_kind_for_layer(cfg, kind, R * len(pat) + i),
+                    jax.random.fold_in(keys[5], i), cfg)
+        for i, kind in enumerate(tail)
+    )
+    # dense-prefix override for MoE archs (deepseek): separate dense params
+    if cfg.num_dense_layers and "moe" in pat:
+        params["dense_prefix"] = tuple(
+            _block_init("attn", jax.random.fold_in(keys[6], i), cfg)
+            for i in range(cfg.num_dense_layers)
+        )
+    params["final_norm"] = L.norm_init(cfg.d_model, cfg.norm)
+    if cfg.is_encoder_decoder:
+        ek = jax.random.split(keys[7], 3)
+        params["enc_blocks"] = jax.vmap(
+            lambda k: _block_init("enc_attn", k, cfg)
+        )(jax.random.split(ek[0], cfg.num_encoder_layers))
+        params["enc_norm"] = L.norm_init(cfg.d_model, cfg.norm)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper backbone; frontend is a stub feeding frame embeddings)
+# ---------------------------------------------------------------------------
+def encode(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: (B, Se, D) precomputed frame embeddings (conv-stem stub)."""
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+    pos_ids = jnp.arange(x.shape[1])
+
+    def body(x, p):
+        y, _ = B.attn_block_fwd_train(p, x, pos_ids, cfg, window=0,
+                                      causal=False)
+        return y, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.norm_apply(params["enc_norm"], x, cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# train forward
+# ---------------------------------------------------------------------------
+def _embed_inputs(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+                  offset=0):
+    tokens = batch["tokens"]
+    x = L.embed_apply(params["embed"], tokens, jnp.dtype(cfg.compute_dtype))
+    if cfg.pos == "absolute":
+        S = tokens.shape[1]
+        pe = jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], offset, S, axis=0)
+        x = x + pe.astype(x.dtype)
+    if cfg.num_image_patches and "image_embeds" in batch:
+        # stub VLM fusion: project patch embeddings into the first P positions
+        img = pim.pim_linear_apply(
+            params["img_proj"],
+            batch["image_embeds"].astype(x.dtype), cfg.pim, cfg.pim_linears)
+        P = min(cfg.num_image_patches, x.shape[1])
+        x = x.at[:, :P].add(img[:, :P])
+    return x
+
+
+def forward_train(params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    """Returns (logits (B,S,V), aux_loss scalar)."""
+    x, aux = forward_hidden(params, batch, cfg)
+    head = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return L.unembed_apply(head, x), aux
+
+
+def forward_hidden(params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    """Final normed hidden states (B,S,D) + aux loss (no unembedding —
+    the loss computes vocab-sharded chunked CE without full logits)."""
+    pat, R, tail = pattern_layout(cfg)
+    x = _embed_inputs(params, batch, cfg)
+    S = x.shape[1]
+    pos_ids = jnp.arange(S)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, batch["frames"], cfg)
+
+    from repro.runtime.sharding import constrain, dp_axes_spec
+    ba = dp_axes_spec()
+
+    def one_block(kind):
+        def f(x, p):
+            x, a = _block_fwd_train(kind, p, x, pos_ids, cfg, enc_out=enc_out)
+            # boundary activations sequence-sharded over the model axis
+            # (Megatron-style SP: bounds the per-device residual-stream
+            # memory saved for backward)
+            return constrain(x, ba, "model", None), a
+        # PER-BLOCK remat: a heterogeneous pattern (e.g. xlstm's 7 mlstm +
+        # 1 slstm) must not hold every block's recomputed intermediates
+        # live at once during the group backward (56 GB -> ~13 GB on the
+        # xlstm train cell; EXPERIMENTS.md §Perf extras)
+        return jax.checkpoint(f) if cfg.remat != "none" else f
+
+    block_fns = [one_block(kind) for kind in pat]
+
+    def layer_group(x, group_params):
+        aux = jnp.float32(0.0)
+        for j in range(len(pat)):
+            x, a = block_fns[j](x, group_params[j])
+            aux += a
+        return x, aux
+
+    if "dense_prefix" in params:
+        for p in params["dense_prefix"]:
+            x, _ = _block_fwd_train("attn", p, x, pos_ids, cfg)
+
+    def scan_body(carry, group_params):
+        x, aux = carry
+        x, a = layer_group(x, group_params)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.float32(0.0)),
+                               params["blocks"])
+    for i, kind in enumerate(tail):
+        x, a = _block_fwd_train(
+            _moe_kind_for_layer(cfg, kind, R * len(pat) + i),
+            params["tail"][i], x, pos_ids, cfg, enc_out=enc_out)
+        aux += a
+    x = L.norm_apply(params["final_norm"], x, cfg.norm)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# serve: cache init, prefill, decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    pat, R, tail = pattern_layout(cfg)
+
+    def stacked(kind):
+        st = _block_init_state(kind, cfg, batch, max_len)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (R,) + a.shape), st)
+
+    cache = {
+        "blocks": tuple(stacked(kind) for kind in pat),
+        "tail": tuple(_block_init_state(kind, cfg, batch, max_len)
+                      for kind in tail),
+    }
+    if "moe" in pat and cfg.num_dense_layers:
+        cache["dense_prefix"] = tuple(
+            _block_init_state("attn", cfg, batch, max_len)
+            for _ in range(cfg.num_dense_layers))
+    return cache
+
+
+def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
+                  cfg: ModelConfig, enc_out: Optional[jax.Array] = None):
+    """One serve step (prefill chunk or single-token decode).
+
+    Returns (logits_last (B,V), new_cache, enc_out) — enc_out is computed on
+    the first (offset==0) call for encoder-decoder archs and threaded back.
+    """
+    pat, R, tail = pattern_layout(cfg)
+    x = _embed_inputs(params, batch, cfg, offset=offset)
+    if cfg.is_encoder_decoder and enc_out is None:
+        enc_out = encode(params, batch["frames"], cfg)
+
+    new_cache = dict(cache)
+    if "dense_prefix" in cache:
+        dp = []
+        for p, st in zip(params["dense_prefix"], cache["dense_prefix"]):
+            x, st = _block_fwd_serve("attn", p, x, st, offset, cfg)
+            dp.append(st)
+        new_cache["dense_prefix"] = tuple(dp)
+
+    def scan_body(x, xs):
+        group_params, group_state = xs
+        new_states = []
+        for j, kind in enumerate(pat):
+            x, st = _block_fwd_serve(kind, group_params[j], x, group_state[j],
+                                     offset, cfg, enc_out=enc_out)
+            new_states.append(st)
+        return x, tuple(new_states)
+
+    x, new_block_states = jax.lax.scan(
+        scan_body, x, (params["blocks"], cache["blocks"]))
+    new_cache["blocks"] = new_block_states
+    new_tail = []
+    for i, kind in enumerate(tail):
+        x, st = _block_fwd_serve(
+            _moe_kind_for_layer(cfg, kind, R * len(pat) + i),
+            params["tail"][i], x, cache["tail"][i], offset, cfg,
+            enc_out=enc_out)
+        new_tail.append(st)
+    new_cache["tail"] = tuple(new_tail)
+    x = L.norm_apply(params["final_norm"], x[:, -1:], cfg.norm)
+    head = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed_apply(head, x)[:, 0]
+    return logits, new_cache, enc_out

@@ -1,0 +1,89 @@
+"""int8 gradient all-reduce with error feedback (beyond-paper, DESIGN.md §9).
+
+Extends the paper's everything-<=8-bit philosophy to the data-parallel
+collective.  The wire format is genuinely 8-bit: the all-reduce is decomposed
+into  all_to_all(int8 chunks) -> local int32 sum -> requantize ->
+all_gather(int8),  so the HLO collective operand bytes drop 4x vs an f32
+all-reduce (visible in the roofline's collective term).  The local
+quantization residual is fed back into the next step's gradient (error
+feedback keeps the method unbiased in the long run — Seide et al. 2014,
+Karimireddy et al. 2019).
+
+Scope: pure-DP parameter replication (the compression path trades TP/FSDP
+for 4x cheaper DP collectives — the right trade for small/medium models;
+see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def compress_leaf(g: jax.Array, residual: jax.Array):
+    """(int8 codes, scale, new_residual). Quantizes g + residual."""
+    gf = g.astype(jnp.float32) + residual
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_residual = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_residual
+
+
+def decompress_leaf(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def allreduce_compressed(grads, residuals, axis_name) -> Tuple[Any, Any]:
+    """Inside shard_map: mean-reduce grads over `axis_name` (str or tuple of
+    axis names) with int8 wire.
+
+    reduce-scatter phase: all_to_all of int8 code chunks; each shard sums its
+    chunk exactly in int32 and requantizes with a shared (pmax) scale;
+    all-gather phase: int8 chunks back.  Returns (mean grads, new residuals).
+    """
+    if isinstance(axis_name, (tuple, list)) and len(axis_name) == 1:
+        axis_name = axis_name[0]
+    names = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+    n = 1
+    for a in names:
+        n *= jax.lax.axis_size(a)   # static under shard_map
+
+    def leaf(g, r):
+        shape = g.shape
+        gf = g.astype(jnp.float32) + r
+        scale = jax.lax.pmax(
+            jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12), axis_name) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        new_r = gf - q.astype(jnp.float32) * scale
+        flat = q.reshape(-1)
+        pad = (-flat.size) % n
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        c = flat.size // n
+        # reduce-scatter with int8 payload
+        chunks = jax.lax.all_to_all(
+            flat.reshape(n, c), axis_name, split_axis=0, concat_axis=0,
+            tiled=False)                          # (n, c): peer i's chunk j
+        s = jnp.sum(chunks.astype(jnp.int32), axis=0)           # exact
+        # requantize the summed chunk (shared second-stage scale)
+        s_f = s.astype(jnp.float32) * scale
+        scale2 = jax.lax.pmax(
+            jnp.maximum(jnp.max(jnp.abs(s_f)), 1e-12), axis_name) / 127.0
+        q2 = jnp.clip(jnp.round(s_f / scale2), -127, 127).astype(jnp.int8)
+        # all-gather with int8 payload
+        full = jax.lax.all_gather(q2, axis_name, axis=0)        # (n, c)
+        out = (full.astype(jnp.float32) * scale2 / n).reshape(-1)
+        if pad:
+            out = out[:-pad]
+        return out.reshape(shape), new_r
+
+    # two passes (XLA CSEs the duplicate work) — tuple-typed returns from a
+    # single tree.map would corrupt trees that contain real tuples
+    mean = jax.tree.map(lambda g, r: leaf(g, r)[0], grads, residuals)
+    res = jax.tree.map(lambda g, r: leaf(g, r)[1], grads, residuals)
+    return mean, res

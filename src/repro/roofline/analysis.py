@@ -1,0 +1,349 @@
+"""Roofline analysis from compiled SPMD artifacts (no real hardware).
+
+XLA's HloCostAnalysis counts while-loop bodies ONCE and reports per-device
+numbers; our layer stacks and microbatch accumulation are lax.scans, so the
+static count undercounts by the trip product.  This module parses the
+compiled HLO text itself:
+
+  * builds a computation -> ops table (shapes, dtypes),
+  * extracts while-loop trip counts from loop-condition constants,
+  * weights every dot/collective by the product of enclosing trip counts,
+  * sums dot FLOPs (2*M*N*K from result shape x contracted dims) and
+    collective operand bytes per collective kind.
+
+Hardware model (TPU v5e class — DESIGN.md §8):
+  197 TFLOP/s bf16 per chip (x2 for int8 MXU ops), 819 GB/s HBM,
+  ~50 GB/s/link ICI.
+
+Terms (seconds, per training/serve step):
+  T_compute    = FLOPs_per_device / peak
+  T_memory     = Bytes_per_device / HBM_bw      (bytes scaled from
+                 cost_analysis 'bytes accessed' by the trip-weight ratio)
+  T_collective = collective_bytes_per_device / ICI_bw
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS_BF16 = 197e12        # per chip
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (sum both directions ~)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    dots: List[Tuple[float, bool]]            # (flops, is_int)
+    collectives: List[Tuple[str, int]]        # (kind, bytes)
+    calls: List[Tuple[str, str]]              # (callee, "while"|"call")
+    whiles: List[Tuple[str, str]]             # (body_name, cond_name)
+    shapes: Dict[str, str]                    # op name -> type str
+    max_constant: int = 1
+    result_bytes: float = 0.0                 # HBM-traffic proxy (see analyze)
+    dus_bytes: float = 0.0                    # full-buffer bytes of in-place
+                                              # scan-stacking writes: charged
+                                              # once per LOOP, not per trip
+
+
+# computation headers are non-indented lines "name (params...) -> type {";
+# params may contain nested tuple parens, so only anchor on "name ("
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\]\{\},\d\s]+?))\s*"
+    r"([\w\-]+)\((.*)$")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        is_hdr_line = (line and not line.startswith(" ")
+                       and line.rstrip().endswith("{")
+                       and not line.startswith("HloModule"))
+        hdr = _COMP_HDR.match(line.strip()) if is_hdr_line else None
+        if hdr:
+            cur = Computation(hdr.group(1), [], [], [], [], {})
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            c = _CONST_RE.search(line)
+            if c:
+                cur.max_constant = max(cur.max_constant, int(c.group(1)))
+            continue
+        name, type_str, op, rest = m.groups()
+        cur.shapes[name] = type_str.strip()
+        # HBM traffic proxy: every op's result is written once (post-fusion
+        # HLO hides fused temporaries). Pointer-ops are free; a
+        # dynamic-update-slice writes only its update operand; while/call
+        # results are accounted inside their bodies.
+        if op not in ("parameter", "constant", "tuple", "get-tuple-element",
+                      "bitcast", "while", "conditional", "call"):
+            is_dus = (op == "dynamic-update-slice"
+                      or (op == "fusion" and "dynamic_update_slice" in rest))
+            if is_dus:
+                # in-place update: per full loop execution the whole buffer
+                # is written exactly once across all trips
+                cur.dus_bytes += _shape_bytes(type_str)
+            else:
+                cur.result_bytes += _shape_bytes(type_str)
+        if op == "constant":
+            c = _CONST_RE.search(line)
+            if c:
+                cur.max_constant = max(cur.max_constant, int(c.group(1)))
+        elif op == "dot":
+            flops, is_int = _dot_flops(type_str, rest, cur.shapes)
+            if flops:
+                cur.dots.append((flops, is_int))
+        elif op == "while":
+            b = re.search(r"body=%?([\w\.\-]+)", rest)
+            c = re.search(r"condition=%?([\w\.\-]+)", rest)
+            if b and c:
+                cur.whiles.append((b.group(1), c.group(1)))
+        else:
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLL_KINDS:
+                cur.collectives.append((base, _shape_bytes(type_str)))
+        # non-while call edges (fusion bodies, reducers, called computations)
+        for callee in re.findall(r"(?:calls=|to_apply=)%?([\w\.\-]+)", rest):
+            cur.calls.append((callee, "call"))
+    return comps
+
+
+def _dot_flops(result_type: str, rest: str, shapes: Dict[str, str]):
+    dt, rdims = _shape_elems(result_type)
+    ops = re.findall(r"%([\w\.\-]+)", rest)
+    k = 1
+    mm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+    if mm and ops:
+        lhs_type = shapes.get(ops[0], "")
+        _, ldims = _shape_elems(lhs_type)
+        for ax in mm.group(1).split(","):
+            if ax and int(ax) < len(ldims):
+                k *= ldims[int(ax)]
+    n = 1
+    for d in rdims:
+        n *= d
+    is_int = dt.startswith(("s", "u"))
+    return 2.0 * n * k, is_int
+
+
+@dataclasses.dataclass
+class HLOCost:
+    flops: float                  # per device, trip-weighted (fp dots)
+    int_flops: float              # per device, trip-weighted (int dots)
+    collective_bytes: Dict[str, float]
+    trip_weight_ratio: float      # weighted dot flops / unweighted
+    traffic_bytes: float = 0.0    # trip-weighted result-bytes (HBM proxy)
+
+    @property
+    def total_flops(self):
+        return self.flops + self.int_flops
+
+    @property
+    def total_collective_bytes(self):
+        return sum(self.collective_bytes.values())
+
+
+def analyze(text: str) -> HLOCost:
+    """Trip-weighted cost walk over the HLO call graph.
+
+    executions(comp) = sum over call sites of executions(caller) * trips,
+    where trips = the loop bound constant for while body/condition edges
+    and 1 for ordinary call/fusion/to_apply edges.
+    """
+    comps = parse_hlo(text)
+    # edges: caller -> [(callee, multiplier)]
+    edges: Dict[str, List[Tuple[str, float]]] = {n: [] for n in comps}
+    called = set()
+    for name, c in comps.items():
+        for body, cond in c.whiles:
+            trips = comps[cond].max_constant if cond in comps else 1
+            for callee in (body, cond):
+                if callee in comps:
+                    edges[name].append((callee, float(trips)))
+                    called.add(callee)
+        for callee, _ in c.calls:
+            if callee in comps:
+                edges[name].append((callee, 1.0))
+                called.add(callee)
+    roots = [n for n in comps if n not in called]
+
+    # propagate in waves (call DAG is shallow; iterate to fixpoint)
+    execs = {n: (1.0 if n in roots else 0.0) for n in comps}
+    for _ in range(64):
+        changed = False
+        new = {n: (1.0 if n in roots else 0.0) for n in comps}
+        for caller, outs in edges.items():
+            for callee, mult in outs:
+                new[callee] += execs[caller] * mult
+        for n in comps:
+            if abs(new[n] - execs[n]) > 1e-9:
+                changed = True
+        execs = new
+        if not changed:
+            break
+
+    # computations reached only via call/to_apply edges are inlined (fusion
+    # bodies, reducers): their ops cost nothing — the caller's fusion-op
+    # result already carries the HBM write
+    inlined = set()
+    for name, c in comps.items():
+        for callee, _ in c.calls:
+            inlined.add(callee)
+    while_bodies = set()
+    for c in comps.values():
+        for b, cond in c.whiles:
+            while_bodies.add(b)
+            while_bodies.add(cond)
+    inlined -= while_bodies
+
+    # per-computation self trip count (for once-per-loop DUS accounting)
+    self_trips = {n: 1.0 for n in comps}
+    for c in comps.values():
+        for body, cond in c.whiles:
+            trips = comps[cond].max_constant if cond in comps else 1
+            for callee in (body, cond):
+                if callee in comps:
+                    self_trips[callee] = float(max(trips, 1))
+
+    flops = int_flops = raw_flops = traffic = 0.0
+    coll: Dict[str, float] = {k: 0.0 for k in _COLL_KINDS}
+    for name, c in comps.items():
+        w = max(execs.get(name, 0.0), 0.0)
+        for f, is_int in c.dots:
+            raw_flops += f
+            if is_int:
+                int_flops += w * f
+            else:
+                flops += w * f
+        for kind, b in c.collectives:
+            coll[kind] += w * b
+        if name not in inlined:
+            traffic += w * c.result_bytes
+            traffic += (w / self_trips[name]) * c.dus_bytes
+    ratio = (flops + int_flops) / raw_flops if raw_flops else 1.0
+    return HLOCost(flops, int_flops, coll, ratio, traffic)
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_hbm: float
+    bytes_collective: float
+    model_flops: float
+    useful_ratio: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Optimistic (perfectly overlapped) step time = max of terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-model-compute time / achievable step time."""
+        t_model = self.model_flops / PEAK_FLOPS_BF16
+        return t_model / self.step_time_s if self.step_time_s else 0.0
+
+
+def roofline_terms(hlo_cost: HLOCost, arg_bytes: float,
+                   model_flops_per_device: float,
+                   ici_links: int = 4) -> Roofline:
+    """All inputs are per-device quantities.
+
+    T_memory uses the trip-weighted result-bytes walk (each op's output
+    written once + the entry arguments read once): a fusion-aware HBM
+    traffic proxy, replacing the earlier static-bytes x flops-ratio
+    heuristic which badly overcounted decode weight reads.
+    """
+    t_comp = (hlo_cost.flops / PEAK_FLOPS_BF16
+              + hlo_cost.int_flops / PEAK_FLOPS_INT8)
+    bytes_hbm = hlo_cost.traffic_bytes + arg_bytes
+    t_mem = bytes_hbm / HBM_BW
+    t_coll = hlo_cost.total_collective_bytes / (ICI_BW * ici_links)
+    useful = (model_flops_per_device / hlo_cost.total_flops
+              if hlo_cost.total_flops else 0.0)
+    return Roofline(t_comp, t_mem, t_coll, hlo_cost.total_flops, bytes_hbm,
+                    hlo_cost.total_collective_bytes,
+                    model_flops_per_device, useful)
+
+
+def model_bytes_per_step(cfg, shape, n_devices: int) -> float:
+    """Bandwidth floor for decode: every step must read the active weights
+    (int8 in the PIM macros) and the int8 KV cache once per token."""
+    w_bytes = cfg.active_param_count() * 1.0          # int8 PIM weights
+    kv = 0.0
+    if shape.kind == "decode":
+        from repro.configs.base import _pattern_kinds
+        attn_layers = sum(1 for k in _pattern_kinds(cfg)
+                          if k in ("attn", "attn_local", "moe", "xattn"))
+        eff = min(shape.seq_len, cfg.window) if cfg.window else shape.seq_len
+        kv = (shape.global_batch * eff * cfg.num_kv_heads
+              * cfg.resolved_head_dim * 2 * attn_layers)
+    return (w_bytes + kv) / n_devices
+
+
+def model_flops_per_step(cfg, shape, n_devices: int) -> float:
+    """MODEL_FLOPS: 6*N*D train / 2*N_active per decoded token, per device."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence per step
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_devices

@@ -1,0 +1,120 @@
+"""Dot-level HLO profile: top contributors to trip-weighted FLOPs.
+
+Usage (the §Perf 'profile' step — this is the dry-run's answer to a trace):
+  PYTHONPATH=src python -m repro.roofline.profile --arch deepseek-moe-16b \
+      --shape train_4k
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import collections
+import re
+
+from repro.roofline import analysis as R
+
+
+def dot_profile(text: str, top: int = 25):
+    comps = R.parse_hlo(text)
+    # recompute execution weights exactly as analysis.analyze does
+    edges = {n: [] for n in comps}
+    called = set()
+    for name, c in comps.items():
+        for body, cond in c.whiles:
+            trips = comps[cond].max_constant if cond in comps else 1
+            for callee in (body, cond):
+                if callee in comps:
+                    edges[name].append((callee, float(trips)))
+                    called.add(callee)
+        for callee, _ in c.calls:
+            if callee in comps:
+                edges[name].append((callee, 1.0))
+                called.add(callee)
+    roots = [n for n in comps if n not in called]
+    execs = {n: (1.0 if n in roots else 0.0) for n in comps}
+    for _ in range(64):
+        new = {n: (1.0 if n in roots else 0.0) for n in comps}
+        for caller, outs in edges.items():
+            for callee, mult in outs:
+                new[callee] += execs[caller] * mult
+        if all(abs(new[n] - execs[n]) < 1e-9 for n in comps):
+            break
+        execs = new
+
+    # inlined computations (fusion bodies/reducers) carry no HBM traffic
+    inlined = set()
+    for name, c in comps.items():
+        for callee, _ in c.calls:
+            inlined.add(callee)
+    for c in comps.values():
+        for b, cond in c.whiles:
+            inlined.discard(b)
+            inlined.discard(cond)
+
+    # re-parse per-op with metadata names
+    rows, trows = [], []
+    cur = None
+    shapes = {}
+    for line in text.splitlines():
+        is_hdr = (line and not line.startswith(" ")
+                  and line.rstrip().endswith("{")
+                  and not line.startswith("HloModule"))
+        if is_hdr:
+            m = R._COMP_HDR.match(line.strip())
+            cur = m.group(1) if m else None
+            shapes = {}
+            continue
+        m = R._OP_RE.match(line)
+        if not m or cur is None:
+            continue
+        name, type_str, op, rest = m.groups()
+        shapes[name] = type_str.strip()
+        w = max(execs.get(cur, 1.0), 1.0)
+        meta = re.search(r'op_name="([^"]+)"', rest)
+        mname = (meta.group(1) if meta else op)[-70:]
+        if op == "dot":
+            flops, is_int = R._dot_flops(type_str, rest, shapes)
+            rows.append((flops * w, flops, w, type_str.strip()[:40], mname,
+                         "int" if is_int else "fp"))
+        if cur not in inlined and op not in (
+                "parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "while", "conditional", "call"):
+            if op == "dynamic-update-slice":
+                opsn = re.findall(r"%([\w\.\-]+)", rest)
+                b = R._shape_bytes(shapes.get(opsn[1], "")) if len(opsn) > 1 else 0
+            else:
+                b = R._shape_bytes(type_str)
+            if b:
+                trows.append((b * w, b, w, op, type_str.strip()[:40], mname))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total weighted dot flops/device: {total:.3e}  ({len(rows)} dots)")
+    print(f"{'wFLOPs':>10s} {'x':>6s} {'dtype':5s} {'result':40s} op_name")
+    for r in rows[:top]:
+        print(f"{r[0]:10.2e} {r[2]:6.0f} {r[5]:5s} {r[3]:40s} {r[4]}")
+    trows.sort(reverse=True)
+    ttotal = sum(t[0] for t in trows)
+    print(f"\ntotal weighted traffic/device: {ttotal:.3e} B ({len(trows)} ops)")
+    print(f"{'wBytes':>10s} {'x':>7s} {'op':18s} {'result':40s} op_name")
+    for t in trows[:top]:
+        print(f"{t[0]:10.2e} {t[2]:7.0f} {t[3]:18s} {t[4]:40s} {t[5]}")
+    return rows, trows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+    from repro.configs import SHAPES
+    from repro.launch import dryrun
+    from repro.launch.mesh import make_production_mesh
+    mesh = make_production_mesh()
+    lowered, compiled, info = dryrun.lower_cell(
+        args.arch, SHAPES[args.shape], mesh)
+    dot_profile(compiled.as_text(), args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Serving step builders: batched prefill + decode over the PIM KV cache.
+
+The serve path is the paper-faithful dataflow: weights loaded once (int8 in
+the PIM macros == TP-sharded on device), K/V quantized on write, LUT softmax.
+`serve_step` here is what the decode_32k / long_500k dry-run cells lower.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.model_zoo import Model
+from repro.runtime import sharding as sh
+
+
+def make_prefill_step(model: Model, mesh: Optional[Mesh] = None) -> Callable:
+    """prefill(params, batch, cache) -> (logits_last, cache, enc_out)."""
+    def step(params, batch, cache):
+        return model.forward_serve(params, batch, cache, 0)
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(2,))
+    return _pjit_serve(model, step, mesh, donate=(2,))
+
+
+def make_decode_step(model: Model, mesh: Optional[Mesh] = None) -> Callable:
+    """decode(params, tokens, cache, offset, enc_out) -> (logits, cache)."""
+    def step(params, batch, cache, offset, enc_out):
+        logits, cache, _ = model.forward_serve(params, batch, cache, offset,
+                                               enc_out=enc_out)
+        return logits, cache
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(2,))
+    return _pjit_serve(model, step, mesh, donate=(2,), with_offset=True)
+
+
+def _pjit_serve(model: Model, step, mesh: Mesh, donate, with_offset=False):
+    """jit with sharding constraints left to propagation from the inputs —
+    the launch layer device_puts params/caches with the DESIGN.md §4 specs
+    (params via sharding.param_shardings, caches via sharding.cache_specs)."""
+    return jax.jit(step, donate_argnums=donate)
+
+
+def greedy_generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
+                    max_new_tokens: int, max_len: int,
+                    mesh: Optional[Mesh] = None):
+    """Batched greedy decoding loop (the paper's token pipeline, §3.6).
+
+    Returns (B, max_new_tokens) generated ids.
+    """
+    B, S = prompt_batch["tokens"].shape
+    prefill = make_prefill_step(model, mesh)
+    decode = make_decode_step(model, mesh)
+    cache = model.init_cache(B, max_len)
+    logits, cache, enc_out = prefill(params, prompt_batch, cache)
+    toks = []
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+    for t in range(max_new_tokens):
+        toks.append(tok)
+        logits, cache = decode(params, {"tokens": tok}, cache, S + t, enc_out)
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+    return jnp.concatenate(toks, axis=1)

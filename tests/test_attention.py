@@ -1,0 +1,122 @@
+"""Unit tests for AttentionLego attention numerics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LUTSoftmaxConfig, PIMConfig
+from repro.core import attention as attn
+
+PIM = PIMConfig()
+LUT = LUTSoftmaxConfig()
+
+
+def _qkv(key, B=2, S=32, H=4, Hkv=2, Dh=32, scale=0.5):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, S, H, Dh)) * scale
+    k = jax.random.normal(k2, (B, S, Hkv, Dh)) * scale
+    v = jax.random.normal(k3, (B, S, Hkv, Dh)) * scale
+    return q, k, v
+
+
+def test_pim_attention_close_to_fp():
+    q, k, v = _qkv(jax.random.PRNGKey(0))
+    cache = attn.cache_write(attn.init_kv_cache(2, 32, 2, 32), k, v, 0, PIM)
+    o = attn.pim_attention(q, cache, PIM, LUT, q_offset=0, out_dtype=jnp.float32)
+    ref = attn.fp_attention(q, k, v, 0)
+    rel = jnp.linalg.norm(o - ref) / jnp.linalg.norm(ref)
+    assert float(rel) < 0.12  # int8 scores + LUT + uint8 probs + int8 V
+
+
+def test_causal_mask_respected():
+    """Output at position t must not depend on K/V at positions > t."""
+    q, k, v = _qkv(jax.random.PRNGKey(1), B=1, S=16)
+    cache1 = attn.cache_write(attn.init_kv_cache(1, 16, 2, 32), k, v, 0, PIM)
+    o1 = attn.pim_attention(q, cache1, PIM, LUT, q_offset=0, out_dtype=jnp.float32)
+    # corrupt future K/V
+    k2 = k.at[:, 10:].set(jax.random.normal(jax.random.PRNGKey(9), k[:, 10:].shape) * 3)
+    v2 = v.at[:, 10:].set(-v[:, 10:] * 7)
+    cache2 = attn.cache_write(attn.init_kv_cache(1, 16, 2, 32), k2, v2, 0, PIM)
+    o2 = attn.pim_attention(q, cache2, PIM, LUT, q_offset=0, out_dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(o1[:, :10]), np.asarray(o2[:, :10]), rtol=0, atol=1e-6
+    )
+
+
+def test_cache_valid_length_masks_tail():
+    q, k, v = _qkv(jax.random.PRNGKey(2), B=1, S=8)
+    cache = attn.init_kv_cache(1, 32, 2, 32)  # max_len 32, only 8 filled
+    cache = attn.cache_write(cache, k, v, 0, PIM)
+    assert int(cache.length) == 8
+    o = attn.pim_attention(q, cache, PIM, LUT, q_offset=0, out_dtype=jnp.float32)
+    ref = attn.fp_attention(q, k, v, 0)
+    rel = jnp.linalg.norm(o - ref) / jnp.linalg.norm(ref)
+    assert float(rel) < 0.12
+
+
+def test_incremental_decode_matches_prefill():
+    """Decode tokens one at a time == attention over the full prefix."""
+    B, S, H, Hkv, Dh = 1, 12, 2, 1, 16
+    q, k, v = _qkv(jax.random.PRNGKey(3), B=B, S=S, H=H, Hkv=Hkv, Dh=Dh)
+    cache = attn.init_kv_cache(B, S, Hkv, Dh)
+    outs = []
+    for t in range(S):
+        cache = attn.cache_write(cache, k[:, t : t + 1], v[:, t : t + 1], t, PIM)
+        o_t = attn.pim_attention(
+            q[:, t : t + 1], cache, PIM, LUT, q_offset=t, out_dtype=jnp.float32
+        )
+        outs.append(o_t)
+    o_dec = jnp.concatenate(outs, axis=1)
+    cache_full = attn.cache_write(attn.init_kv_cache(B, S, Hkv, Dh), k, v, 0, PIM)
+    o_full = attn.pim_attention(q, cache_full, PIM, LUT, q_offset=0, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(o_dec), np.asarray(o_full), atol=1e-5)
+
+
+def test_gqa_broadcast_equivalence():
+    """GQA with kv heads replicated == MHA with explicit repeated heads."""
+    B, S, Dh = 1, 16, 32
+    q, k, v = _qkv(jax.random.PRNGKey(4), B=B, S=S, H=4, Hkv=2, Dh=Dh)
+    ref_gqa = attn.fp_attention(q, k, v, 0)
+    k_rep = jnp.repeat(k, 2, axis=2)
+    v_rep = jnp.repeat(v, 2, axis=2)
+    ref_mha = attn.fp_attention(q, k_rep, v_rep, 0)
+    np.testing.assert_allclose(np.asarray(ref_gqa), np.asarray(ref_mha), atol=1e-6)
+
+
+def test_local_window_attention():
+    q, k, v = _qkv(jax.random.PRNGKey(5), B=1, S=32)
+    o_full = attn.fp_attention(q, k, v, 0, window=0)
+    o_win = attn.fp_attention(q, k, v, 0, window=4)
+    # with a window of 4, early outputs match but late ones differ
+    assert not np.allclose(np.asarray(o_full[:, -1]), np.asarray(o_win[:, -1]))
+    np.testing.assert_allclose(
+        np.asarray(o_full[:, :4]), np.asarray(o_win[:, :4]), atol=1e-6
+    )
+
+
+def test_window_mask_structure():
+    m = attn.attention_mask(8, 8, 0, causal=True, window=3)
+    m = np.asarray(m)
+    for i in range(8):
+        for j in range(8):
+            assert m[i, j] == (j <= i and j > i - 3)
+
+
+def test_adc_quantized_mode_still_reasonable():
+    q, k, v = _qkv(jax.random.PRNGKey(6))
+    pim_q = PIMConfig(adc_mode="quantized")
+    cache = attn.cache_write(attn.init_kv_cache(2, 32, 2, 32), k, v, 0, pim_q)
+    o = attn.pim_attention(q, cache, pim_q, LUT, q_offset=0, out_dtype=jnp.float32)
+    ref = attn.fp_attention(q, k, v, 0)
+    rel = jnp.linalg.norm(o - ref) / jnp.linalg.norm(ref)
+    assert float(rel) < 0.5  # coarse but not catastrophic
+    assert bool(jnp.all(jnp.isfinite(o)))
+
+
+def test_kv_cache_dtypes():
+    cache = attn.init_kv_cache(2, 16, 2, 32)
+    assert cache.k_q.dtype == jnp.int8 and cache.v_q.dtype == jnp.int8
+    q, k, v = _qkv(jax.random.PRNGKey(7), B=2, S=16)
+    cache = attn.cache_write(cache, k, v, 0, PIM)
+    assert cache.k_q.dtype == jnp.int8
+    assert cache.k_scale.shape == (2, 16, 2)

@@ -1,0 +1,218 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+All kernels run interpret=True (the kernel body executes in Python on CPU
+with the same BlockSpec tiling a TPU would use).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LUTSoftmaxConfig, PIMConfig
+from repro.core import attention as attn
+from repro.core import quant
+from repro.kernels import ops, ref
+from repro.kernels.lut_softmax import lut_softmax_pallas
+from repro.kernels.pim_attention import pim_attention_pallas
+from repro.kernels.pim_matmul import pim_matmul_int_pallas
+
+
+# ---------------------------------------------------------------------------
+# pim_matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(8, 64, 32), (130, 200, 96), (256, 384, 128),
+                                   (1, 128, 128), (127, 129, 130)])
+@pytest.mark.parametrize("adc_mode", ["ideal", "quantized"])
+def test_pim_matmul_matches_oracle(shape, adc_mode):
+    M, K, N = shape
+    key = jax.random.PRNGKey(M * 7 + K)
+    kx, kw = jax.random.split(key)
+    x_q = jax.random.randint(kx, (M, K), -128, 128, jnp.int32).astype(jnp.int8)
+    w_q = jax.random.randint(kw, (K, N), -128, 128, jnp.int32).astype(jnp.int8)
+    cfg = PIMConfig(adc_mode=adc_mode)
+    y = pim_matmul_int_pallas(x_q, w_q, cfg, interpret=True)
+    r = ref.pim_matmul_int_ref(x_q, w_q, cfg)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(r))
+
+
+@pytest.mark.parametrize("blocks", [(128, 128, 128), (64, 128, 256)])
+def test_pim_matmul_block_shape_invariance(blocks):
+    """The result must not depend on the chosen VMEM tiling."""
+    bm, bn, bk = blocks
+    key = jax.random.PRNGKey(3)
+    x_q = jax.random.randint(key, (96, 320), -128, 128, jnp.int32).astype(jnp.int8)
+    w_q = jax.random.randint(key, (320, 160), -128, 128, jnp.int32).astype(jnp.int8)
+    cfg = PIMConfig()
+    y = pim_matmul_int_pallas(x_q, w_q, cfg, block_m=bm, block_n=bn,
+                              block_k=bk, interpret=True)
+    r = ref.pim_matmul_int_ref(x_q, w_q, cfg)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(r))
+
+
+def test_pim_matmul_adc_block_invariance():
+    """ADC grouping is 16-row-aligned so any 128-multiple K blocking agrees."""
+    key = jax.random.PRNGKey(4)
+    x_q = jax.random.randint(key, (32, 512), -64, 64, jnp.int32).astype(jnp.int8)
+    w_q = jax.random.randint(key, (512, 64), -64, 64, jnp.int32).astype(jnp.int8)
+    cfg = PIMConfig(adc_mode="quantized")
+    y1 = pim_matmul_int_pallas(x_q, w_q, cfg, block_k=128, interpret=True)
+    y2 = pim_matmul_int_pallas(x_q, w_q, cfg, block_k=256, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_ops_pim_matmul_wrapper():
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (4, 10, 256))
+    w = jax.random.normal(key, (256, 128)) * 0.05
+    from repro.core import pim as core_pim
+    cfg = PIMConfig()
+    w_q, w_scale = core_pim.quantize_weights(w, cfg)
+    y = ops.pim_matmul(x, w_q, w_scale, cfg, out_dtype=jnp.float32)
+    r = core_pim.pim_matmul(x.reshape(-1, 256), w_q, w_scale, cfg)
+    np.testing.assert_allclose(np.asarray(y).reshape(-1, 128), np.asarray(r),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# lut_softmax
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(4, 128), (10, 512), (3, 1000), (1, 2048)])
+def test_lut_softmax_matches_oracle(shape):
+    R, S = shape
+    key = jax.random.PRNGKey(R * 31 + S)
+    s = jnp.clip(jnp.round(jax.random.normal(key, (R, S)) * 32), -128, 127
+                 ).astype(jnp.int32)
+    mask = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.9, (R, S))
+    c_k = lut_softmax_pallas(s, mask, interpret=True)
+    c_r = ref.lut_softmax_ref(s, mask, LUTSoftmaxConfig())
+    assert int(jnp.max(jnp.abs(c_k - c_r))) <= 1  # chunked-sum 1 LSB slack
+
+
+def test_lut_softmax_int8_input_dtype():
+    key = jax.random.PRNGKey(7)
+    s8 = jax.random.randint(key, (4, 256), -128, 128, jnp.int32).astype(jnp.int8)
+    mask = jnp.ones((4, 256), bool)
+    c_k = lut_softmax_pallas(s8, mask, interpret=True)
+    c_r = ref.lut_softmax_ref(s8.astype(jnp.int32), mask, LUTSoftmaxConfig())
+    assert int(jnp.max(jnp.abs(c_k - c_r))) <= 1
+
+
+def test_lut_softmax_all_masked_row():
+    s = jnp.zeros((2, 128), jnp.int32)
+    mask = jnp.zeros((2, 128), bool).at[0].set(True)
+    c = lut_softmax_pallas(s, mask, interpret=True)
+    assert int(c[1].max()) == 0          # fully-masked row -> all-zero probs
+    assert int(c[0].sum()) > 0
+
+
+def test_ops_lut_softmax_leading_dims():
+    key = jax.random.PRNGKey(8)
+    s = jax.random.randint(key, (2, 3, 4, 128), -128, 128, jnp.int32)
+    mask = jnp.ones(s.shape, bool)
+    c = ops.lut_softmax(s, mask)
+    assert c.shape == s.shape
+    c_r = ref.lut_softmax_ref(s.reshape(-1, 128), mask.reshape(-1, 128),
+                              LUTSoftmaxConfig())
+    assert int(jnp.max(jnp.abs(c.reshape(-1, 128) - c_r))) <= 1
+
+
+# ---------------------------------------------------------------------------
+# fused pim attention
+# ---------------------------------------------------------------------------
+def _setup_attn(key, B, Sq, Sk, H, Hkv, Dh, scale=0.5):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, Sq, H, Dh)) * scale
+    k = jax.random.normal(k2, (B, Sk, Hkv, Dh)) * scale
+    v = jax.random.normal(k3, (B, Sk, Hkv, Dh)) * scale
+    cache = attn.cache_write(attn.init_kv_cache(B, Sk, Hkv, Dh), k, v, 0,
+                             PIMConfig())
+    return q, k, v, cache
+
+
+def _kernel_layout(q, cache, B, Sq, Sk, H, Hkv, Dh):
+    q_scale = quant.symmetric_max_scale(q, 8, axis=-1)
+    q_q = quant.quantize(q, q_scale, 8).transpose(0, 2, 1, 3).reshape(B * H, Sq, Dh)
+    qs = q_scale[..., 0].transpose(0, 2, 1).reshape(B * H, Sq)
+    k_q = cache.k_q.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, Dh)
+    v_q = cache.v_q.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, Dh)
+    ks = cache.k_scale.transpose(0, 2, 1).reshape(B * Hkv, Sk)
+    vs = cache.v_scale.transpose(0, 2, 1).reshape(B * Hkv, Sk)
+    return q_q, qs, k_q, ks, v_q, vs
+
+
+@pytest.mark.parametrize("dims", [
+    (1, 16, 16, 2, 2, 32),    # MHA square
+    (2, 32, 64, 4, 2, 64),    # GQA, kv longer than q
+    (1, 1, 96, 4, 1, 128),    # decode: single query, MQA
+    (1, 8, 300, 2, 1, 64),    # non-multiple kv length
+])
+def test_fused_attention_matches_oracle(dims):
+    B, Sq, Sk, H, Hkv, Dh = dims
+    q, k, v, cache = _setup_attn(jax.random.PRNGKey(sum(dims)), *dims)
+    off = Sk - Sq
+    o = ops.pim_flash_attention(q, cache, q_offset=off, out_dtype=jnp.float32)
+    q_q, qs, k_q, ks, v_q, vs = _kernel_layout(q, cache, B, Sq, Sk, H, Hkv, Dh)
+    o_r = ref.pim_attention_ref(q_q, qs, k_q, ks, v_q, vs, off, Sk)
+    o_r = o_r.reshape(B, H, Sq, Dh).transpose(0, 2, 1, 3)
+    rel = jnp.linalg.norm(o - o_r) / (jnp.linalg.norm(o_r) + 1e-9)
+    assert float(rel) < 5e-3  # online-vs-global-max LUT rescale rounding
+
+
+def test_fused_attention_close_to_fp():
+    B, Sq, Sk, H, Hkv, Dh = 2, 32, 64, 4, 2, 64
+    q, k, v, cache = _setup_attn(jax.random.PRNGKey(0), B, Sq, Sk, H, Hkv, Dh)
+    o = ops.pim_flash_attention(q, cache, q_offset=Sk - Sq, out_dtype=jnp.float32)
+    o_fp = attn.fp_attention(q, k, v, Sk - Sq)
+    rel = jnp.linalg.norm(o - o_fp.astype(jnp.float32)) / jnp.linalg.norm(
+        o_fp.astype(jnp.float32))
+    assert float(rel) < 0.06
+
+
+def test_fused_attention_causality():
+    B, Sq, Sk, H, Hkv, Dh = 1, 16, 16, 2, 1, 32
+    q, k, v, cache = _setup_attn(jax.random.PRNGKey(1), B, Sq, Sk, H, Hkv, Dh)
+    o1 = ops.pim_flash_attention(q, cache, 0, out_dtype=jnp.float32)
+    k2 = k.at[:, 10:].mul(-3.0)
+    v2 = v.at[:, 10:].add(5.0)
+    cache2 = attn.cache_write(attn.init_kv_cache(B, Sk, Hkv, Dh), k2, v2, 0,
+                              PIMConfig())
+    o2 = ops.pim_flash_attention(q, cache2, 0, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(o1[:, :10]), np.asarray(o2[:, :10]),
+                               atol=1e-6)
+
+
+def test_fused_attention_window_matches_fp_mask():
+    B, Sq, Sk, H, Hkv, Dh = 1, 32, 32, 2, 2, 32
+    q, k, v, cache = _setup_attn(jax.random.PRNGKey(2), B, Sq, Sk, H, Hkv, Dh)
+    o = ops.pim_flash_attention(q, cache, 0, window=8, out_dtype=jnp.float32)
+    o_fp = attn.fp_attention(q, k, v, 0, window=8)
+    rel = jnp.linalg.norm(o - o_fp.astype(jnp.float32)) / jnp.linalg.norm(
+        o_fp.astype(jnp.float32))
+    assert float(rel) < 0.06
+
+
+def test_fused_attention_respects_cache_length():
+    """Tokens past cache.length must not contribute."""
+    B, Sq, Sk, H, Hkv, Dh = 1, 4, 64, 2, 2, 32
+    q, k, v, _ = _setup_attn(jax.random.PRNGKey(3), B, Sq, Sk, H, Hkv, Dh)
+    cache = attn.init_kv_cache(B, Sk, Hkv, Dh)
+    cache = attn.cache_write(cache, k[:, :20], v[:, :20], 0, PIMConfig())
+    o = ops.pim_flash_attention(q, cache, q_offset=16, out_dtype=jnp.float32)
+    o_fp = attn.fp_attention(q, k[:, :20], v[:, :20], 16)
+    rel = jnp.linalg.norm(o - o_fp.astype(jnp.float32)) / jnp.linalg.norm(
+        o_fp.astype(jnp.float32))
+    assert float(rel) < 0.06
+
+
+def test_fused_attention_block_shape_invariance():
+    B, Sq, Sk, H, Hkv, Dh = 1, 64, 128, 2, 1, 64
+    q, _, _, cache = _setup_attn(jax.random.PRNGKey(4), B, Sq, Sk, H, Hkv, Dh)
+    q_q, qs, k_q, ks, v_q, vs = _kernel_layout(q, cache, B, Sq, Sk, H, Hkv, Dh)
+    o1 = pim_attention_pallas(q_q, qs, k_q, ks, v_q, vs,
+                              jnp.int32(Sk - Sq), cache.length,
+                              block_q=16, block_k=64, interpret=True)
+    o2 = pim_attention_pallas(q_q, qs, k_q, ks, v_q, vs,
+                              jnp.int32(Sk - Sq), cache.length,
+                              block_q=32, block_k=128, interpret=True)
+    rel = jnp.linalg.norm(o1 - o2) / (jnp.linalg.norm(o2) + 1e-9)
+    assert float(rel) < 5e-3

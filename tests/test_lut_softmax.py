@@ -1,0 +1,97 @@
+"""Unit tests for the LUT softmax (paper §3.4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LUTSoftmaxConfig
+from repro.core import lut_softmax as ls
+
+
+def _codes(key, shape, cfg):
+    s = jax.random.normal(key, shape) * 2.0
+    return jnp.clip(jnp.round(s / cfg.score_scale), -128, 127).astype(jnp.int32)
+
+
+def test_table_shape_and_range():
+    cfg = LUTSoftmaxConfig()
+    table, frac = ls.build_exp_table(cfg)
+    assert table.shape == (256,)
+    assert int(table.max()) <= (1 << cfg.table_bits) - 1
+    assert int(table.min()) >= 0
+    # shifted mode: entry 0 is exp(0) = 1.0 in Q1.15
+    assert int(table[0]) == 1 << cfg.table_frac_bits
+
+
+def test_table_paper_mode_monotone():
+    cfg = LUTSoftmaxConfig(mode="paper", score_scale=1 / 32)
+    table, frac = ls.build_exp_table(cfg)
+    assert table.shape == (256,)
+    assert bool(jnp.all(jnp.diff(table) >= 0))  # exp is increasing in raw byte
+
+
+def test_probabilities_sum_to_one_within_lsb():
+    cfg = LUTSoftmaxConfig()
+    codes = _codes(jax.random.PRNGKey(0), (16, 256), cfg)
+    probs = ls.lut_softmax(codes, cfg)
+    sums = probs.sum(-1)
+    # floor-divide normalization loses at most n LSBs
+    assert float(sums.max()) <= 1.0 + 1e-6
+    assert float(sums.min()) >= 1.0 - 256 * 2.0 ** -cfg.out_frac_bits - 1e-6
+
+
+@pytest.mark.parametrize("mode,scale", [("shifted", 1 / 16), ("paper", 1 / 32)])
+def test_close_to_fp_softmax(mode, scale):
+    cfg = LUTSoftmaxConfig(mode=mode, score_scale=scale)
+    codes = _codes(jax.random.PRNGKey(1), (8, 64), cfg)
+    probs = ls.lut_softmax(codes, cfg)
+    ref = jax.nn.softmax(codes * cfg.score_scale, axis=-1)
+    assert float(jnp.max(jnp.abs(probs - ref))) < 2e-3
+
+
+def test_shift_invariance_shifted_mode():
+    """softmax(x) == softmax(x + c): exact in shifted mode (max-relative)."""
+    cfg = LUTSoftmaxConfig(mode="shifted")
+    codes = _codes(jax.random.PRNGKey(2), (4, 32), cfg)
+    p1 = ls.lut_softmax_codes(codes, cfg)
+    p2 = ls.lut_softmax_codes(codes + 17, cfg)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+def test_mask_zeroes_probabilities():
+    cfg = LUTSoftmaxConfig()
+    codes = _codes(jax.random.PRNGKey(3), (2, 16), cfg)
+    mask = jnp.arange(16)[None, :] < 9
+    probs = ls.lut_softmax(codes, cfg, mask=mask)
+    assert float(jnp.max(probs[:, 9:])) == 0.0
+    assert float(probs[:, :9].sum(-1).min()) > 0.99
+
+
+def test_onehot_row_saturates_cleanly():
+    """A row dominated by one huge score gives prob ~1 for it, ~0 elsewhere."""
+    cfg = LUTSoftmaxConfig()
+    codes = jnp.full((1, 32), -128, jnp.int32).at[0, 5].set(127)
+    probs = ls.lut_softmax(codes, cfg)
+    assert float(probs[0, 5]) > 0.999
+    assert float(jnp.delete(probs[0], 5, axis=0).max()) < 1e-3
+
+
+def test_probs_to_uint8():
+    cfg = LUTSoftmaxConfig()
+    codes = ls.lut_softmax_codes(
+        _codes(jax.random.PRNGKey(4), (4, 64), cfg), cfg
+    )
+    p8 = ls.probs_to_uint8(codes, cfg)
+    assert int(p8.min()) >= 0 and int(p8.max()) <= 255
+    # top-8-bit truncation: |p8/256 - p16/65536| < 1/256
+    diff = jnp.abs(p8 / 256.0 - codes / 65536.0)
+    assert float(diff.max()) < 1 / 256 + 1e-7
+
+
+def test_long_row_accumulator():
+    """32k-wide rows: the wide-accumulator model must not overflow/NaN."""
+    cfg = LUTSoftmaxConfig()
+    codes = jnp.zeros((1, 32768), jnp.int32)  # all equal -> uniform
+    probs = ls.lut_softmax(codes, cfg)
+    assert bool(jnp.all(jnp.isfinite(probs)))
+    np.testing.assert_allclose(np.asarray(probs), 1 / 32768, atol=2.0 ** -16)

@@ -1,0 +1,139 @@
+"""Unit tests for the PIM macro behavioral model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, PIMConfig
+from repro.core import pim, quant
+
+
+def test_ideal_matches_int32_matmul():
+    key = jax.random.PRNGKey(0)
+    x_q = jax.random.randint(key, (8, 200), -128, 128, jnp.int32).astype(jnp.int8)
+    w_q = jax.random.randint(key, (200, 96), -128, 128, jnp.int32).astype(jnp.int8)
+    y = pim.pim_matmul_int(x_q, w_q, PIMConfig(adc_mode="ideal"))
+    ref = x_q.astype(jnp.int32) @ w_q.astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref).astype(np.float32))
+
+
+def test_quantized_adc_reduces_to_ideal_with_unit_step():
+    """With an ADC step of exactly 1 LSB and enough range, ADC mode is exact."""
+    key = jax.random.PRNGKey(1)
+    x_q = jax.random.randint(key, (4, 64), -8, 8, jnp.int32).astype(jnp.int8)
+    w_q = jax.random.randint(key, (64, 32), -8, 8, jnp.int32).astype(jnp.int8)
+    # choose adc_range_frac so adc_full_range == 2^(adc_bits-1)  =>  step == 1
+    bits = 18
+    frac = float(1 << (bits - 1)) / (16 * 127 * 127)
+    cfg = PIMConfig(adc_mode="quantized", adc_bits=bits, adc_range_frac=frac)
+    assert abs(pim.adc_full_range(cfg) - float(1 << (bits - 1))) < 1e-6
+    y = pim.pim_matmul_int(x_q, w_q, cfg)
+    ref = x_q.astype(jnp.int32) @ w_q.astype(jnp.int32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-5)
+
+
+def test_quantized_adc_error_bounded_by_step():
+    key = jax.random.PRNGKey(2)
+    x_q = jax.random.randint(key, (4, 128), -32, 32, jnp.int32).astype(jnp.int8)
+    w_q = jax.random.randint(key, (128, 16), -32, 32, jnp.int32).astype(jnp.int8)
+    cfg = PIMConfig(adc_mode="quantized", adc_bits=6, adc_range_frac=1.0)
+    y = pim.pim_matmul_int(x_q, w_q, cfg)
+    ref = x_q.astype(jnp.int32) @ w_q.astype(jnp.int32)
+    # per-group error <= step/2, groups = 128/16 = 8 (no saturation at frac=1)
+    step = pim.adc_full_range(cfg) / (1 << (cfg.adc_bits - 1))
+    bound = 8 * step / 2 + 1e-5
+    assert float(jnp.max(jnp.abs(y - ref))) <= bound
+
+
+def test_pim_linear_close_to_fp():
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (16, 256))
+    p = pim.pim_linear_init(key, 256, 128)
+    y = pim.pim_linear_apply(p, x, PIMConfig())
+    ref = x @ p["w"]
+    rel = jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref)
+    assert float(rel) < 0.02  # two int8 quantizations
+
+
+def test_pim_linear_bias_digital():
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (4, 64))
+    p = pim.pim_linear_init(key, 64, 32, bias=True)
+    p["b"] = jnp.full((32,), 5.0)
+    y = pim.pim_linear_apply(p, x, PIMConfig())
+    y0 = pim.pim_linear_apply({"w": p["w"]}, x, PIMConfig())
+    np.testing.assert_allclose(np.asarray(y - y0), 5.0, rtol=1e-6)
+
+
+def test_pim_linear_gradients_are_fp():
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (8, 64))
+    w = jax.random.normal(key, (64, 32)) * 0.1
+
+    def loss_pim(w):
+        return jnp.sum(pim.pim_linear_apply({"w": w}, x, PIMConfig()) ** 2)
+
+    g = jax.grad(loss_pim)(w)
+    # straight-through backward: compare against the pure-fp loss gradient
+    y = pim.pim_linear_apply({"w": w}, x, PIMConfig())
+    g_ref = x.T @ (2 * y)  # d/dw of sum(y^2) with y treated as x@w
+    rel = jnp.linalg.norm(g - g_ref) / jnp.linalg.norm(g_ref)
+    assert float(rel) < 1e-5
+
+
+def test_deploy_params_roundtrip():
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (4, 128))
+    p = pim.pim_linear_init(key, 128, 64, bias=True)
+    cfg = PIMConfig()
+    dep = pim.deploy_params(p, cfg)
+    assert dep["w_q"].dtype == jnp.int8
+    y_qat = pim.pim_linear_apply(p, x, cfg)
+    y_dep = pim.pim_linear_apply(dep, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_qat), np.asarray(y_dep), rtol=1e-6, atol=1e-6)
+
+
+def test_per_channel_scales_shape():
+    w = jax.random.normal(jax.random.PRNGKey(7), (64, 32))
+    w_q, scale = pim.quantize_weights(w, PIMConfig(per_channel=True))
+    assert scale.shape == (1, 32)
+    w_q2, scale2 = pim.quantize_weights(w, PIMConfig(per_channel=False))
+    assert scale2.shape == ()
+
+
+def test_padding_of_nonaligned_k():
+    """K not a multiple of the word-line group is zero-padded (exactness)."""
+    key = jax.random.PRNGKey(8)
+    x_q = jax.random.randint(key, (2, 77), -16, 16, jnp.int32).astype(jnp.int8)
+    w_q = jax.random.randint(key, (77, 19), -16, 16, jnp.int32).astype(jnp.int8)
+    y = pim.pim_matmul_int(x_q, w_q, PIMConfig())
+    ref = x_q.astype(jnp.int32) @ w_q.astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref).astype(np.float32))
+
+
+# --- cycle model (paper §3.2: 64 cycles per 128x128 MVM) -------------------
+def test_macro_mvm_is_64_cycles():
+    cfg = PIMConfig()
+    assert cfg.steps_per_mvm == 64
+    assert pim.mvm_cycles(128, 128, cfg) == 64
+
+
+def test_mvm_cycles_scale_with_row_tiles():
+    cfg = PIMConfig()
+    assert pim.mvm_cycles(256, 128, cfg) == 65  # +1 adder-tree stage
+
+
+def test_macro_grid():
+    assert pim.macro_grid(4096, 4096, PIMConfig()) == (32, 32)
+    assert pim.macro_grid(100, 100, PIMConfig()) == (1, 1)
+
+
+def test_lego_tile_report():
+    from repro.core.lego import tile_report
+    cfg = ModelConfig(name="t", d_model=4096, num_heads=32, num_kv_heads=8,
+                      head_dim=128, d_ff=14336)
+    r = tile_report(cfg, 2048)
+    # Input process: WQ 32x32 + WK/WV 32x8 each + WO 32x32 macros
+    assert r.macros_input_process == 32 * 32 + 2 * 32 * 8 + 32 * 32
+    assert r.pipeline_speedup > 1.0
+    assert r.serial_cycles_per_token >= r.pipelined_cycles_per_token

@@ -1,0 +1,116 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import LUTSoftmaxConfig, PIMConfig
+from repro.core import lut_softmax as ls
+from repro.core import pim, quant
+
+_settings = dict(max_examples=25, deadline=None)
+
+
+@given(st.integers(1, 16), st.integers(1, 200), st.integers(1, 64),
+       st.integers(0, 2**31 - 1))
+@settings(**_settings)
+def test_pim_matmul_ideal_exact(m, k, n, seed):
+    """Ideal-ADC PIM matmul == exact int32 matmul for ANY shape."""
+    key = jax.random.PRNGKey(seed)
+    kx, kw = jax.random.split(key)
+    x_q = jax.random.randint(kx, (m, k), -128, 128, jnp.int32).astype(jnp.int8)
+    w_q = jax.random.randint(kw, (k, n), -128, 128, jnp.int32).astype(jnp.int8)
+    y = pim.pim_matmul_int(x_q, w_q, PIMConfig())
+    ref = x_q.astype(jnp.int32) @ w_q.astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref))
+
+
+@given(st.integers(2, 8), st.floats(0.01, 10.0), st.integers(0, 2**31 - 1))
+@settings(**_settings)
+def test_quantization_error_bound(bits, scale_mag, seed):
+    """|x - dequant(quant(x))| <= scale/2 everywhere (no saturation)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.uniform(key, (64,), minval=-scale_mag, maxval=scale_mag)
+    q, scale = quant.quantize_symmetric(x, bits, axis=None)
+    err = jnp.abs(x - quant.dequantize(q, scale))
+    assert float(err.max()) <= float(scale) / 2 + 1e-6
+
+
+@given(st.integers(1, 6), st.integers(2, 300), st.integers(0, 2**31 - 1))
+@settings(**_settings)
+def test_lut_softmax_simplex(rows, width, seed):
+    """LUT softmax outputs lie in the probability simplex (within LSBs)."""
+    cfg = LUTSoftmaxConfig()
+    key = jax.random.PRNGKey(seed)
+    codes = jax.random.randint(key, (rows, width), -128, 128, jnp.int32)
+    p = ls.lut_softmax(codes, cfg)
+    assert float(p.min()) >= 0.0
+    sums = p.sum(-1)
+    assert float(sums.max()) <= 1.0 + 1e-6
+    assert float(sums.min()) >= 1.0 - width * 2.0 ** -cfg.out_frac_bits - 1e-6
+
+
+@given(st.integers(-50, 50), st.integers(0, 2**31 - 1))
+@settings(**_settings)
+def test_lut_softmax_shift_invariance(shift, seed):
+    """Shifted-mode LUT softmax is exactly invariant to score shifts that
+    stay in range (softmax(x) == softmax(x+c))."""
+    cfg = LUTSoftmaxConfig()
+    key = jax.random.PRNGKey(seed)
+    codes = jax.random.randint(key, (2, 32), -60, 60, jnp.int32)
+    a = ls.lut_softmax_codes(codes, cfg)
+    b = ls.lut_softmax_codes(codes + shift, cfg)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.integers(2, 6), st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_adc_monotone_bounded(bits, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jnp.sort(jax.random.uniform(key, (100,), minval=-5000, maxval=5000))
+    y = quant.adc_transfer(x, bits, 1024.0)
+    assert bool(jnp.all(jnp.diff(y) >= 0))               # monotone
+    half = 1 << (bits - 1)
+    step = 1024.0 / half
+    assert float(y.max()) <= (half - 1) * step + 1e-6    # saturates
+    assert float(y.min()) >= -half * step - 1e-6
+
+
+@given(st.integers(1, 3), st.integers(4, 32), st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_error_feedback_converges(b, n, seed):
+    """Sum of EF-compressed gradients -> sum of true gradients."""
+    from repro.optim import compression
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (n,)) * 0.1
+    r = jnp.zeros((n,))
+    total = jnp.zeros((n,))
+    steps = 30
+    for _ in range(steps):
+        q, scale, r = compression.compress_leaf(g, r)
+        total += compression.decompress_leaf(q, scale)
+    # residual bounded => average error -> 0 at rate 1/steps
+    err = jnp.abs(total / steps - g).max()
+    assert float(err) <= float(jnp.abs(r).max()) / steps + 1e-6
+
+
+@given(st.integers(2, 5), st.integers(8, 64), st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_kv_cache_write_idempotent_region(heads_pow, seq, seed):
+    """Writing K/V then reading back the quantized codes is deterministic
+    and independent of what was in the cache before."""
+    from repro.core import attention as A
+    H = 2
+    Dh = 16
+    key = jax.random.PRNGKey(seed)
+    k = jax.random.normal(key, (1, seq, H, Dh))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (1, seq, H, Dh))
+    c1 = A.cache_write(A.init_kv_cache(1, seq, H, Dh), k, v, 0, PIMConfig())
+    dirty = A.KVCache(
+        k_q=jnp.ones_like(c1.k_q), v_q=jnp.ones_like(c1.v_q),
+        k_scale=jnp.ones_like(c1.k_scale), v_scale=jnp.ones_like(c1.v_scale),
+        length=jnp.int32(0), positions=c1.positions)
+    c2 = A.cache_write(dirty, k, v, 0, PIMConfig())
+    np.testing.assert_array_equal(np.asarray(c1.k_q), np.asarray(c2.k_q))
+    np.testing.assert_array_equal(np.asarray(c1.v_scale),
+                                  np.asarray(c2.v_scale))

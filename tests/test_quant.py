@@ -1,0 +1,86 @@
+"""Unit tests for quantization primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import PIMConfig
+from repro.core import quant
+
+
+def test_quantize_roundtrip_bound():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (128, 64))
+    q, scale = quant.quantize_symmetric(x, 8, axis=-1)
+    x_hat = quant.dequantize(q, scale)
+    # round-to-nearest error is at most scale/2 elementwise
+    assert jnp.all(jnp.abs(x - x_hat) <= scale / 2 + 1e-7)
+
+
+def test_quantize_saturation():
+    x = jnp.array([1e9, -1e9, 0.0])
+    q = quant.quantize(x, jnp.float32(1.0), 8)
+    assert q[0] == 127 and q[1] == -128 and q[2] == 0
+
+
+def test_quantize_dtype():
+    x = jnp.ones((4,))
+    q = quant.quantize(x, jnp.float32(0.5), 8)
+    assert q.dtype == jnp.int8
+
+
+def test_adc_transfer_identity_on_grid():
+    cfg = PIMConfig()
+    half = 1 << (cfg.adc_bits - 1)
+    rng_ = 1024.0
+    step = rng_ / half
+    codes = jnp.arange(-half, half)
+    vals = codes * step
+    out = quant.adc_transfer(vals, cfg.adc_bits, rng_)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(vals), rtol=0, atol=0)
+
+
+def test_adc_transfer_saturates():
+    out = quant.adc_transfer(jnp.array([1e9, -1e9]), 6, 1024.0)
+    assert out[0] == 31 * 32.0          # +full-scale-1 code
+    assert out[1] == -32 * 32.0         # -full-scale code
+
+
+def test_adc_transfer_monotonic():
+    x = jnp.linspace(-2000, 2000, 1001)
+    y = quant.adc_transfer(x, 6, 1024.0)
+    assert jnp.all(jnp.diff(y) >= 0)
+
+
+def test_fixed_point_roundtrip():
+    x = jnp.array([0.0, 0.5, 0.999, 1.5])
+    code = quant.fixed_point(x, 8, 16)
+    back = quant.from_fixed_point(code, 8)
+    assert jnp.max(jnp.abs(back - x)) <= 1 / 512 + 1e-7
+
+
+def test_fixed_point_saturates_unsigned():
+    code = quant.fixed_point(jnp.array([1e6, -1.0]), 8, 16)
+    assert code[0] == (1 << 16) - 1
+    assert code[1] == 0
+
+
+def test_ste_gradient_passthrough():
+    def f(x):
+        q = quant.quantize(x, jnp.float32(0.1), 8).astype(jnp.float32) * 0.1
+        return jnp.sum(quant.ste(x, q) ** 2)
+
+    x = jnp.array([0.33, -0.71])
+    g = jax.grad(f)(x)
+    # forward value is the quantized q; straight-through passes d(ste)/dx = 1,
+    # so grad = 2 * q (NOT 2 * x)
+    q = np.round(np.asarray(x) / 0.1) * 0.1
+    np.testing.assert_allclose(np.asarray(g), 2 * q, rtol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [4, 6, 8])
+def test_symmetric_scale_uses_qmax(bits):
+    x = jnp.array([[-3.0, 1.0, 2.0]])
+    scale = quant.symmetric_max_scale(x, bits, axis=-1)
+    qmax = (1 << (bits - 1)) - 1
+    np.testing.assert_allclose(float(scale[0, 0]), 3.0 / qmax, rtol=1e-6)

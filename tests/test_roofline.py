@@ -1,0 +1,102 @@
+"""Roofline HLO-parser tests: trip weighting, dot FLOPs, collective bytes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import analysis as R
+
+
+def _compile(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile()
+
+
+def test_dot_flops_exact_no_loops():
+    def f(a, b):
+        return a @ b
+
+    c = _compile(f, jax.ShapeDtypeStruct((64, 128), jnp.float32),
+                 jax.ShapeDtypeStruct((128, 32), jnp.float32))
+    cost = R.analyze(c.as_text())
+    assert cost.total_flops == pytest.approx(2 * 64 * 128 * 32, rel=0.01)
+
+
+def test_trip_weighting_of_scan():
+    def f(w, x):
+        def body(x, wi):
+            return jnp.tanh(x @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    c = _compile(f, jax.ShapeDtypeStruct((10, 64, 64), jnp.float32),
+                 jax.ShapeDtypeStruct((8, 64), jnp.float32))
+    cost = R.analyze(c.as_text())
+    # 10 trips x 2*8*64*64
+    assert cost.total_flops == pytest.approx(10 * 2 * 8 * 64 * 64, rel=0.05)
+    assert cost.trip_weight_ratio == pytest.approx(10, rel=0.05)
+
+
+def test_nested_scan_weighting():
+    def f(w, x):
+        def outer(x, _):
+            def inner(x, wi):
+                return jnp.tanh(x @ wi), None
+            y, _ = jax.lax.scan(inner, x, w)
+            return y, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    c = _compile(f, jax.ShapeDtypeStruct((5, 32, 32), jnp.float32),
+                 jax.ShapeDtypeStruct((4, 32), jnp.float32))
+    cost = R.analyze(c.as_text())
+    assert cost.total_flops == pytest.approx(15 * 2 * 4 * 32 * 32, rel=0.05)
+
+
+def test_int_vs_fp_dot_split():
+    def f(a, b):
+        return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.int32)
+
+    c = _compile(f, jax.ShapeDtypeStruct((32, 64), jnp.int8),
+                 jax.ShapeDtypeStruct((64, 16), jnp.int8))
+    cost = R.analyze(c.as_text())
+    assert cost.int_flops > 0
+    assert cost.flops == 0
+
+
+def test_traffic_counts_scan_stacking_once():
+    """A scan that stacks outputs writes the stacked buffer once per loop,
+    not once per trip."""
+    def f(x):
+        def body(c, _):
+            return c * 1.5, c
+        _, ys = jax.lax.scan(body, x, None, length=100)
+        return ys
+
+    c = _compile(f, jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    cost = R.analyze(c.as_text())
+    stacked = 100 * 64 * 64 * 4
+    # traffic should be O(stacked buffer), not 100x it
+    assert cost.traffic_bytes < 5 * stacked
+
+
+def test_roofline_terms_dominance():
+    hlo = R.HLOCost(flops=197e12, int_flops=0.0,
+                    collective_bytes={"all-reduce": 1e9},
+                    trip_weight_ratio=1.0, traffic_bytes=819e9)
+    roof = R.roofline_terms(hlo, 0.0, model_flops_per_device=100e12)
+    assert roof.compute_s == pytest.approx(1.0)
+    assert roof.memory_s == pytest.approx(1.0)
+    assert roof.dominant in ("compute", "memory")
+    assert 0 < roof.roofline_fraction <= 1.0
+
+
+def test_model_flops_shapes():
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES
+    cfg = get_config("internlm2-1.8b")
+    tr = R.model_flops_per_step(cfg, SHAPES["train_4k"], 256)
+    de = R.model_flops_per_step(cfg, SHAPES["decode_32k"], 256)
+    assert tr > 1000 * de            # train step >> one decode token
+    b = R.model_bytes_per_step(cfg, SHAPES["decode_32k"], 256)
+    assert b > cfg.active_param_count() / 256   # weights + KV
