@@ -1,0 +1,125 @@
+"""Decode-path benchmark: scan-fused serving throughput + split-K pruning.
+
+Two measurements:
+
+  1. tokens/sec of the scan-fused `serve_lib.generate` (one `lax.scan`
+     device program, donated cache) vs a per-token Python dispatch loop over
+     `make_decode_step` — the serving-loop half of the ISSUE perf work.
+     CPU-sized smoke model; the ratio (dispatch overhead removed), not the
+     absolute number, is the tracked signal.
+  2. per-token KV-block iteration counts of the split-K decode kernel
+     against a padded max_len cache: decode must touch ceil(kv_len/block_k)
+     partitions independent of max_len (dense = max_len/block_k).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import PIMConfig
+from repro.core import attention as attn
+from repro.data import pipeline as data
+from repro.kernels.ops import kernel_attention_layout
+from repro.kernels.pim_decode import pim_decode_pallas
+from repro.models.model_zoo import build_model
+from repro.runtime import serve_lib
+
+
+def _time_scan_fused(model, params, prompt, new_tokens, max_len):
+    prefill = serve_lib.make_prefill_step(model)
+    B, S = prompt["tokens"].shape
+    decode = serve_lib.make_generate_fn(model, S, new_tokens)
+
+    def go():
+        cache = model.init_cache(B, max_len)
+        logits, cache, enc_out = prefill(params, prompt, cache)
+        tok0 = serve_lib.sample_logits(logits, None)[:, None]
+        out = decode(params, tok0, cache, jax.random.PRNGKey(0), enc_out)
+        jax.block_until_ready(out)
+        return out
+    go()                                   # compile
+    t0 = time.time()
+    out = go()
+    return out, time.time() - t0
+
+
+def _time_per_token_loop(model, params, prompt, new_tokens, max_len):
+    prefill = serve_lib.make_prefill_step(model)
+    decode = serve_lib.make_decode_step(model)
+    B, S = prompt["tokens"].shape
+
+    def go():
+        cache = model.init_cache(B, max_len)
+        logits, cache, enc_out = prefill(params, prompt, cache)
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+        toks = []
+        for t in range(new_tokens):
+            toks.append(tok)
+            logits, cache = decode(params, {"tokens": tok}, cache,
+                                   jnp.int32(S + t), enc_out)
+            tok = jnp.argmax(logits, axis=-1)[:, None]
+        out = jnp.concatenate(toks, axis=1)
+        jax.block_until_ready(out)
+        return out
+    go()                                   # compile
+    t0 = time.time()
+    out = go()
+    return out, time.time() - t0
+
+
+def run():
+    print("\n== decode bench (scan-fused loop + split-K iteration counts) ==")
+    metrics = {}
+
+    # ---- 1. serving loop throughput ---------------------------------------
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S, T, max_len = 2, 8, 16, 32
+    prompt = {"tokens": jnp.asarray(data.lm_batch(0, B, S, cfg.vocab_size))}
+    out_s, dt_s = _time_scan_fused(model, params, prompt, T, max_len)
+    out_l, dt_l = _time_per_token_loop(model, params, prompt, T, max_len)
+    assert out_s.shape == out_l.shape == (B, T)
+    tps_s = B * T / dt_s
+    tps_l = B * T / dt_l
+    print(f"scan-fused generate : {dt_s:6.2f}s  {tps_s:8.1f} tok/s")
+    print(f"per-token loop      : {dt_l:6.2f}s  {tps_l:8.1f} tok/s")
+    print(f"speedup             : {dt_l / dt_s:6.2f}x")
+    metrics["scan_fused_tokens_per_sec"] = round(tps_s, 2)
+    metrics["per_token_loop_tokens_per_sec"] = round(tps_l, 2)
+    metrics["scan_fusion_speedup"] = round(dt_l / dt_s, 3)
+
+    # ---- 2. split-K decode: blocks touched per token ----------------------
+    B, H, Hkv, Dh, max_len, bk = 1, 4, 2, 64, 512, 64
+    dense = max_len // bk
+    key = jax.random.PRNGKey(1)
+    print(f"\nsplit-K decode blocks/token (cache max_len={max_len}, "
+          f"block_k={bk}, dense={dense}):")
+    for kv_len in (64, 130, 256, 500):
+        k1, k2, k3 = jax.random.split(jax.random.fold_in(key, kv_len), 3)
+        q = jax.random.normal(k1, (B, 1, H, Dh)) * 0.5
+        kk = jax.random.normal(k2, (B, kv_len, Hkv, Dh)) * 0.5
+        vv = jax.random.normal(k3, (B, kv_len, Hkv, Dh)) * 0.5
+        cache = attn.cache_write(attn.init_kv_cache(B, max_len, Hkv, Dh),
+                                 kk, vv, 0, PIMConfig())
+        q_q, qs, k_q, ks, v_q, vs = kernel_attention_layout(q, cache)
+        _, iters = pim_decode_pallas(q_q, qs, k_q, ks, v_q, vs,
+                                     jnp.int32(kv_len - 1), cache.length,
+                                     block_k=bk, interpret=True,
+                                     return_iters=True)
+        per_head = int(iters.sum()) // (B * Hkv)
+        exp = -(-kv_len // bk)
+        ok = "ok" if per_head == exp else "MISMATCH"
+        print(f"  kv_len={kv_len:4d}: {per_head}/{dense} blocks "
+              f"(expected {exp}) {ok}")
+        metrics[f"decode_blocks_kv{kv_len}"] = per_head
+        assert per_head == exp
+    metrics["decode_blocks_dense"] = dense
+    return metrics
+
+
+if __name__ == "__main__":
+    run()

@@ -3,7 +3,8 @@
 Wall-times here are *interpret-mode* (Python-emulated grid) — they validate
 kernel structure, not TPU speed; the TPU performance story lives in the
 roofline analysis.  We also report the analytic MXU utilization of the
-chosen BlockSpecs (macro == 128x128 MXU tile alignment).
+chosen BlockSpecs (macro == 128x128 MXU tile alignment) and, for the fused
+attention kernel, the grid-pruning iteration counts (pruned vs dense).
 """
 from __future__ import annotations
 
@@ -19,6 +20,7 @@ from repro.kernels.pim_matmul import pim_matmul_int_pallas
 
 def run():
     print("\n== Pallas kernel bench (interpret mode: correctness + tiling) ==")
+    metrics = {}
     key = jax.random.PRNGKey(0)
     print(f"{'kernel/shape':38s} {'max|err|':>9s} {'blocks':>12s} "
           f"{'mxu util':>9s}")
@@ -37,6 +39,7 @@ def run():
             -(-M // 128) * 128 * -(-K // 128) * 128 * -(-N // 128) * 128)
         print(f"{'pim_matmul ' + str((M, K, N)):38s} {err:9.1e} "
               f"{'128x128x128':>12s} {util:9.2f}")
+        metrics[f"pim_matmul_{M}x{K}x{N}_max_err"] = err
     from repro.kernels.lut_softmax import lut_softmax_pallas
     from repro.configs.base import LUTSoftmaxConfig
     s = jax.random.randint(key, (64, 2048), -128, 128, jnp.int32)
@@ -47,7 +50,39 @@ def run():
     err = int(jnp.max(jnp.abs(c - cr)))
     print(f"{'lut_softmax (64,2048)':38s} {err:9d} {'8 rows x row':>12s} "
           f"{'1.00':>9s}   ({time.time() - t0:.1f}s interp)")
-    return True
+    metrics["lut_softmax_max_lsb_err"] = err
+
+    # ---- fused pim attention: parity vs two-pass oracle + pruning probe ----
+    from repro.core import attention as attn
+    from repro.kernels.ops import kernel_attention_layout
+    from repro.kernels.pim_attention import pim_attention_pallas
+
+    B, Sq, Sk, H, Hkv, Dh = 1, 128, 128, 4, 2, 64
+    bq, bk = 32, 32
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, Sq, H, Dh)) * 0.5
+    kk = jax.random.normal(k2, (B, Sk, Hkv, Dh)) * 0.5
+    vv = jax.random.normal(k3, (B, Sk, Hkv, Dh)) * 0.5
+    cache = attn.cache_write(attn.init_kv_cache(B, Sk, Hkv, Dh), kk, vv, 0,
+                             PIMConfig())
+    q_q, qs, k_q, ks, v_q, vs = kernel_attention_layout(q, cache)
+    t0 = time.time()
+    o, iters = pim_attention_pallas(q_q, qs, k_q, ks, v_q, vs, jnp.int32(0),
+                                    cache.length, block_q=bq, block_k=bk,
+                                    interpret=True, return_iters=True)
+    dt = time.time() - t0
+    o_r = ref.pim_attention_ref(q_q, qs, k_q, ks, v_q, vs, 0, Sk)
+    rel = float(jnp.linalg.norm(o - o_r) / (jnp.linalg.norm(o_r) + 1e-9))
+    pruned = int(iters.sum())
+    dense = B * H * (Sq // bq) * (Sk // bk)
+    print(f"{'pim_attention (1,128,128,4h,gqa2)':38s} {rel:9.1e} "
+          f"{f'{pruned}/{dense} it':>12s} {'1.00':>9s}   ({dt:.1f}s interp)")
+    metrics["pim_attention_rel_err"] = rel
+    metrics["pim_attention_iters_pruned"] = pruned
+    metrics["pim_attention_iters_dense"] = dense
+    metrics["pim_attention_prune_ratio"] = round(pruned / dense, 4)
+    metrics["pim_attention_interp_seconds"] = round(dt, 2)
+    return metrics
 
 
 if __name__ == "__main__":

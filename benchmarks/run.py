@@ -2,37 +2,89 @@
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only softmax_accuracy
+  PYTHONPATH=src python -m benchmarks.run --json out.json
+
+Every run also writes a machine-readable `BENCH_kernels.json` (per-bench
+status, wall-time, and whatever metrics dict the bench's run() returned) so
+the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
 
 BENCHES = ("op_breakdown", "pim_cycles", "softmax_accuracy",
            "attention_accuracy", "pipeline_model", "kernel_bench",
-           "roofline_bench")
+           "decode_bench", "roofline_bench")
+
+
+def _jsonable(x):
+    """Best-effort conversion of bench metrics to JSON-safe values
+    (tuple keys -> str, numpy/jax scalars -> float, unknown -> repr)."""
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, (str, int, float, bool)) or x is None:
+        return x
+    try:
+        return float(x)
+    except (TypeError, ValueError):
+        return repr(x)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default="BENCH_kernels.json",
+                    help="path for the machine-readable results (empty = off)")
     args = ap.parse_args(argv)
     names = args.only.split(",") if args.only else BENCHES
     t0 = time.time()
+    report = {}
     failed = []
     for name in names:
+        t = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            t = time.time()
-            mod.run()
-            print(f"[benchmarks] {name} done in {time.time() - t:.1f}s")
+            result = mod.run()
+            entry = {"status": "ok", "seconds": round(time.time() - t, 2)}
+            if isinstance(result, dict):
+                entry["metrics"] = _jsonable(result)
+            print(f"[benchmarks] {name} done in {entry['seconds']:.1f}s")
         except Exception as e:
             import traceback
             traceback.print_exc()
             failed.append((name, repr(e)))
-    print(f"\n[benchmarks] total {time.time() - t0:.1f}s; "
+            entry = {"status": "fail", "seconds": round(time.time() - t, 2),
+                     "error": repr(e)}
+        report[name] = entry
+    total = time.time() - t0
+    if args.json:
+        # merge into an existing results file so a partial --only run
+        # refreshes its own entries without discarding the rest of the
+        # cross-PR trajectory
+        merged = {}
+        try:
+            with open(args.json) as f:
+                merged = json.load(f).get("benches", {})
+        except (OSError, ValueError):
+            pass
+        merged.update(report)
+        n_fail = sum(1 for e in merged.values() if e.get("status") != "ok")
+        payload = {
+            "total_seconds": round(total, 2),
+            "passed": len(merged) - n_fail,
+            "failed": n_fail,
+            "benches": merged,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"[benchmarks] wrote {args.json}")
+    print(f"\n[benchmarks] total {total:.1f}s; "
           f"{len(names) - len(failed)}/{len(names)} passed"
           + (f"; FAILED: {failed}" if failed else ""))
     return 1 if failed else 0

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + interpret-mode kernel parity on CPU.
+# Usage: scripts/ci.sh  (from the repo root)
+set -euo pipefail
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== tier-1 test suite (includes interpret-mode kernel parity) =="
+python -m pytest -x -q
+
+echo "== kernel + decode benches (parity + pruning probes) =="
+python -m benchmarks.run --only kernel_bench,decode_bench --json BENCH_kernels.json

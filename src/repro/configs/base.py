@@ -120,6 +120,10 @@ class ModelConfig:
     num_dense_layers: int = 0      # leading non-MoE layers (deepseek-moe: 1)
     moe: MoEConfig = MoEConfig()
     attn_impl: str = "behavioral"  # behavioral|kernel (serve-path attention)
+    # decode specialization of the kernel path: auto-select the split-K
+    # flash-decode kernel when a serve step has Sq == 1
+    decode_kernel: bool = True
+    decode_block_k: int = 256      # KV partition size of the split-K grid
     remat: str = "block"           # none|block — activation checkpointing
     # PIM integration
     pim: PIMConfig = PIMConfig()

@@ -15,6 +15,7 @@ from repro.configs.base import LUTSoftmaxConfig, PIMConfig
 from repro.core import quant
 from repro.core.attention import KVCache
 from repro.kernels import pim_attention as _attn_k
+from repro.kernels import pim_decode as _dec_k
 from repro.kernels import pim_matmul as _mm_k
 from repro.kernels import lut_softmax as _sm_k
 
@@ -53,6 +54,26 @@ def lut_softmax(
     return codes.reshape(lead + (scores_q.shape[-1],))
 
 
+def kernel_attention_layout(q: jax.Array, cache: KVCache,
+                            input_bits: int = 8):
+    """(B, Sq, H, Dh) float q + KVCache -> the flat head-major int8 operand
+    layout the Pallas attention kernels take: (q_q, q_scale, k_q, k_scale,
+    v_q, v_scale) with q rows (B*H, Sq, ...) and KV rows (B*Hkv, Sk, ...)
+    ordered so that q row bh maps to KV row bh // q_per_kv."""
+    B, Sq, H, Dh = q.shape
+    _, Sk, Hkv, _ = cache.k_q.shape
+    q_scale = quant.symmetric_max_scale(q, input_bits, axis=-1)
+    q_q = quant.quantize(q, q_scale, input_bits)
+    # (B, S, H, D) -> (B*H, S, D)
+    q_q = q_q.transpose(0, 2, 1, 3).reshape(B * H, Sq, Dh)
+    qs = q_scale[..., 0].transpose(0, 2, 1).reshape(B * H, Sq)
+    k_q = cache.k_q.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, Dh)
+    v_q = cache.v_q.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, Dh)
+    ks = cache.k_scale.transpose(0, 2, 1).reshape(B * Hkv, Sk)
+    vs = cache.v_scale.transpose(0, 2, 1).reshape(B * Hkv, Sk)
+    return q_q, qs, k_q, ks, v_q, vs
+
+
 def pim_flash_attention(
     q: jax.Array,              # (B, Sq, H, Dh) float
     cache: KVCache,
@@ -62,23 +83,30 @@ def pim_flash_attention(
     causal: bool = True,
     window: int = 0,
     out_dtype=jnp.bfloat16,
+    decode_kernel: bool = True,
+    decode_block_k: int = 256,
 ) -> jax.Array:
-    """Fused flash-style PIM attention over the int8 KV cache."""
+    """Fused flash-style PIM attention over the int8 KV cache.
+
+    Single-token steps (Sq == 1) auto-dispatch to the split-K flash-decode
+    kernel when `decode_kernel` is set — full grid occupancy across KV
+    partitions instead of one padded q block serializing over the cache.
+    """
     B, Sq, H, Dh = q.shape
-    _, Sk, Hkv, _ = cache.k_q.shape
-    q_scale = quant.symmetric_max_scale(q, pim_cfg.input_bits, axis=-1)
-    q_q = quant.quantize(q, q_scale, pim_cfg.input_bits)
-    # (B, S, H, D) -> (B*H, S, D)
-    q_q = q_q.transpose(0, 2, 1, 3).reshape(B * H, Sq, Dh)
-    qs = q_scale[..., 0].transpose(0, 2, 1).reshape(B * H, Sq)
-    k_q = cache.k_q.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, Dh)
-    v_q = cache.v_q.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, Dh)
-    ks = cache.k_scale.transpose(0, 2, 1).reshape(B * Hkv, Sk)
-    vs = cache.v_scale.transpose(0, 2, 1).reshape(B * Hkv, Sk)
-    o = _attn_k.pim_attention_pallas(
-        q_q, qs, k_q, ks, v_q, vs,
-        jnp.asarray(q_offset, jnp.int32), cache.length,
-        pim_cfg, lut_cfg, causal=causal, window=window,
-        interpret=_interpret(),
-    )
+    q_q, qs, k_q, ks, v_q, vs = kernel_attention_layout(
+        q, cache, pim_cfg.input_bits)
+    if Sq == 1 and decode_kernel:
+        o = _dec_k.pim_decode_pallas(
+            q_q, qs, k_q, ks, v_q, vs,
+            jnp.asarray(q_offset, jnp.int32), cache.length,
+            pim_cfg, lut_cfg, causal=causal, window=window,
+            block_k=decode_block_k, interpret=_interpret(),
+        )
+    else:
+        o = _attn_k.pim_attention_pallas(
+            q_q, qs, k_q, ks, v_q, vs,
+            jnp.asarray(q_offset, jnp.int32), cache.length,
+            pim_cfg, lut_cfg, causal=causal, window=window,
+            interpret=_interpret(),
+        )
     return o.reshape(B, H, Sq, Dh).transpose(0, 2, 1, 3).astype(out_dtype)

@@ -16,6 +16,18 @@ removing the O(S^2) score materialization while keeping the paper's numerics:
 Grid: (batch*heads, Sq/bq, Sk/bk), Sk innermost; running (max, denom, acc)
 live in VMEM scratch.  GQA is handled by index-mapping KV blocks to
 head-group bh // q_per_kv (no materialized KV expansion).
+
+Grid pruning (beyond-paper perf): the scalar-prefetched (q_offset, kv_len)
+let every (q-block, kv-block) grid cell decide whether it can contribute at
+all — blocks entirely above the causal diagonal, beyond the valid cache
+length, or outside the sliding window early-out via `pl.when` before any
+MXU/VPU work.  Causal prefill therefore executes ~half the KV-block
+iterations and decode against a max_len-sized cache touches only
+ceil(kv_len/block_k) blocks.  Skipped blocks are bit-equivalent to computing
+a fully-masked block (all-`_NEG` codes contribute e=0 and a LUT rescale
+factor of exactly 1.0), so pruning changes iteration count, not numerics.
+A per-(head, q-block) iteration counter is emitted alongside the output so
+benchmarks and tests can assert the pruning actually happened.
 """
 from __future__ import annotations
 
@@ -41,14 +53,26 @@ def _lut_gather(d: jax.Array, table_f: jax.Array) -> jax.Array:
     ).reshape(d.shape)
 
 
+def _block_needed(k_start, block_k, q_lo, q_hi, kv_len, causal: bool,
+                  window: int):
+    """Can KV block [k_start, k_start+block_k) contribute to queries at
+    absolute positions [q_lo, q_hi]?  All-False blocks are fully masked."""
+    needed = k_start < kv_len
+    if causal:
+        needed &= k_start <= q_hi
+    if window:
+        needed &= (k_start + block_k - 1) > (q_lo - window)
+    return needed
+
+
 def _attn_kernel(
     scalars_ref,                       # SMEM (2,): [q_offset, kv_len]
     q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, table_ref,
-    out_ref,
+    out_ref, iters_ref,
     m_ref, denom_ref, acc_ref,
     *, block_q: int, block_k: int, n_k_blocks: int, causal: bool,
     window: int, sm_scale: float, score_scale: float, input_bits: int,
-    table_frac_bits: int, gather_chunk: int,
+    table_frac_bits: int, gather_chunk: int, prune: bool,
 ):
     ki = pl.program_id(2)
 
@@ -57,65 +81,78 @@ def _attn_kernel(
         m_ref[...] = jnp.full_like(m_ref, _NEG)
         denom_ref[...] = jnp.zeros_like(denom_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
+        iters_ref[...] = jnp.zeros_like(iters_ref)
 
     q_offset = scalars_ref[0]
     kv_len = scalars_ref[1]
 
-    q = q_ref[...][0]                  # (bq, Dh) int8
-    k = k_ref[...][0]                  # (bk, Dh) int8
-    s_int = jax.lax.dot_general(       # (bq, bk) int32 — the PIM Score engine
-        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
-    )
-    qs = qs_ref[...][0]                # (bq,) f32
-    ks = ks_ref[...][0]                # (bk,) f32
-    s_real = s_int.astype(jnp.float32) * qs[:, None] * ks[None, :] * sm_scale
-
-    # requantize to the 8-bit score port
-    qmax = float((1 << (input_bits - 1)) - 1)
-    codes = jnp.clip(jnp.round(s_real / score_scale), -qmax - 1.0, qmax)
-
-    # position mask
     qi = pl.program_id(1)
-    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
-        jnp.int32, (block_q, block_k), 0
-    )
-    k_pos = ki * block_k + jax.lax.broadcasted_iota(
-        jnp.int32, (block_q, block_k), 1
-    )
-    mask = k_pos < kv_len
-    if causal:
-        mask &= k_pos <= q_pos
-    if window:
-        mask &= k_pos > q_pos - window
-    codes = jnp.where(mask, codes, _NEG)
+    if prune:
+        needed = _block_needed(
+            ki * block_k, block_k,
+            q_offset + qi * block_q, q_offset + (qi + 1) * block_q - 1,
+            kv_len, causal, window,
+        )
+    else:
+        needed = jnp.bool_(True)
 
-    # online LUT softmax update
-    m_old = m_ref[...]                 # (bq, 1)
-    m_new = jnp.maximum(m_old, jnp.max(codes, axis=-1, keepdims=True))
-    table_f = table_ref[...].astype(jnp.float32)
-    # rescale factor for the running sums comes from the SAME LUT
-    d_resc = jnp.clip(m_new - m_old, 0, 255).astype(jnp.int32)
-    resc = _lut_gather(d_resc, table_f) / float(1 << table_frac_bits)
-    resc = jnp.where(m_old <= _NEG / 2, jnp.zeros_like(resc), resc)
+    @pl.when(needed)
+    def _body():
+        iters_ref[0, 0] += 1
+        q = q_ref[...][0]                  # (bq, Dh) int8
+        k = k_ref[...][0]                  # (bk, Dh) int8
+        s_int = jax.lax.dot_general(       # (bq, bk) int32 — the PIM Score engine
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
+        )
+        qs = qs_ref[...][0]                # (bq,) f32
+        ks = ks_ref[...][0]                # (bk,) f32
+        s_real = s_int.astype(jnp.float32) * qs[:, None] * ks[None, :] * sm_scale
 
-    e = jnp.zeros((block_q, block_k), jnp.float32)
-    for ci in range(block_k // gather_chunk):
-        lo = ci * gather_chunk
-        c_c = jax.lax.dynamic_slice(codes, (0, lo), (block_q, gather_chunk))
-        m_c = jax.lax.dynamic_slice(mask, (0, lo), (block_q, gather_chunk))
-        d = jnp.clip(m_new - c_c, 0, 255).astype(jnp.int32)
-        e_c = jnp.where(m_c, _lut_gather(d, table_f), 0.0)
-        e = jax.lax.dynamic_update_slice(e, e_c, (0, lo))
+        # requantize to the 8-bit score port
+        qmax = float((1 << (input_bits - 1)) - 1)
+        codes = jnp.clip(jnp.round(s_real / score_scale), -qmax - 1.0, qmax)
 
-    denom_ref[...] = denom_ref[...] * resc + jnp.sum(e, axis=-1, keepdims=True)
-    v = v_ref[...][0]                  # (bk, Dh) int8
-    vs = vs_ref[...][0]                # (bk,) f32
-    v_deq = v.astype(jnp.float32) * vs[:, None]
-    pv = jax.lax.dot_general(
-        e, v_deq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )
-    acc_ref[...] = acc_ref[...] * resc + pv
-    m_ref[...] = m_new
+        # position mask
+        q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0
+        )
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1
+        )
+        mask = k_pos < kv_len
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        codes = jnp.where(mask, codes, _NEG)
+
+        # online LUT softmax update
+        m_old = m_ref[...]                 # (bq, 1)
+        m_new = jnp.maximum(m_old, jnp.max(codes, axis=-1, keepdims=True))
+        table_f = table_ref[...].astype(jnp.float32)
+        # rescale factor for the running sums comes from the SAME LUT
+        d_resc = jnp.clip(m_new - m_old, 0, 255).astype(jnp.int32)
+        resc = _lut_gather(d_resc, table_f) / float(1 << table_frac_bits)
+        resc = jnp.where(m_old <= _NEG / 2, jnp.zeros_like(resc), resc)
+
+        e = jnp.zeros((block_q, block_k), jnp.float32)
+        for ci in range(block_k // gather_chunk):
+            lo = ci * gather_chunk
+            c_c = jax.lax.dynamic_slice(codes, (0, lo), (block_q, gather_chunk))
+            m_c = jax.lax.dynamic_slice(mask, (0, lo), (block_q, gather_chunk))
+            d = jnp.clip(m_new - c_c, 0, 255).astype(jnp.int32)
+            e_c = jnp.where(m_c, _lut_gather(d, table_f), 0.0)
+            e = jax.lax.dynamic_update_slice(e, e_c, (0, lo))
+
+        denom_ref[...] = denom_ref[...] * resc + jnp.sum(e, axis=-1, keepdims=True)
+        v = v_ref[...][0]                  # (bk, Dh) int8
+        vs = vs_ref[...][0]                # (bk,) f32
+        v_deq = v.astype(jnp.float32) * vs[:, None]
+        pv = jax.lax.dot_general(
+            e, v_deq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_ref[...] = acc_ref[...] * resc + pv
+        m_ref[...] = m_new
 
     @pl.when(ki == n_k_blocks - 1)
     def _flush():
@@ -127,6 +164,7 @@ def _attn_kernel(
     static_argnames=(
         "pim_cfg", "lut_cfg", "causal", "window",
         "block_q", "block_k", "gather_chunk", "interpret",
+        "prune", "return_iters",
     ),
 )
 def pim_attention_pallas(
@@ -146,8 +184,15 @@ def pim_attention_pallas(
     block_k: int = 256,
     gather_chunk: int = 128,
     interpret: bool = False,
-) -> jax.Array:
-    """Fused PIM attention. Returns (BH, Sq, Dh) f32 (scales already applied)."""
+    prune: bool = True,
+    return_iters: bool = False,
+):
+    """Fused PIM attention. Returns (BH, Sq, Dh) f32 (scales already applied).
+
+    With `return_iters=True` also returns the (BH, n_q_blocks) int32 count of
+    KV-block iterations each q-block actually executed (the grid-pruning
+    probe: causal prefill ~halves it, decode sees ceil(kv_len/block_k)).
+    """
     BH, Sq, Dh = q_q.shape
     BHkv, Sk, _ = k_q.shape
     assert BH % BHkv == 0
@@ -173,11 +218,12 @@ def pim_attention_pallas(
         sm_scale=1.0 / (Dh ** 0.5), score_scale=lut_cfg.score_scale,
         input_bits=lut_cfg.input_bits, table_frac_bits=frac,
         gather_chunk=min(gather_chunk, block_k),
+        prune=prune,
     )
     scalars = jnp.stack(
         [jnp.asarray(q_offset, jnp.int32), jnp.asarray(kv_len, jnp.int32)]
     )
-    out = pl.pallas_call(
+    out, iters = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
@@ -201,16 +247,23 @@ def pim_attention_pallas(
                 ),
                 pl.BlockSpec((256,), lambda b, i, k, s: (0,)),
             ],
-            out_specs=pl.BlockSpec(
-                (1, block_q, Dh), lambda b, i, k, s: (b, i, 0)
-            ),
+            out_specs=[
+                pl.BlockSpec((1, block_q, Dh), lambda b, i, k, s: (b, i, 0)),
+                pl.BlockSpec((1, 1), lambda b, i, k, s: (b, i)),
+            ],
             scratch_shapes=[
                 pltpu.VMEM((block_q, 1), jnp.float32),
                 pltpu.VMEM((block_q, 1), jnp.float32),
                 pltpu.VMEM((block_q, Dh), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((BH, Sqp, Dh), jnp.float32),
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Sqp, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((BH, Sqp // block_q), jnp.int32),
+        ],
         interpret=interpret,
     )(scalars, q_q, q_scale, k_q, k_scale, v_q, v_scale, table)
-    return out[:, :Sq]
+    out = out[:, :Sq]
+    if return_iters:
+        return out, iters
+    return out

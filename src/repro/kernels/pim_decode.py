@@ -1,0 +1,205 @@
+"""Pallas TPU kernel: split-K flash decode for Sq == 1 PIM attention.
+
+The prefill kernel (`pim_attention.py`) serializes over the KV axis per
+(head, q-block) grid cell — fine for prefill where the q axis supplies
+parallelism, but at decode (Sq == 1) it leaves the grid almost empty: one
+padded q block per head, walking the whole cache sequentially.
+
+This kernel restores occupancy the flash-decoding way, specialized to the
+paper's integer dataflow:
+
+  * **GQA head packing** — the `q_per_kv` query heads of a KV group are the
+    sublane dimension of a single (G, Dh) q tile, so the Score matmul per KV
+    block is one (G, Dh) x (Dh, bk) MXU call against the *raw* int8 cache
+    (no head-expanded KV reads — decode streams Hkv, not H, caches).
+  * **Split-K grid** — grid (B*Hkv, ceil(Sk/block_k)): every KV partition is
+    an independent grid cell emitting partial (m, denom, acc) in the LUT
+    domain.  Partitions beyond `kv_len` (or outside causal/window reach of
+    the single query) early-out via `pl.when` before any compute, so decode
+    touches only ceil(kv_len/block_k) blocks regardless of the padded cache
+    `max_len`.
+  * **LUT-domain combine** — a second stage merges partials with rescale
+    factors from the SAME 256-entry exp table (exp(-d*s) = table[d]/2^frac),
+    exactly the arithmetic the online prefill kernel uses between blocks, so
+    split-K numerics stay paper-faithful (within the usual LUT rounding).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.configs.base import LUTSoftmaxConfig, PIMConfig
+from repro.core.lut_softmax import build_exp_table
+from repro.kernels.pim_attention import _NEG, _block_needed, _lut_gather
+
+
+def _decode_kernel(
+    scalars_ref,                       # SMEM (2,): [q_pos, kv_len]
+    q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, table_ref,
+    m_ref, den_ref, acc_ref, iters_ref,
+    *, block_k: int, g_pad: int, causal: bool, window: int,
+    sm_scale: float, score_scale: float, input_bits: int,
+):
+    ki = pl.program_id(1)
+    q_pos = scalars_ref[0]             # absolute position of the single query
+    kv_len = scalars_ref[1]
+    needed = _block_needed(ki * block_k, block_k, q_pos, q_pos, kv_len,
+                           causal, window)
+
+    @pl.when(needed)
+    def _body():
+        iters_ref[0, 0] = 1
+        q = q_ref[...][0]              # (G, Dh) int8 — packed group heads
+        k = k_ref[...][0]              # (bk, Dh) int8
+        s_int = jax.lax.dot_general(   # (G, bk) int32 — the PIM Score engine
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
+        )
+        qs = qs_ref[...][0]            # (G,) f32
+        ks = ks_ref[...][0]            # (bk,) f32
+        s_real = s_int.astype(jnp.float32) * qs[:, None] * ks[None, :] * sm_scale
+
+        qmax = float((1 << (input_bits - 1)) - 1)
+        codes = jnp.clip(jnp.round(s_real / score_scale), -qmax - 1.0, qmax)
+
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (g_pad, block_k), 1
+        )
+        mask = k_pos < kv_len
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        codes = jnp.where(mask, codes, _NEG)
+
+        table_f = table_ref[...].astype(jnp.float32)
+        m = jnp.max(codes, axis=-1, keepdims=True)           # (G, 1)
+        d = jnp.clip(m - codes, 0, 255).astype(jnp.int32)
+        e = jnp.where(mask, _lut_gather(d, table_f), 0.0)    # (G, bk)
+        v = v_ref[...][0]              # (bk, Dh) int8
+        vs = vs_ref[...][0]            # (bk,) f32
+        v_deq = v.astype(jnp.float32) * vs[:, None]
+        acc = jax.lax.dot_general(     # (G, Dh)
+            e, v_deq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m[:, 0][None, None]
+        den_ref[...] = jnp.sum(e, axis=-1)[None, None]
+        acc_ref[...] = acc[None, None]
+
+    @pl.when(jnp.logical_not(needed))
+    def _skip():
+        iters_ref[0, 0] = 0
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        den_ref[...] = jnp.zeros_like(den_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "pim_cfg", "lut_cfg", "causal", "window", "block_k", "interpret",
+        "return_iters",
+    ),
+)
+def pim_decode_pallas(
+    q_q: jax.Array,        # (BH, 1, Dh) int8
+    q_scale: jax.Array,    # (BH, 1) f32
+    k_q: jax.Array,        # (BHkv, Sk, Dh) int8
+    k_scale: jax.Array,    # (BHkv, Sk) f32
+    v_q: jax.Array,        # (BHkv, Sk, Dh) int8
+    v_scale: jax.Array,    # (BHkv, Sk) f32
+    q_offset: jax.Array,   # () int32 — absolute position of the query
+    kv_len: jax.Array,     # () int32 — valid cache length
+    pim_cfg: PIMConfig = PIMConfig(),
+    lut_cfg: LUTSoftmaxConfig = LUTSoftmaxConfig(),
+    causal: bool = True,
+    window: int = 0,
+    block_k: int = 256,
+    interpret: bool = False,
+    return_iters: bool = False,
+):
+    """Split-K decode attention. Returns (BH, 1, Dh) f32.
+
+    With `return_iters=True` also returns the (BHkv, n_k_blocks) int32 map of
+    KV partitions that actually ran (sum == blocks touched this token).
+    """
+    BH, Sq, Dh = q_q.shape
+    assert Sq == 1, "pim_decode_pallas is specialized to single-token decode"
+    BHkv, Sk, _ = k_q.shape
+    assert BH % BHkv == 0
+    G = BH // BHkv
+    g_pad = max(8, ((G + 7) // 8) * 8)
+
+    # pack the q heads of each KV group into the sublane dimension
+    qg = q_q[:, 0].reshape(BHkv, G, Dh)
+    qsg = q_scale[:, 0].reshape(BHkv, G)
+    if g_pad != G:
+        qg = jnp.pad(qg, ((0, 0), (0, g_pad - G), (0, 0)))
+        qsg = jnp.pad(qsg, ((0, 0), (0, g_pad - G)))
+    pad_k = (-Sk) % block_k
+    if pad_k:
+        k_q = jnp.pad(k_q, ((0, 0), (0, pad_k), (0, 0)))
+        v_q = jnp.pad(v_q, ((0, 0), (0, pad_k), (0, 0)))
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, pad_k)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, pad_k)))
+    n_k_blocks = (Sk + pad_k) // block_k
+    grid = (BHkv, n_k_blocks)
+    table, frac = build_exp_table(lut_cfg)
+
+    kernel = functools.partial(
+        _decode_kernel,
+        block_k=block_k, g_pad=g_pad, causal=causal, window=window,
+        sm_scale=1.0 / (Dh ** 0.5), score_scale=lut_cfg.score_scale,
+        input_bits=lut_cfg.input_bits,
+    )
+    scalars = jnp.stack(
+        [jnp.asarray(q_offset, jnp.int32), jnp.asarray(kv_len, jnp.int32)]
+    )
+    part_m, part_den, part_acc, iters = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, g_pad, Dh), lambda b, k, s: (b, 0, 0)),
+                pl.BlockSpec((1, g_pad), lambda b, k, s: (b, 0)),
+                pl.BlockSpec((1, block_k, Dh), lambda b, k, s: (b, k, 0)),
+                pl.BlockSpec((1, block_k), lambda b, k, s: (b, k)),
+                pl.BlockSpec((1, block_k, Dh), lambda b, k, s: (b, k, 0)),
+                pl.BlockSpec((1, block_k), lambda b, k, s: (b, k)),
+                pl.BlockSpec((256,), lambda b, k, s: (0,)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, g_pad), lambda b, k, s: (b, k, 0)),
+                pl.BlockSpec((1, 1, g_pad), lambda b, k, s: (b, k, 0)),
+                pl.BlockSpec((1, 1, g_pad, Dh), lambda b, k, s: (b, k, 0, 0)),
+                pl.BlockSpec((1, 1), lambda b, k, s: (b, k)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((BHkv, n_k_blocks, g_pad), jnp.float32),
+            jax.ShapeDtypeStruct((BHkv, n_k_blocks, g_pad), jnp.float32),
+            jax.ShapeDtypeStruct((BHkv, n_k_blocks, g_pad, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((BHkv, n_k_blocks), jnp.int32),
+        ],
+        interpret=interpret,
+    )(scalars, qg, qsg, k_q, k_scale, v_q, v_scale, table)
+
+    # ---- stage 2: combine partitions in the LUT domain ---------------------
+    # Rescale each partition to the global max with exp(-d*s) = table[d]/2^frac
+    # — the same arithmetic the online prefill kernel applies between blocks.
+    table_f = table.astype(jnp.float32)
+    m_glob = jnp.max(part_m, axis=1, keepdims=True)          # (BHkv, 1, G)
+    d = jnp.clip(m_glob - part_m, 0, 255).astype(jnp.int32)
+    resc = jnp.take(table_f, d) / float(1 << frac)           # (BHkv, nb, G)
+    resc = jnp.where(part_m <= _NEG / 2, 0.0, resc)
+    den = jnp.sum(part_den * resc, axis=1)                   # (BHkv, G)
+    acc = jnp.sum(part_acc * resc[..., None], axis=1)        # (BHkv, G, Dh)
+    out = acc / jnp.maximum(den, 1.0)[..., None]
+    out = out[:, :G].reshape(BH, 1, Dh)
+    if return_iters:
+        return out, iters
+    return out

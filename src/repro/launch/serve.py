@@ -1,7 +1,8 @@
-"""Serving entrypoint: batched prefill + greedy decode over the PIM KV cache.
+"""Serving entrypoint: batched prefill + scan-fused decode over the PIM KV
+cache (greedy by default; --temperature/--top-k for sampling).
 
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
-      --batch 4 --prompt-len 32 --new-tokens 16
+      --batch 4 --prompt-len 32 --new-tokens 16 --temperature 0.8 --top-k 40
 """
 from __future__ import annotations
 
@@ -28,12 +29,26 @@ def main(argv=None):
     ap.add_argument("--mesh", default="")
     ap.add_argument("--attn-impl", default="",
                     choices=["", "behavioral", "kernel"])
+    ap.add_argument("--no-decode-kernel", action="store_true",
+                    help="disable the split-K flash-decode kernel on the "
+                         "kernel path (force the prefill kernel for Sq==1)")
+    ap.add_argument("--decode-block-k", type=int, default=0,
+                    help="KV partition size of the split-K decode grid")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 samples with temperature softmax")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the top-k logits (0 = all)")
+    ap.add_argument("--seed", type=int, default=0, help="sampling rng seed")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    import dataclasses
     if args.attn_impl:
-        import dataclasses
         cfg = dataclasses.replace(cfg, attn_impl=args.attn_impl)
+    if args.no_decode_kernel:
+        cfg = dataclasses.replace(cfg, decode_kernel=False)
+    if args.decode_block_k:
+        cfg = dataclasses.replace(cfg, decode_block_k=args.decode_block_k)
     model = build_model(cfg)
     mesh = None
     if args.mesh:
@@ -51,12 +66,14 @@ def main(argv=None):
     max_len = args.prompt_len + args.new_tokens
 
     t0 = time.time()
-    out = serve_lib.greedy_generate(model, params, batch, args.new_tokens,
-                                    max_len, mesh)
+    out = serve_lib.generate(model, params, batch, args.new_tokens, max_len,
+                             temperature=args.temperature, top_k=args.top_k,
+                             rng=jax.random.PRNGKey(args.seed), mesh=mesh)
     jax.block_until_ready(out)
     dt = time.time() - t0
     toks = args.batch * args.new_tokens
     print(f"[serve] arch={cfg.name} attn={cfg.attn_impl} "
+          f"temp={args.temperature} top_k={args.top_k} "
           f"generated {out.shape} in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s incl. prefill+compile)")
     print("[serve] first sequences:", out[:2, :12].tolist())

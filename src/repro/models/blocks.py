@@ -120,9 +120,13 @@ def attn_block_init_state(cfg: ModelConfig, batch: int, max_len: int,
 def _serve_attend(q, cache, offset, cfg: ModelConfig, window: int, causal: bool):
     if cfg.attn_impl == "kernel":
         from repro.kernels import ops
+        # Sq == 1 steps dispatch to the split-K flash-decode kernel (full
+        # KV-partition grid occupancy) unless cfg.decode_kernel opts out.
         return ops.pim_flash_attention(
             q, cache, offset, cfg.pim, cfg.lut, causal=causal, window=window,
             out_dtype=jnp.dtype(cfg.compute_dtype),
+            decode_kernel=cfg.decode_kernel,
+            decode_block_k=cfg.decode_block_k,
         )
     return A.pim_attention(
         q, cache, cfg.pim, cfg.lut, q_offset=offset, causal=causal,

@@ -3,9 +3,15 @@
 The serve path is the paper-faithful dataflow: weights loaded once (int8 in
 the PIM macros == TP-sharded on device), K/V quantized on write, LUT softmax.
 `serve_step` here is what the decode_32k / long_500k dry-run cells lower.
+
+Generation is scan-fused: the whole decode loop is ONE `lax.scan` inside one
+jit with the KV cache donated, so serving `max_new_tokens` tokens is a single
+device program — no per-token Python dispatch, no per-token cache copy.
+`sample_logits` adds temperature / top-k sampling on top of greedy.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -17,6 +23,7 @@ from repro.models.model_zoo import Model
 from repro.runtime import sharding as sh
 
 
+@functools.lru_cache(maxsize=64)
 def make_prefill_step(model: Model, mesh: Optional[Mesh] = None) -> Callable:
     """prefill(params, batch, cache) -> (logits_last, cache, enc_out)."""
     def step(params, batch, cache):
@@ -27,6 +34,7 @@ def make_prefill_step(model: Model, mesh: Optional[Mesh] = None) -> Callable:
     return _pjit_serve(model, step, mesh, donate=(2,))
 
 
+@functools.lru_cache(maxsize=64)
 def make_decode_step(model: Model, mesh: Optional[Mesh] = None) -> Callable:
     """decode(params, tokens, cache, offset, enc_out) -> (logits, cache)."""
     def step(params, batch, cache, offset, enc_out):
@@ -46,22 +54,81 @@ def _pjit_serve(model: Model, step, mesh: Mesh, donate, with_offset=False):
     return jax.jit(step, donate_argnums=donate)
 
 
-def greedy_generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
-                    max_new_tokens: int, max_len: int,
-                    mesh: Optional[Mesh] = None):
-    """Batched greedy decoding loop (the paper's token pipeline, §3.6).
+def sample_logits(logits: jax.Array, key: Optional[jax.Array],
+                  temperature: float = 0.0, top_k: int = 0) -> jax.Array:
+    """(B, V) logits -> (B,) token ids.
 
-    Returns (B, max_new_tokens) generated ids.
+    temperature == 0 is greedy (key may be None); otherwise temperature
+    softmax sampling, optionally restricted to the top_k logits.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    l = logits.astype(jnp.float32) / temperature
+    if top_k:
+        kth = jax.lax.top_k(l, top_k)[0][..., -1:]
+        l = jnp.where(l < kth, -jnp.inf, l)
+    return jax.random.categorical(key, l, axis=-1)
+
+
+@functools.lru_cache(maxsize=64)
+def make_generate_fn(model: Model, prompt_len: int, max_new_tokens: int,
+                     mesh: Optional[Mesh] = None, temperature: float = 0.0,
+                     top_k: int = 0) -> Callable:
+    """Build the scan-fused decode program.
+
+    Returns generate(params, tok0, cache, rng, enc_out) -> (B, T) ids where
+    `tok0` is the (B, 1) token sampled from the prefill logits.  The whole
+    token loop is one `lax.scan` with the cache donated: per-token work is a
+    single already-compiled device step, which is what makes the decode
+    kernel's split-K grid the only per-token cost.
+
+    lru_cached on (model, shape, sampling) so repeated `generate` calls with
+    the same Model instance reuse the traced/compiled program instead of
+    paying the scan retrace per call.
+    """
+    def generate(params, tok0, cache, rng, enc_out):
+        def body(carry, t):
+            tok, cache, key = carry
+            logits, cache, _ = model.forward_serve(
+                params, {"tokens": tok}, cache, prompt_len + t,
+                enc_out=enc_out)
+            key, sub = jax.random.split(key)
+            nxt = sample_logits(logits, sub, temperature, top_k)[:, None]
+            return (nxt, cache, key), tok[:, 0]
+
+        (_, cache, _), toks = jax.lax.scan(
+            body, (tok0, cache, rng), jnp.arange(max_new_tokens))
+        return jnp.moveaxis(toks, 0, 1)                      # (B, T)
+
+    return jax.jit(generate, donate_argnums=(2,))
+
+
+def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
+             max_new_tokens: int, max_len: int,
+             temperature: float = 0.0, top_k: int = 0,
+             rng: Optional[jax.Array] = None,
+             mesh: Optional[Mesh] = None) -> jax.Array:
+    """Batched generation: prefill + scan-fused decode (the paper's token
+    pipeline, §3.6).  Returns (B, max_new_tokens) generated ids.
+
+    temperature=0 reproduces greedy decoding exactly; temperature>0 samples
+    (optionally top_k-truncated) with `rng` (default PRNGKey(0)).
     """
     B, S = prompt_batch["tokens"].shape
     prefill = make_prefill_step(model, mesh)
-    decode = make_decode_step(model, mesh)
     cache = model.init_cache(B, max_len)
     logits, cache, enc_out = prefill(params, prompt_batch, cache)
-    toks = []
-    tok = jnp.argmax(logits, axis=-1)[:, None]
-    for t in range(max_new_tokens):
-        toks.append(tok)
-        logits, cache = decode(params, {"tokens": tok}, cache, S + t, enc_out)
-        tok = jnp.argmax(logits, axis=-1)[:, None]
-    return jnp.concatenate(toks, axis=1)
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    rng, sub = jax.random.split(rng)
+    tok0 = sample_logits(logits, sub, temperature, top_k)[:, None]
+    decode = make_generate_fn(model, S, max_new_tokens, mesh,
+                              temperature, top_k)
+    return decode(params, tok0, cache, rng, enc_out)
+
+
+def greedy_generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
+                    max_new_tokens: int, max_len: int,
+                    mesh: Optional[Mesh] = None):
+    """Batched greedy decoding (temperature 0 wrapper around `generate`)."""
+    return generate(model, params, prompt_batch, max_new_tokens, max_len,
+                    mesh=mesh)

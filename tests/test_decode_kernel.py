@@ -1,0 +1,197 @@
+"""Split-K decode kernel + grid-pruning validation (interpret mode).
+
+Covers the ISSUE perf acceptance criteria:
+  * decode-vs-prefill-kernel and decode-vs-fp parity of `pim_decode_pallas`
+  * kv_len early-exit: decode touches only ceil(kv_len/block_k) partitions,
+    independent of the padded cache max_len
+  * causal / window block pruning is bit-equivalent to the dense grid and
+    executes the analytically expected number of block iterations
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import PIMConfig
+from repro.core import attention as attn
+from repro.core.attention import expected_kv_block_iters
+from repro.kernels import ops, ref
+from repro.kernels.pim_attention import pim_attention_pallas
+from repro.kernels.pim_decode import pim_decode_pallas
+
+
+def _setup(key, B, Sq, max_len, kv_len, H, Hkv, Dh, scale=0.5):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, Sq, H, Dh)) * scale
+    k = jax.random.normal(k2, (B, kv_len, Hkv, Dh)) * scale
+    v = jax.random.normal(k3, (B, kv_len, Hkv, Dh)) * scale
+    cache = attn.cache_write(attn.init_kv_cache(B, max_len, Hkv, Dh), k, v, 0,
+                             PIMConfig())
+    return q, k, v, cache
+
+
+def _layout(q, cache):
+    return ops.kernel_attention_layout(q, cache)
+
+
+# ---------------------------------------------------------------------------
+# decode parity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dims", [
+    (1, 96, 96, 4, 1, 64),     # MQA, full cache
+    (2, 128, 100, 4, 2, 32),   # GQA, partially-filled cache
+    (1, 256, 96, 8, 8, 64),    # MHA (q_per_kv == 1)
+])
+def test_decode_matches_prefill_kernel(dims):
+    B, max_len, kv_len, H, Hkv, Dh = dims
+    q, _, _, cache = _setup(jax.random.PRNGKey(sum(dims)), B, 1, max_len,
+                            kv_len, H, Hkv, Dh)
+    qq = _layout(q, cache)
+    off = jnp.int32(kv_len - 1)
+    o_d = pim_decode_pallas(*qq, off, cache.length, block_k=64, interpret=True)
+    o_p = pim_attention_pallas(*qq, off, cache.length, block_k=64,
+                               interpret=True)
+    rel = jnp.linalg.norm(o_d - o_p) / (jnp.linalg.norm(o_p) + 1e-9)
+    assert float(rel) < 5e-3
+
+
+def test_decode_matches_ref_and_fp():
+    B, max_len, kv_len, H, Hkv, Dh = 2, 128, 90, 4, 2, 64
+    q, k, v, cache = _setup(jax.random.PRNGKey(0), B, 1, max_len, kv_len, H,
+                            Hkv, Dh)
+    qq = _layout(q, cache)
+    off = jnp.int32(kv_len - 1)
+    o_d = pim_decode_pallas(*qq, off, cache.length, block_k=64, interpret=True)
+    o_r = ref.pim_attention_ref(*qq, off, kv_len)
+    rel = jnp.linalg.norm(o_d - o_r) / (jnp.linalg.norm(o_r) + 1e-9)
+    assert float(rel) < 5e-3
+    o_bhqd = o_d.reshape(B, H, 1, Dh).transpose(0, 2, 1, 3)
+    o_fp = attn.fp_attention(q, k, v, q_offset=off).astype(jnp.float32)
+    rel_fp = jnp.linalg.norm(o_bhqd - o_fp) / jnp.linalg.norm(o_fp)
+    assert float(rel_fp) < 0.06
+
+
+def test_ops_dispatch_decode_vs_prefill_kernel_agree():
+    """ops.pim_flash_attention must route Sq==1 to the decode kernel and
+    stay numerically consistent with the forced prefill-kernel path."""
+    B, max_len, kv_len, H, Hkv, Dh = 1, 96, 96, 4, 2, 32
+    q, _, _, cache = _setup(jax.random.PRNGKey(5), B, 1, max_len, kv_len, H,
+                            Hkv, Dh)
+    o_dec = ops.pim_flash_attention(q, cache, kv_len - 1,
+                                    out_dtype=jnp.float32)
+    o_pre = ops.pim_flash_attention(q, cache, kv_len - 1,
+                                    out_dtype=jnp.float32,
+                                    decode_kernel=False)
+    rel = jnp.linalg.norm(o_dec - o_pre) / (jnp.linalg.norm(o_pre) + 1e-9)
+    assert float(rel) < 5e-3
+
+
+# ---------------------------------------------------------------------------
+# kv_len early exit
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kv_len", [1, 63, 64, 130])
+def test_decode_kv_len_early_exit(kv_len):
+    """Decode touches ceil(kv_len/block_k) partitions — not max_len/block_k."""
+    B, max_len, H, Hkv, Dh = 1, 512, 4, 2, 32
+    q, _, _, cache = _setup(jax.random.PRNGKey(kv_len), B, 1, max_len, kv_len,
+                            H, Hkv, Dh)
+    qq = _layout(q, cache)
+    off = jnp.int32(kv_len - 1)
+    _, iters = pim_decode_pallas(*qq, off, cache.length, block_k=64,
+                                 interpret=True, return_iters=True)
+    per_head = np.asarray(iters.sum(axis=1))
+    assert iters.shape[1] == max_len // 64          # grid spans padded cache
+    np.testing.assert_array_equal(per_head, -(-kv_len // 64))
+
+
+def test_decode_iters_independent_of_max_len():
+    kv_len, B, H, Hkv, Dh = 70, 1, 2, 1, 32
+    counts = []
+    for max_len in (128, 512):
+        q, _, _, cache = _setup(jax.random.PRNGKey(7), B, 1, max_len, kv_len,
+                                H, Hkv, Dh)
+        qq = _layout(q, cache)
+        _, iters = pim_decode_pallas(*qq, jnp.int32(kv_len - 1), cache.length,
+                                     block_k=64, interpret=True,
+                                     return_iters=True)
+        counts.append(int(iters.sum()))
+    assert counts[0] == counts[1] == Hkv * -(-kv_len // 64)
+
+
+def test_prefill_kernel_kv_len_early_exit():
+    """The pruned prefill kernel also skips blocks beyond cache.length."""
+    B, max_len, kv_len, Sq, H, Hkv, Dh = 1, 256, 40, 4, 2, 2, 32
+    q, k, v, cache = _setup(jax.random.PRNGKey(9), B, Sq, max_len, kv_len, H,
+                            Hkv, Dh)
+    qq = _layout(q, cache)
+    off = jnp.int32(kv_len - Sq)
+    o, iters = pim_attention_pallas(*qq, off, cache.length, block_q=8,
+                                    block_k=32, interpret=True,
+                                    return_iters=True)
+    exp = expected_kv_block_iters(Sq, max_len, kv_len - Sq, 8, 32,
+                                  causal=True, kv_valid_len=kv_len)
+    assert int(iters.sum()) == B * H * exp
+    assert int(iters.sum()) < B * H * (Sq // 8 + 1) * (max_len // 32) / 2
+    o_fp = attn.fp_attention(q, k, v, q_offset=off).astype(jnp.float32)
+    o = o.reshape(B, H, Sq, Dh).transpose(0, 2, 1, 3)
+    rel = jnp.linalg.norm(o - o_fp) / jnp.linalg.norm(o_fp)
+    assert float(rel) < 0.06
+
+
+# ---------------------------------------------------------------------------
+# causal / window pruning equivalence
+# ---------------------------------------------------------------------------
+def test_causal_pruning_bit_equal_and_halves_iters():
+    B, S, H, Hkv, Dh, bq, bk = 1, 128, 2, 1, 32, 16, 16
+    q, _, _, cache = _setup(jax.random.PRNGKey(1), B, S, S, S, H, Hkv, Dh)
+    qq = _layout(q, cache)
+    o_p, it_p = pim_attention_pallas(*qq, jnp.int32(0), cache.length,
+                                     block_q=bq, block_k=bk, interpret=True,
+                                     prune=True, return_iters=True)
+    o_d, it_d = pim_attention_pallas(*qq, jnp.int32(0), cache.length,
+                                     block_q=bq, block_k=bk, interpret=True,
+                                     prune=False, return_iters=True)
+    np.testing.assert_array_equal(np.asarray(o_p), np.asarray(o_d))
+    n = S // bq
+    assert int(it_d.sum()) == B * H * n * n
+    assert int(it_p.sum()) == B * H * n * (n + 1) // 2      # lower triangle
+    assert int(it_p.sum()) == B * H * expected_kv_block_iters(S, S, 0, bq, bk)
+
+
+def test_window_pruning_bit_equal_and_correct():
+    B, S, H, Hkv, Dh, W = 1, 128, 2, 2, 32, 24
+    q, k, v, cache = _setup(jax.random.PRNGKey(2), B, S, S, S, H, Hkv, Dh)
+    qq = _layout(q, cache)
+    o_p, it_p = pim_attention_pallas(*qq, jnp.int32(0), cache.length,
+                                     window=W, block_q=16, block_k=16,
+                                     interpret=True, prune=True,
+                                     return_iters=True)
+    o_d, it_d = pim_attention_pallas(*qq, jnp.int32(0), cache.length,
+                                     window=W, block_q=16, block_k=16,
+                                     interpret=True, prune=False,
+                                     return_iters=True)
+    np.testing.assert_array_equal(np.asarray(o_p), np.asarray(o_d))
+    exp = expected_kv_block_iters(S, S, 0, 16, 16, causal=True, window=W)
+    assert int(it_p.sum()) == B * H * exp < int(it_d.sum())
+    o_fp = attn.fp_attention(q, k, v, 0, window=W).astype(jnp.float32)
+    o = o_p.reshape(B, H, S, Dh).transpose(0, 2, 1, 3)
+    rel = jnp.linalg.norm(o - o_fp) / jnp.linalg.norm(o_fp)
+    assert float(rel) < 0.06
+
+
+def test_decode_window_parity():
+    B, max_len, kv_len, H, Hkv, Dh, W = 1, 256, 150, 2, 1, 32, 40
+    q, k, v, cache = _setup(jax.random.PRNGKey(3), B, 1, max_len, kv_len, H,
+                            Hkv, Dh)
+    qq = _layout(q, cache)
+    off = jnp.int32(kv_len - 1)
+    o_d, iters = pim_decode_pallas(*qq, off, cache.length, window=W,
+                                   block_k=32, interpret=True,
+                                   return_iters=True)
+    o_p = pim_attention_pallas(*qq, off, cache.length, window=W, block_k=32,
+                               interpret=True)
+    rel = jnp.linalg.norm(o_d - o_p) / (jnp.linalg.norm(o_p) + 1e-9)
+    assert float(rel) < 5e-3
+    exp = expected_kv_block_iters(1, max_len, kv_len - 1, 1, 32,
+                                  causal=True, window=W, kv_valid_len=kv_len)
+    np.testing.assert_array_equal(np.asarray(iters.sum(axis=1)), exp)

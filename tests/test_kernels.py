@@ -130,14 +130,7 @@ def _setup_attn(key, B, Sq, Sk, H, Hkv, Dh, scale=0.5):
 
 
 def _kernel_layout(q, cache, B, Sq, Sk, H, Hkv, Dh):
-    q_scale = quant.symmetric_max_scale(q, 8, axis=-1)
-    q_q = quant.quantize(q, q_scale, 8).transpose(0, 2, 1, 3).reshape(B * H, Sq, Dh)
-    qs = q_scale[..., 0].transpose(0, 2, 1).reshape(B * H, Sq)
-    k_q = cache.k_q.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, Dh)
-    v_q = cache.v_q.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, Dh)
-    ks = cache.k_scale.transpose(0, 2, 1).reshape(B * Hkv, Sk)
-    vs = cache.v_scale.transpose(0, 2, 1).reshape(B * Hkv, Sk)
-    return q_q, qs, k_q, ks, v_q, vs
+    return ops.kernel_attention_layout(q, cache)
 
 
 @pytest.mark.parametrize("dims", [
