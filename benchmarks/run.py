@@ -18,7 +18,7 @@ import time
 
 BENCHES = ("op_breakdown", "pim_cycles", "softmax_accuracy",
            "attention_accuracy", "pipeline_model", "kernel_bench",
-           "decode_bench", "roofline_bench")
+           "decode_bench", "serving_bench", "roofline_bench")
 
 
 def _jsonable(x):

@@ -11,3 +11,6 @@ python -m pytest -x -q
 
 echo "== kernel + decode benches (parity + pruning probes) =="
 python -m benchmarks.run --only kernel_bench,decode_bench --json BENCH_kernels.json
+
+echo "== serving bench (ragged continuous batching vs padded baseline) =="
+python -m benchmarks.serving_bench --smoke

@@ -27,6 +27,10 @@ from repro.core.lut_softmax import lut_softmax_codes, probs_to_uint8
 class KVCache(NamedTuple):
     """int8 PIM-resident KV cache with per-(token, head) scales.
 
+    `length` is () int32 for the classic equal-length path, or (B,) int32 in
+    slot (ragged) mode where every batch row is an independent serving slot
+    with its own fill level (0 = empty/inactive slot).
+
     `positions` is used only by ring (sliding-window) caches: the absolute
     token position stored in each slot (-1 = empty).  Linear caches keep it
     as a zero-size placeholder.
@@ -36,18 +40,18 @@ class KVCache(NamedTuple):
     v_q: jax.Array        # (B, S, Hkv, Dh) int8
     k_scale: jax.Array    # (B, S, Hkv) f32
     v_scale: jax.Array    # (B, S, Hkv) f32
-    length: jax.Array     # () int32 — total tokens written
+    length: jax.Array     # () int32 tokens written, or (B,) per-slot lengths
     positions: jax.Array  # (S,) int32 ring slot positions, or (0,) placeholder
 
 
 def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
-                  ring: bool = False) -> KVCache:
+                  ring: bool = False, ragged: bool = False) -> KVCache:
     return KVCache(
         k_q=jnp.zeros((batch, max_len, n_kv, head_dim), jnp.int8),
         v_q=jnp.zeros((batch, max_len, n_kv, head_dim), jnp.int8),
         k_scale=jnp.zeros((batch, max_len, n_kv), jnp.float32),
         v_scale=jnp.zeros((batch, max_len, n_kv), jnp.float32),
-        length=jnp.zeros((), jnp.int32),
+        length=jnp.zeros((batch,) if ragged else (), jnp.int32),
         positions=(jnp.full((max_len,), -1, jnp.int32) if ring
                    else jnp.zeros((0,), jnp.int32)),
     )
@@ -74,6 +78,38 @@ def cache_write(cache: KVCache, k: jax.Array, v: jax.Array, pos, cfg: PIMConfig)
         k_scale=jax.lax.dynamic_update_slice(cache.k_scale, ks, idx[:3]),
         v_scale=jax.lax.dynamic_update_slice(cache.v_scale, vs, idx[:3]),
         length=jnp.asarray(pos + k.shape[1], jnp.int32),
+        positions=cache.positions,
+    )
+
+
+def cache_write_ragged(cache: KVCache, k: jax.Array, v: jax.Array, pos,
+                       cfg: PIMConfig, seq_lens=None) -> KVCache:
+    """Per-slot scatter write: batch row b writes its S tokens at buffer
+    positions [pos_b, pos_b + S).
+
+    pos: (B,) int32 per-slot write offsets.  seq_lens: optional (B,) count of
+    VALID tokens per row in this chunk (default S); the per-slot `length`
+    becomes pos + seq_lens, so left-aligned padded prefill rows advertise only
+    their true prompt length and padding K/V beyond it stays masked.  A row
+    with seq_lens == 0 (inactive slot) keeps length == pos — typically 0 —
+    and the garbage it writes is never visible to attention.
+    """
+    B, S = k.shape[:2]
+    k_q, v_q, ks, vs = quantize_kv(k, v, cfg)
+    pos = jnp.asarray(pos, jnp.int32)
+    rows = jnp.arange(B)[:, None]
+    cols = jnp.clip(pos[:, None] + jnp.arange(S)[None, :], 0,
+                    cache.k_q.shape[1] - 1)
+    if seq_lens is None:
+        new_len = pos + S
+    else:
+        new_len = pos + jnp.asarray(seq_lens, jnp.int32)
+    return KVCache(
+        k_q=cache.k_q.at[rows, cols].set(k_q),
+        v_q=cache.v_q.at[rows, cols].set(v_q),
+        k_scale=cache.k_scale.at[rows, cols].set(ks),
+        v_scale=cache.v_scale.at[rows, cols].set(vs),
+        length=new_len,
         positions=cache.positions,
     )
 
@@ -213,7 +249,8 @@ def _pim_attend_block_grouped(qb, q_pos, k_q, ks_bh, v_q, vs_bh, vs_cum,
     cache, so decode reads Hkv-many (not H-many) int8 KV streams.
     (Beyond-paper optimization; see EXPERIMENTS.md §Perf cell 3.)
 
-    qb: (B, cq, H, Dh); k_q/v_q: (B, Sk, Hkv, Dh) int8;
+    qb: (B, cq, H, Dh); q_pos: (B, cq) absolute positions; kv_len: (B,)
+    per-sequence valid cache lengths.  k_q/v_q: (B, Sk, Hkv, Dh) int8;
     ks_bh/vs_bh/vs_cum: (B, Hkv, Sk) scales.
     """
     B, cq, H, Dh = qb.shape
@@ -236,18 +273,19 @@ def _pim_attend_block_grouped(qb, q_pos, k_q, ks_bh, v_q, vs_bh, vs_cum,
     s_codes = jnp.clip(jnp.round(s_real / lut_cfg.score_scale),
                        -qmax - 1, qmax).astype(jnp.int32)
 
-    k_pos = jnp.arange(Sk)[None, :]
-    mask = k_pos < kv_len
+    k_pos = jnp.arange(Sk)[None, None, :]                  # (1, 1, Sk)
+    mask = k_pos < kv_len[:, None, None]                   # (B, cq, Sk)
     if causal:
-        mask = mask & (k_pos <= q_pos[:, None])
+        mask = mask & (k_pos <= q_pos[:, :, None])
     if window:
-        mask = mask & (k_pos > q_pos[:, None] - window)
-    codes = lut_softmax_codes(s_codes, lut_cfg, mask=mask[None, None, None])
+        mask = mask & (k_pos > q_pos[:, :, None] - window)
+    codes = lut_softmax_codes(s_codes, lut_cfg, mask=mask[:, None, None])
     p_u8 = probs_to_uint8(codes, lut_cfg)                  # (B,Hkv,G,cq,Sk)
 
     if causal:
+        idx = jnp.clip(q_pos, 0, Sk - 1)[:, None, :]       # (B, 1, cq)
         s_fold = jnp.maximum(
-            vs_cum[:, :, jnp.clip(q_pos, 0, Sk - 1)], 1e-8)  # (B,Hkv,cq)
+            jnp.take_along_axis(vs_cum, idx, axis=2), 1e-8)  # (B,Hkv,cq)
     else:
         s_fold = jnp.maximum(jnp.max(vs_bh, axis=-1, keepdims=True), 1e-8
                              ) * jnp.ones((1, 1, cq))
@@ -271,7 +309,7 @@ def _pim_attend_block(qb, q_pos, k_q, k_scale_bh, v_q, vs_bh, vs_cum, kv_len,
                       causal: bool, window: int):
     """One query block of the paper's Score -> LUT-Softmax -> AV pipeline.
 
-    qb: (B, cq, H, Dh); q_pos: (cq,) absolute positions.
+    qb: (B, cq, H, Dh); q_pos: (B, cq) absolute positions; kv_len: (B,).
     k_q/v_q: (B, Sk, H, Dh) int8 (GQA-expanded); *_bh scales: (B, H, Sk).
     """
     B, cq, H, Dh = qb.shape
@@ -295,13 +333,13 @@ def _pim_attend_block(qb, q_pos, k_q, k_scale_bh, v_q, vs_bh, vs_cum, kv_len,
     ).astype(jnp.int32)
 
     # --- Softmax module: LUT + 2-phase normalization ----------------------
-    k_pos = jnp.arange(Sk)[None, :]
-    mask = k_pos < kv_len
+    k_pos = jnp.arange(Sk)[None, None, :]                      # (1, 1, Sk)
+    mask = k_pos < kv_len[:, None, None]                       # (B, cq, Sk)
     if causal:
-        mask = mask & (k_pos <= q_pos[:, None])
+        mask = mask & (k_pos <= q_pos[:, :, None])
     if window:
-        mask = mask & (k_pos > q_pos[:, None] - window)
-    codes = lut_softmax_codes(s_codes, lut_cfg, mask=mask[None, None])
+        mask = mask & (k_pos > q_pos[:, :, None] - window)
+    codes = lut_softmax_codes(s_codes, lut_cfg, mask=mask[:, None])
 
     # --- AV through V-stationary PIM macros --------------------------------
     # Per-token V scales are folded into the probabilities *before* the array
@@ -311,8 +349,9 @@ def _pim_attend_block(qb, q_pos, k_q, k_scale_bh, v_q, vs_bh, vs_cum, kv_len,
     if causal:
         # causal fold scale: running max of v scales up to each query position
         # (never peeks at future tokens — preserves autoregressive semantics)
+        idx = jnp.clip(q_pos, 0, Sk - 1)[:, None, :]           # (B, 1, cq)
         s_fold = jnp.maximum(
-            vs_cum[:, :, jnp.clip(q_pos, 0, Sk - 1)], 1e-8)    # (B,H,cq)
+            jnp.take_along_axis(vs_cum, idx, axis=2), 1e-8)    # (B,H,cq)
     else:
         s_fold = jnp.maximum(
             jnp.max(vs_bh, axis=-1, keepdims=True), 1e-8
@@ -344,10 +383,19 @@ def pim_attention(
     Query-chunked so prefill never materializes the full Sq x Sk score
     matrix (each chunk still sees the full key axis — the two-phase LUT
     normalization is exact, not online).
+
+    `q_offset` and `cache.length` may be scalars (classic equal-length batch)
+    or (B,) vectors (ragged slot-mode serving): each sequence is masked
+    against its OWN query positions and valid cache length, so variable-
+    length prefill and continuous-batching decode never cross-contaminate.
     """
     B, Sq, H, Dh = q.shape
     Sk, Hkv = cache.k_q.shape[1], cache.k_q.shape[2]
     q_per_kv = H // Hkv
+    # canonicalize to per-sequence vectors: q_off (B,), kv_len (B,)
+    q_off = jnp.broadcast_to(
+        jnp.reshape(jnp.asarray(q_offset, jnp.int32), (-1,)), (B,))
+    kv_len = jnp.broadcast_to(jnp.reshape(cache.length, (-1,)), (B,))
     if pim_cfg.adc_mode == "ideal":
         # grouped GQA path: raw int8 cache, no head expansion
         k_q, v_q = cache.k_q, cache.v_q
@@ -366,18 +414,18 @@ def pim_attention(
 
     cq = _PIM_ATTN_CHUNK
     if Sq <= cq or Sq % cq:
-        q_pos = q_offset + jnp.arange(Sq)
+        q_pos = q_off[:, None] + jnp.arange(Sq)[None, :]
         o = block(q, q_pos, k_q, ks_bh, v_q, vs_bh, vs_cum,
-                  cache.length, pim_cfg, lut_cfg, causal, window)
+                  kv_len, pim_cfg, lut_cfg, causal, window)
         return o.astype(out_dtype)
     nc = Sq // cq
     qc = jnp.moveaxis(q.reshape(B, nc, cq, H, Dh), 1, 0)
 
     def body(_, args):
         qb, ci = args
-        q_pos = q_offset + ci * cq + jnp.arange(cq)
+        q_pos = q_off[:, None] + ci * cq + jnp.arange(cq)[None, :]
         return None, block(
-            qb, q_pos, k_q, ks_bh, v_q, vs_bh, vs_cum, cache.length,
+            qb, q_pos, k_q, ks_bh, v_q, vs_bh, vs_cum, kv_len,
             pim_cfg, lut_cfg, causal, window)
 
     _, oc = jax.lax.scan(body, None, (qc, jnp.arange(nc)))

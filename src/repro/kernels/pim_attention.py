@@ -66,13 +66,13 @@ def _block_needed(k_start, block_k, q_lo, q_hi, kv_len, causal: bool,
 
 
 def _attn_kernel(
-    scalars_ref,                       # SMEM (2,): [q_offset, kv_len]
+    scalars_ref,                       # SMEM (2, nb): [q_offset_b, kv_len_b]
     q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, table_ref,
     out_ref, iters_ref,
     m_ref, denom_ref, acc_ref,
     *, block_q: int, block_k: int, n_k_blocks: int, causal: bool,
     window: int, sm_scale: float, score_scale: float, input_bits: int,
-    table_frac_bits: int, gather_chunk: int, prune: bool,
+    table_frac_bits: int, gather_chunk: int, prune: bool, h_per_b: int,
 ):
     ki = pl.program_id(2)
 
@@ -83,8 +83,11 @@ def _attn_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
         iters_ref[...] = jnp.zeros_like(iters_ref)
 
-    q_offset = scalars_ref[0]
-    kv_len = scalars_ref[1]
+    # each grid row reads ITS sequence's [q_offset, kv_len] — ragged batches
+    # prune/mask per sequence (h_per_b rows of the flat BH axis per sequence)
+    b = pl.program_id(0) // h_per_b
+    q_offset = scalars_ref[0, b]
+    kv_len = scalars_ref[1, b]
 
     qi = pl.program_id(1)
     if prune:
@@ -174,8 +177,8 @@ def pim_attention_pallas(
     k_scale: jax.Array,    # (BHkv, Sk) f32
     v_q: jax.Array,        # (BHkv, Sk, Dh) int8
     v_scale: jax.Array,    # (BHkv, Sk) f32
-    q_offset: jax.Array,   # () int32 — absolute position of query 0
-    kv_len: jax.Array,     # () int32 — valid cache length
+    q_offset: jax.Array,   # () or (B,) int32 — absolute position of query 0
+    kv_len: jax.Array,     # () or (B,) int32 — valid cache length per sequence
     pim_cfg: PIMConfig = PIMConfig(),
     lut_cfg: LUTSoftmaxConfig = LUTSoftmaxConfig(),
     causal: bool = True,
@@ -189,6 +192,12 @@ def pim_attention_pallas(
 ):
     """Fused PIM attention. Returns (BH, Sq, Dh) f32 (scales already applied).
 
+    `q_offset` / `kv_len` may be () scalars (whole-batch) or (B,) vectors
+    (ragged batch): every (head, q-block, kv-block) grid cell masks and
+    early-outs against its OWN sequence's offset/length, so variable-length
+    prefill packs without cross-contamination and empty rows cost zero
+    KV-block iterations.
+
     With `return_iters=True` also returns the (BH, n_q_blocks) int32 count of
     KV-block iterations each q-block actually executed (the grid-pruning
     probe: causal prefill ~halves it, decode sees ceil(kv_len/block_k)).
@@ -197,6 +206,10 @@ def pim_attention_pallas(
     BHkv, Sk, _ = k_q.shape
     assert BH % BHkv == 0
     q_per_kv = BH // BHkv
+    q_off = jnp.reshape(jnp.asarray(q_offset, jnp.int32), (-1,))
+    kvl = jnp.reshape(jnp.asarray(kv_len, jnp.int32), (-1,))
+    nb = max(q_off.shape[0], kvl.shape[0])
+    assert BH % nb == 0, (BH, nb)
     block_q = min(block_q, max(8, ((Sq + 7) // 8) * 8))
     pad_q, pad_k = (-Sq) % block_q, (-Sk) % block_k
     if pad_q:
@@ -218,11 +231,11 @@ def pim_attention_pallas(
         sm_scale=1.0 / (Dh ** 0.5), score_scale=lut_cfg.score_scale,
         input_bits=lut_cfg.input_bits, table_frac_bits=frac,
         gather_chunk=min(gather_chunk, block_k),
-        prune=prune,
+        prune=prune, h_per_b=BH // nb,
     )
     scalars = jnp.stack(
-        [jnp.asarray(q_offset, jnp.int32), jnp.asarray(kv_len, jnp.int32)]
-    )
+        [jnp.broadcast_to(q_off, (nb,)), jnp.broadcast_to(kvl, (nb,))]
+    )                                                        # (2, nb)
     out, iters = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(

@@ -38,15 +38,18 @@ from repro.kernels.pim_attention import _NEG, _block_needed, _lut_gather
 
 
 def _decode_kernel(
-    scalars_ref,                       # SMEM (2,): [q_pos, kv_len]
+    scalars_ref,                       # SMEM (2, nb): [q_pos_b, kv_len_b]
     q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, table_ref,
     m_ref, den_ref, acc_ref, iters_ref,
     *, block_k: int, g_pad: int, causal: bool, window: int,
-    sm_scale: float, score_scale: float, input_bits: int,
+    sm_scale: float, score_scale: float, input_bits: int, hkv_per_b: int,
 ):
     ki = pl.program_id(1)
-    q_pos = scalars_ref[0]             # absolute position of the single query
-    kv_len = scalars_ref[1]
+    # per-sequence scalars: each (b, hkv) grid row early-outs against ITS OWN
+    # [q_pos, kv_len] — finished/empty slots (kv_len == 0) cost zero compute
+    b = pl.program_id(0) // hkv_per_b
+    q_pos = scalars_ref[0, b]          # absolute position of the single query
+    kv_len = scalars_ref[1, b]
     needed = _block_needed(ki * block_k, block_k, q_pos, q_pos, kv_len,
                            causal, window)
 
@@ -111,8 +114,8 @@ def pim_decode_pallas(
     k_scale: jax.Array,    # (BHkv, Sk) f32
     v_q: jax.Array,        # (BHkv, Sk, Dh) int8
     v_scale: jax.Array,    # (BHkv, Sk) f32
-    q_offset: jax.Array,   # () int32 — absolute position of the query
-    kv_len: jax.Array,     # () int32 — valid cache length
+    q_offset: jax.Array,   # () or (B,) int32 — absolute position of the query
+    kv_len: jax.Array,     # () or (B,) int32 — valid cache length per slot
     pim_cfg: PIMConfig = PIMConfig(),
     lut_cfg: LUTSoftmaxConfig = LUTSoftmaxConfig(),
     causal: bool = True,
@@ -123,6 +126,11 @@ def pim_decode_pallas(
 ):
     """Split-K decode attention. Returns (BH, 1, Dh) f32.
 
+    `q_offset` / `kv_len` may be () scalars or (B,) per-slot vectors (ragged
+    continuous batching): every (slot, kv-head, k-partition) grid cell
+    early-outs against its own sequence length, so a retired/empty slot
+    (kv_len == 0) executes zero KV partitions.
+
     With `return_iters=True` also returns the (BHkv, n_k_blocks) int32 map of
     KV partitions that actually ran (sum == blocks touched this token).
     """
@@ -132,6 +140,10 @@ def pim_decode_pallas(
     assert BH % BHkv == 0
     G = BH // BHkv
     g_pad = max(8, ((G + 7) // 8) * 8)
+    q_off = jnp.reshape(jnp.asarray(q_offset, jnp.int32), (-1,))
+    kvl = jnp.reshape(jnp.asarray(kv_len, jnp.int32), (-1,))
+    nb = max(q_off.shape[0], kvl.shape[0])
+    assert BHkv % nb == 0, (BHkv, nb)
 
     # pack the q heads of each KV group into the sublane dimension
     qg = q_q[:, 0].reshape(BHkv, G, Dh)
@@ -153,11 +165,11 @@ def pim_decode_pallas(
         _decode_kernel,
         block_k=block_k, g_pad=g_pad, causal=causal, window=window,
         sm_scale=1.0 / (Dh ** 0.5), score_scale=lut_cfg.score_scale,
-        input_bits=lut_cfg.input_bits,
+        input_bits=lut_cfg.input_bits, hkv_per_b=BHkv // nb,
     )
     scalars = jnp.stack(
-        [jnp.asarray(q_offset, jnp.int32), jnp.asarray(kv_len, jnp.int32)]
-    )
+        [jnp.broadcast_to(q_off, (nb,)), jnp.broadcast_to(kvl, (nb,))]
+    )                                                        # (2, nb)
     part_m, part_den, part_acc, iters = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(

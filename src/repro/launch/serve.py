@@ -3,6 +3,10 @@ cache (greedy by default; --temperature/--top-k for sampling).
 
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
       --batch 4 --prompt-len 32 --new-tokens 16 --temperature 0.8 --top-k 40
+
+--continuous-batching serves the same prompts through the ragged slot
+scheduler (per-sequence KV lengths, EOS retirement via --eos-id, slot count
+via --max-batch-slots) instead of the padded equal-length loop.
 """
 from __future__ import annotations
 
@@ -39,6 +43,13 @@ def main(argv=None):
     ap.add_argument("--top-k", type=int, default=0,
                     help="restrict sampling to the top-k logits (0 = all)")
     ap.add_argument("--seed", type=int, default=0, help="sampling rng seed")
+    ap.add_argument("--continuous-batching", action="store_true",
+                    help="serve through the ragged slot scheduler (per-"
+                         "sequence KV lengths + EOS retirement)")
+    ap.add_argument("--max-batch-slots", type=int, default=0,
+                    help="KV cache slots for the scheduler (0 = --batch)")
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="retire sequences on this token id (-1 = never)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -66,13 +77,27 @@ def main(argv=None):
     max_len = args.prompt_len + args.new_tokens
 
     t0 = time.time()
-    out = serve_lib.generate(model, params, batch, args.new_tokens, max_len,
-                             temperature=args.temperature, top_k=args.top_k,
-                             rng=jax.random.PRNGKey(args.seed), mesh=mesh)
+    eos = None if args.eos_id < 0 else args.eos_id
+    out = serve_lib.generate(
+        model, params, batch, args.new_tokens, max_len,
+        temperature=args.temperature, top_k=args.top_k,
+        rng=jax.random.PRNGKey(args.seed),
+        continuous_batching=args.continuous_batching, eos_id=eos,
+        max_batch_slots=args.max_batch_slots or None)
     jax.block_until_ready(out)
     dt = time.time() - t0
-    toks = args.batch * args.new_tokens
-    print(f"[serve] arch={cfg.name} attn={cfg.attn_impl} "
+    if args.continuous_batching and eos is not None:
+        # count only tokens actually emitted (sequences may retire at EOS;
+        # everything after a row's first EOS is padding)
+        import numpy as np
+        toks = 0
+        for row in np.asarray(out):
+            hits = np.flatnonzero(row == eos)
+            toks += int(hits[0]) + 1 if hits.size else row.size
+    else:
+        toks = args.batch * args.new_tokens
+    mode = "scheduler" if args.continuous_batching else "scan-fused"
+    print(f"[serve] arch={cfg.name} attn={cfg.attn_impl} mode={mode} "
           f"temp={args.temperature} top_k={args.top_k} "
           f"generated {out.shape} in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s incl. prefill+compile)")

@@ -110,11 +110,11 @@ def attn_block_fwd_train(params, x, pos_ids, cfg: ModelConfig,
 
 
 def attn_block_init_state(cfg: ModelConfig, batch: int, max_len: int,
-                          window: int = 0):
+                          window: int = 0, ragged: bool = False):
     ring = bool(window) and max_len > window
     cache_len = min(max_len, window) if ring else max_len
     return A.init_kv_cache(batch, cache_len, cfg.num_kv_heads,
-                           cfg.resolved_head_dim, ring=ring)
+                           cfg.resolved_head_dim, ring=ring, ragged=ragged)
 
 
 def _serve_attend(q, cache, offset, cfg: ModelConfig, window: int, causal: bool):
@@ -135,17 +135,29 @@ def _serve_attend(q, cache, offset, cfg: ModelConfig, window: int, causal: bool)
 
 
 def attn_block_fwd_serve(params, x, cache: A.KVCache, offset, cfg: ModelConfig,
-                         window: int = 0, causal: bool = True):
+                         window: int = 0, causal: bool = True, seq_lens=None):
     """Prefill (S>1, offset=0) or decode (S=1, offset=cache fill).
 
-    Sliding-window layers keep a ring cache of `window` positions.
+    Ragged slot mode: `offset` may be a (B,) vector of per-slot write
+    positions, with `seq_lens` (B,) giving the VALID token count per row of
+    this chunk (< S for left-aligned padded prefill rows, 0 for inactive
+    slots).  K/V are scatter-written per slot and attention masks each row
+    against its own length.  Sliding-window (ring) layers stay scalar-only.
     """
     B, S, _ = x.shape
+    ragged = getattr(offset, "ndim", 0) >= 1
     h = L.norm_apply(params["norm1"], x, cfg.norm)
-    pos_ids = offset + jnp.arange(S)
+    pos_ids = (offset[:, None] + jnp.arange(S)[None, :] if ragged
+               else offset + jnp.arange(S))
     q, k, v = _qkv(params["attn"], h, cfg, pos_ids)
     cache_len = cache.k_q.shape[1]
-    if window and cache_len == window:
+    if ragged:
+        if window and cache_len == window:
+            raise NotImplementedError(
+                "ragged serving does not support ring (sliding-window) caches")
+        cache = A.cache_write_ragged(cache, k, v, offset, cfg.pim, seq_lens)
+        o = _serve_attend(q, cache, offset, cfg, window, causal)
+    elif window and cache_len == window:
         if S > 1:
             # windowed prefill: banded attention within the chunk (single-chunk
             # prefill from position 0), then ring-write the last `window`

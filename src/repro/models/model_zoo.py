@@ -115,11 +115,12 @@ def build_model(cfg: ModelConfig) -> Model:
         total = ce + aux
         return total, {"loss": total, "ce": ce, "aux": aux}
 
-    def init_cache(batch, max_len):
-        return T.init_cache(cfg, batch, max_len)
+    def init_cache(batch, max_len, ragged=False):
+        return T.init_cache(cfg, batch, max_len, ragged=ragged)
 
-    def forward_serve(params, batch, cache, offset, enc_out=None):
+    def forward_serve(params, batch, cache, offset, enc_out=None,
+                      seq_lens=None):
         return T.forward_serve(params, batch, cache, offset, cfg,
-                               enc_out=enc_out)
+                               enc_out=enc_out, seq_lens=seq_lens)
 
     return Model(cfg, init, forward_train, loss, init_cache, forward_serve)

@@ -65,9 +65,10 @@ def _block_fwd_train(kind: str, params, x, pos_ids, cfg: ModelConfig,
     raise ValueError(kind)
 
 
-def _block_init_state(kind: str, cfg: ModelConfig, batch: int, max_len: int):
+def _block_init_state(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                      ragged: bool = False):
     if kind in ("attn", "moe"):
-        return B.attn_block_init_state(cfg, batch, max_len)
+        return B.attn_block_init_state(cfg, batch, max_len, ragged=ragged)
     if kind == "attn_local":
         return B.attn_block_init_state(cfg, batch, max_len, window=cfg.window)
     if kind == "xattn":
@@ -82,13 +83,15 @@ def _block_init_state(kind: str, cfg: ModelConfig, batch: int, max_len: int):
 
 
 def _block_fwd_serve(kind: str, params, x, state, offset, cfg: ModelConfig,
-                     enc_out=None):
+                     enc_out=None, seq_lens=None):
     if kind in ("attn", "moe"):
         return B.attn_block_fwd_serve(params, x, state, offset, cfg,
-                                      window=0, causal=cfg.causal)
+                                      window=0, causal=cfg.causal,
+                                      seq_lens=seq_lens)
     if kind == "attn_local":
         return B.attn_block_fwd_serve(params, x, state, offset, cfg,
-                                      window=cfg.window, causal=True)
+                                      window=cfg.window, causal=True,
+                                      seq_lens=seq_lens)
     if kind == "xattn":
         return B.xattn_block_fwd_serve(params, x, state, offset, cfg,
                                        enc_out=enc_out)
@@ -206,8 +209,14 @@ def _embed_inputs(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
     x = L.embed_apply(params["embed"], tokens, jnp.dtype(cfg.compute_dtype))
     if cfg.pos == "absolute":
         S = tokens.shape[1]
-        pe = jax.lax.dynamic_slice_in_dim(
-            params["pos_embed"], offset, S, axis=0)
+        if getattr(offset, "ndim", 0) >= 1:
+            # ragged slots: per-row position gather
+            pos_ids = jnp.clip(offset[:, None] + jnp.arange(S)[None, :],
+                               0, params["pos_embed"].shape[0] - 1)
+            pe = params["pos_embed"][pos_ids]              # (B, S, D)
+        else:
+            pe = jax.lax.dynamic_slice_in_dim(
+                params["pos_embed"], offset, S, axis=0)
         x = x + pe.astype(x.dtype)
     if cfg.num_image_patches and "image_embeds" in batch:
         # stub VLM fusion: project patch embeddings into the first P positions
@@ -285,28 +294,72 @@ def forward_hidden(params, batch: Dict[str, jax.Array], cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 # serve: cache init, prefill, decode
 # ---------------------------------------------------------------------------
-def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               ragged: bool = False):
+    """Serve-state tree.  With `ragged=True` every KV cache carries a (B,)
+    per-slot `length` vector (all zeros = every slot empty/inactive) — the
+    layout the continuous-batching scheduler requires."""
     pat, R, tail = pattern_layout(cfg)
 
     def stacked(kind):
-        st = _block_init_state(kind, cfg, batch, max_len)
+        st = _block_init_state(kind, cfg, batch, max_len, ragged=ragged)
         return jax.tree.map(lambda a: jnp.broadcast_to(a, (R,) + a.shape), st)
 
     cache = {
         "blocks": tuple(stacked(kind) for kind in pat),
-        "tail": tuple(_block_init_state(kind, cfg, batch, max_len)
+        "tail": tuple(_block_init_state(kind, cfg, batch, max_len,
+                                        ragged=ragged)
                       for kind in tail),
     }
     if "moe" in pat and cfg.num_dense_layers:
         cache["dense_prefix"] = tuple(
-            _block_init_state("attn", cfg, batch, max_len)
+            _block_init_state("attn", cfg, batch, max_len, ragged=ragged)
             for _ in range(cfg.num_dense_layers))
     return cache
 
 
+def cache_scatter(big, sub, slots):
+    """Insert the batch rows of a sub-batch serve cache into slots of a big
+    cache: big[..., slots[i], ...] = sub[..., i, ...] for every state leaf.
+
+    Leaves under "blocks" carry a leading layer-repetition axis (batch axis
+    1); "tail"/"dense_prefix" leaves have batch axis 0.  Ring `positions`
+    vectors are batch-shared and left untouched.  `slots` is an (n,) int32
+    array; `sub` must come from `init_cache(cfg, n, max_len, ragged=True)`
+    run through the same forward — identical structure, batch == n.
+    """
+    from repro.core.attention import KVCache
+
+    def leaf(b, s, ax):
+        idx = (slice(None),) * ax + (slots,)
+        return b.at[idx].set(s)
+
+    def visit(b, s, stacked):
+        ax = 1 if stacked else 0
+        if isinstance(b, KVCache):
+            return KVCache(*[
+                getattr(b, f) if f == "positions"
+                else leaf(getattr(b, f), getattr(s, f), ax)
+                for f in b._fields])
+        if isinstance(b, dict):
+            return {k: visit(v, s[k], stacked) for k, v in b.items()}
+        if isinstance(b, (tuple, list)):
+            return type(b)(visit(x, y, stacked) for x, y in zip(b, s))
+        return leaf(b, s, ax)
+
+    return {k: visit(v, sub[k], k == "blocks") for k, v in big.items()}
+
+
 def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
-                  cfg: ModelConfig, enc_out: Optional[jax.Array] = None):
+                  cfg: ModelConfig, enc_out: Optional[jax.Array] = None,
+                  seq_lens: Optional[jax.Array] = None):
     """One serve step (prefill chunk or single-token decode).
+
+    Ragged slot mode: `offset` may be a (B,) vector of per-slot positions and
+    `seq_lens` a (B,) count of valid tokens per row (left-aligned padding
+    beyond it is written to the cache but never advertised via `length`).
+    Logits are then taken at each row's LAST VALID position instead of the
+    shared final position.
 
     Returns (logits_last (B,V), new_cache, enc_out) — enc_out is computed on
     the first (offset==0) call for encoder-decoder archs and threaded back.
@@ -320,7 +373,8 @@ def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
     if "dense_prefix" in cache:
         dp = []
         for p, st in zip(params["dense_prefix"], cache["dense_prefix"]):
-            x, st = _block_fwd_serve("attn", p, x, st, offset, cfg)
+            x, st = _block_fwd_serve("attn", p, x, st, offset, cfg,
+                                     seq_lens=seq_lens)
             dp.append(st)
         new_cache["dense_prefix"] = tuple(dp)
 
@@ -329,7 +383,8 @@ def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
         new_states = []
         for j, kind in enumerate(pat):
             x, st = _block_fwd_serve(kind, group_params[j], x, group_state[j],
-                                     offset, cfg, enc_out=enc_out)
+                                     offset, cfg, enc_out=enc_out,
+                                     seq_lens=seq_lens)
             new_states.append(st)
         return x, tuple(new_states)
 
@@ -341,10 +396,17 @@ def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
         x, st = _block_fwd_serve(
             _moe_kind_for_layer(cfg, kind, R * len(pat) + i),
             params["tail"][i], x, cache["tail"][i], offset, cfg,
-            enc_out=enc_out)
+            enc_out=enc_out, seq_lens=seq_lens)
         new_tail.append(st)
     new_cache["tail"] = tuple(new_tail)
-    x = L.norm_apply(params["final_norm"], x[:, -1:], cfg.norm)
+    if seq_lens is not None:
+        # per-row last valid position (rows with seq_len == 0 read index 0;
+        # their logits are garbage and the caller masks them out)
+        idx = jnp.maximum(jnp.asarray(seq_lens, jnp.int32), 1) - 1
+        x = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    else:
+        x = x[:, -1:]
+    x = L.norm_apply(params["final_norm"], x, cfg.norm)
     head = params["embed"] if cfg.tie_embeddings else params["unembed"]
     logits = L.unembed_apply(head, x)[:, 0]
     return logits, new_cache, enc_out

@@ -4,54 +4,55 @@ The serve path is the paper-faithful dataflow: weights loaded once (int8 in
 the PIM macros == TP-sharded on device), K/V quantized on write, LUT softmax.
 `serve_step` here is what the decode_32k / long_500k dry-run cells lower.
 
-Generation is scan-fused: the whole decode loop is ONE `lax.scan` inside one
-jit with the KV cache donated, so serving `max_new_tokens` tokens is a single
-device program — no per-token Python dispatch, no per-token cache copy.
-`sample_logits` adds temperature / top-k sampling on top of greedy.
+Two generation paths:
+
+  * `generate` (classic): equal-length prompts, scan-fused decode — the whole
+    token loop is ONE `lax.scan` inside one jit with the KV cache donated.
+  * `Scheduler` (ragged continuous batching): the KV cache is a set of batch
+    SLOTS with per-slot lengths; queued requests are admitted into free
+    slots, prefilled left-aligned in a padded sub-batch and scatter-inserted,
+    decoded together in fused chunk-scans where every slot masks/early-outs
+    against its OWN length, and retired on EOS / token budget — at which
+    point the slot is immediately reusable.  `generate(...,
+    continuous_batching=True)` is a thin wrapper over one Scheduler run.
+
+Sharding note: these builders use plain jit with donated caches; partitioning
+propagates from the inputs — the launch layer device_puts params/caches with
+the DESIGN.md §4 specs (sharding.param_shardings / sharding.cache_specs).
 """
 from __future__ import annotations
 
+import collections
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.models import transformer as T
 from repro.models.model_zoo import Model
-from repro.runtime import sharding as sh
 
 
 @functools.lru_cache(maxsize=64)
-def make_prefill_step(model: Model, mesh: Optional[Mesh] = None) -> Callable:
+def make_prefill_step(model: Model) -> Callable:
     """prefill(params, batch, cache) -> (logits_last, cache, enc_out)."""
     def step(params, batch, cache):
         return model.forward_serve(params, batch, cache, 0)
 
-    if mesh is None:
-        return jax.jit(step, donate_argnums=(2,))
-    return _pjit_serve(model, step, mesh, donate=(2,))
+    return jax.jit(step, donate_argnums=(2,))
 
 
 @functools.lru_cache(maxsize=64)
-def make_decode_step(model: Model, mesh: Optional[Mesh] = None) -> Callable:
+def make_decode_step(model: Model) -> Callable:
     """decode(params, tokens, cache, offset, enc_out) -> (logits, cache)."""
     def step(params, batch, cache, offset, enc_out):
         logits, cache, _ = model.forward_serve(params, batch, cache, offset,
                                                enc_out=enc_out)
         return logits, cache
 
-    if mesh is None:
-        return jax.jit(step, donate_argnums=(2,))
-    return _pjit_serve(model, step, mesh, donate=(2,), with_offset=True)
-
-
-def _pjit_serve(model: Model, step, mesh: Mesh, donate, with_offset=False):
-    """jit with sharding constraints left to propagation from the inputs —
-    the launch layer device_puts params/caches with the DESIGN.md §4 specs
-    (params via sharding.param_shardings, caches via sharding.cache_specs)."""
-    return jax.jit(step, donate_argnums=donate)
+    return jax.jit(step, donate_argnums=(2,))
 
 
 def sample_logits(logits: jax.Array, key: Optional[jax.Array],
@@ -59,22 +60,25 @@ def sample_logits(logits: jax.Array, key: Optional[jax.Array],
     """(B, V) logits -> (B,) token ids.
 
     temperature == 0 is greedy (key may be None); otherwise temperature
-    softmax sampling, optionally restricted to the top_k logits.
+    softmax sampling, optionally restricted to the top_k logits.  top_k >= V
+    is clipped to V (i.e. unrestricted); top_k == 1 is greedy regardless of
+    temperature (the only non-(-inf) logit is the max).
     """
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1)
     l = logits.astype(jnp.float32) / temperature
     if top_k:
-        kth = jax.lax.top_k(l, top_k)[0][..., -1:]
-        l = jnp.where(l < kth, -jnp.inf, l)
+        k = min(int(top_k), logits.shape[-1])
+        if k < logits.shape[-1]:
+            kth = jax.lax.top_k(l, k)[0][..., -1:]
+            l = jnp.where(l < kth, -jnp.inf, l)
     return jax.random.categorical(key, l, axis=-1)
 
 
 @functools.lru_cache(maxsize=64)
 def make_generate_fn(model: Model, prompt_len: int, max_new_tokens: int,
-                     mesh: Optional[Mesh] = None, temperature: float = 0.0,
-                     top_k: int = 0) -> Callable:
-    """Build the scan-fused decode program.
+                     temperature: float = 0.0, top_k: int = 0) -> Callable:
+    """Build the scan-fused decode program (classic equal-length path).
 
     Returns generate(params, tok0, cache, rng, enc_out) -> (B, T) ids where
     `tok0` is the (B, 1) token sampled from the prefill logits.  The whole
@@ -103,32 +107,310 @@ def make_generate_fn(model: Model, prompt_len: int, max_new_tokens: int,
     return jax.jit(generate, donate_argnums=(2,))
 
 
+# ===========================================================================
+# ragged continuous batching
+# ===========================================================================
+def scheduler_supported(cfg: ModelConfig) -> bool:
+    """The slot scheduler serves pure attention stacks: recurrent/ring states
+    can't be length-masked per slot (their state mixes padded positions in),
+    and encoder-decoder archs need per-request encoder features."""
+    kinds = set(cfg.block_pattern)
+    return (not cfg.is_encoder_decoder
+            and kinds <= {"attn", "moe"}
+            and not cfg.window)
+
+
+@functools.lru_cache(maxsize=64)
+def make_ragged_prefill_fn(model: Model, n: int, pad_len: int, max_len: int,
+                           temperature: float = 0.0,
+                           top_k: int = 0) -> Callable:
+    """Admission prefill: n left-aligned prompts padded to pad_len are run
+    through one forward with per-row valid lengths (padding K/V beyond a
+    row's length is written but never advertised), each row's first token is
+    sampled from its LAST VALID position's logits, and the sub-batch cache is
+    scatter-inserted into the big cache's free slots.
+    """
+    def prefill(params, tokens, lens, big_cache, slots, key):
+        sub = model.init_cache(n, max_len, ragged=True)
+        offs = jnp.zeros((n,), jnp.int32)
+        logits, sub, _ = model.forward_serve(
+            params, {"tokens": tokens}, sub, offs, seq_lens=lens)
+        tok0 = sample_logits(logits, key, temperature, top_k)
+        return T.cache_scatter(big_cache, sub, slots), tok0
+
+    return jax.jit(prefill, donate_argnums=(3,))
+
+
+@functools.lru_cache(maxsize=64)
+def make_ragged_decode_fn(model: Model, chunk: int, temperature: float,
+                          top_k: int, eos_id: Optional[int],
+                          max_len: int) -> Callable:
+    """Fused ragged decode: `chunk` tokens for ALL slots in one lax.scan.
+
+    Every step writes each active slot's token at its own cache position,
+    attends with per-slot kv_len (inactive slots cost zero KV partitions in
+    the decode kernel), samples, and retires rows that hit EOS / their token
+    budget / the cache capacity — retired rows' lengths drop to 0 so the rest
+    of the chunk skips them entirely.
+
+    Returns decode(params, tok, cache, lengths, active, remaining, key) ->
+    (tok, cache, lengths, active, remaining, key, toks (chunk, B),
+    emitted (chunk, B) bool).
+    """
+    eos = -2 if eos_id is None else int(eos_id)   # -2 never matches a token
+
+    def decode(params, tok, cache, lengths, active, remaining, key):
+        def body(carry, _):
+            tok, cache, lengths, active, remaining, key = carry
+            act = active.astype(jnp.int32)
+            logits, cache, _ = model.forward_serve(
+                params, {"tokens": tok[:, None]}, cache, lengths,
+                seq_lens=act)
+            key, sub = jax.random.split(key)
+            nxt = sample_logits(logits, sub, temperature, top_k)
+            nxt = jnp.where(active, nxt, -1)
+            new_len = lengths + act
+            new_active = (active & (nxt != eos) & (remaining > 1)
+                          & (new_len < max_len))
+            # retired slots advertise length 0 from the NEXT step on: the
+            # decode kernel's per-slot early-out then runs zero partitions
+            lengths = jnp.where(active & ~new_active, 0, new_len)
+            carry = (nxt, cache, lengths, new_active, remaining - act, key)
+            return carry, (nxt, active)
+
+        carry, (toks, emitted) = jax.lax.scan(
+            body, (tok, cache, lengths, active, remaining, key), None,
+            length=chunk)
+        return carry + (toks, emitted)
+
+    return jax.jit(decode, donate_argnums=(2,))
+
+
+class Request:
+    """One generation request tracked by the Scheduler."""
+
+    __slots__ = ("rid", "prompt", "max_new_tokens", "tokens", "done")
+
+    def __init__(self, rid: int, prompt: Sequence[int], max_new_tokens: int):
+        self.rid = rid
+        self.prompt = list(int(t) for t in prompt)
+        self.max_new_tokens = int(max_new_tokens)
+        self.tokens: List[int] = []
+        self.done = False
+
+
+class Scheduler:
+    """Continuous-batching request scheduler over a slot-based KV cache.
+
+    The cache is `max_batch_slots` independent slots with per-slot lengths.
+    `submit` queues requests; every `step`:
+
+      1. admits queued requests into free slots — one bucketed ragged prefill
+         + scatter-insert per admission wave,
+      2. runs one fused `decode_chunk`-token scan over ALL slots (per-slot
+         offsets/lengths; finished or empty slots cost zero kernel compute),
+      3. retires slots whose sequence hit EOS / its token budget / capacity,
+         freeing them for the next admission wave, and returns the newly
+         generated (request_id, tokens) deltas for streaming.
+
+    `run()` drives steps until every request completes and returns
+    {request_id: generated tokens}.
+    """
+
+    def __init__(self, model: Model, params, *, max_batch_slots: int = 8,
+                 max_len: int = 2048, eos_id: Optional[int] = None,
+                 temperature: float = 0.0, top_k: int = 0,
+                 decode_chunk: int = 8, rng: Optional[jax.Array] = None,
+                 prefill_bucket: int = 16):
+        if not scheduler_supported(model.cfg):
+            raise NotImplementedError(
+                f"arch {model.cfg.name!r} is not supported by the slot "
+                "scheduler (needs a pure attention stack, no windows, no "
+                "encoder-decoder)")
+        self.model = model
+        self.params = params
+        self.B = int(max_batch_slots)
+        self.max_len = int(max_len)
+        self.eos_id = eos_id
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self.decode_chunk = int(decode_chunk)
+        self.prefill_bucket = int(prefill_bucket)
+        self.key = jax.random.PRNGKey(0) if rng is None else rng
+
+        self.cache = model.init_cache(self.B, self.max_len, ragged=True)
+        self.lengths = np.zeros(self.B, np.int32)     # per-slot kv fill
+        self.active = np.zeros(self.B, bool)
+        self.remaining = np.zeros(self.B, np.int32)   # token budget left
+        self.cur_tok = np.full(self.B, -1, np.int32)  # next decode input
+        self.slot_req: List[Optional[Request]] = [None] * self.B
+        self.queue: "collections.deque[Request]" = collections.deque()
+        self._next_rid = 0
+
+    # -- request intake -----------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens: int) -> int:
+        if len(prompt) == 0:
+            raise ValueError("empty prompt")
+        if len(prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt length {len(prompt)} >= max_len {self.max_len}")
+        r = Request(self._next_rid, prompt, max_new_tokens)
+        self._next_rid += 1
+        self.queue.append(r)
+        return r.rid
+
+    # -- scheduling ---------------------------------------------------------
+    def _bucket(self, n: int) -> int:
+        b = self.prefill_bucket
+        while b < n:
+            b *= 2
+        # never compile a prefill wider than the cache: positions past
+        # max_len-1 could only ever hold clipped, masked garbage
+        return min(b, self.max_len)
+
+    def _retire(self, slot: int):
+        r = self.slot_req[slot]
+        if r is not None:
+            r.done = True
+        self.slot_req[slot] = None
+        self.active[slot] = False
+        self.lengths[slot] = 0
+
+    def _admit(self, emitted: Dict[int, List[int]]):
+        free = [i for i in range(self.B) if self.slot_req[i] is None]
+        wave: List[Tuple[int, Request]] = []
+        while free and self.queue:
+            wave.append((free.pop(0), self.queue.popleft()))
+        if not wave:
+            return
+        n = len(wave)
+        lens = np.array([len(r.prompt) for _, r in wave], np.int32)
+        L = self._bucket(int(lens.max()))
+        toks = np.zeros((n, L), np.int32)
+        for i, (_, r) in enumerate(wave):
+            toks[i, : len(r.prompt)] = r.prompt
+        slots = np.array([s for s, _ in wave], np.int32)
+        fn = make_ragged_prefill_fn(self.model, n, L, self.max_len,
+                                    self.temperature, self.top_k)
+        self.key, sub = jax.random.split(self.key)
+        self.cache, tok0 = fn(self.params, jnp.asarray(toks),
+                              jnp.asarray(lens), self.cache,
+                              jnp.asarray(slots), sub)
+        tok0 = np.asarray(tok0)
+        for i, (s, r) in enumerate(wave):
+            t0 = int(tok0[i])
+            r.tokens.append(t0)
+            emitted.setdefault(r.rid, []).append(t0)
+            self.slot_req[s] = r
+            self.lengths[s] = lens[i]
+            self.cur_tok[s] = t0
+            self.remaining[s] = r.max_new_tokens - 1
+            done = ((self.eos_id is not None and t0 == self.eos_id)
+                    or r.max_new_tokens <= 1)
+            if done:
+                self._retire(s)
+            else:
+                self.active[s] = True
+
+    def _decode(self, emitted: Dict[int, List[int]]):
+        if not self.active.any():
+            return
+        fn = make_ragged_decode_fn(self.model, self.decode_chunk,
+                                   self.temperature, self.top_k,
+                                   self.eos_id, self.max_len)
+        out = fn(self.params, jnp.asarray(self.cur_tok), self.cache,
+                 jnp.asarray(self.lengths), jnp.asarray(self.active),
+                 jnp.asarray(self.remaining), self.key)
+        tok, self.cache, lengths, active, remaining, self.key, toks, em = out
+        self.cur_tok = np.array(tok)
+        self.lengths = np.array(lengths)
+        self.active = np.array(active)
+        self.remaining = np.array(remaining)
+        toks = np.asarray(toks)                        # (chunk, B)
+        em = np.asarray(em)
+        for b in range(self.B):
+            r = self.slot_req[b]
+            if r is None:
+                continue
+            step_toks = toks[em[:, b], b].tolist()
+            if step_toks:
+                r.tokens.extend(int(t) for t in step_toks)
+                emitted.setdefault(r.rid, []).extend(
+                    int(t) for t in step_toks)
+            if not self.active[b]:
+                self._retire(b)
+
+    def step(self) -> Dict[int, List[int]]:
+        """One scheduling round: admit -> fused decode chunk -> retire.
+        Returns the tokens generated this round, keyed by request id."""
+        emitted: Dict[int, List[int]] = {}
+        self._admit(emitted)
+        self._decode(emitted)
+        return emitted
+
+    def run(self, on_tokens: Optional[Callable[[int, List[int]], None]] = None
+            ) -> Dict[int, List[int]]:
+        """Drive steps until all submitted requests complete.  `on_tokens`
+        (rid, new_tokens) streams deltas as they are generated."""
+        results: Dict[int, List[int]] = {}
+        while self.queue or any(r is not None for r in self.slot_req):
+            for rid, toks in self.step().items():
+                results.setdefault(rid, []).extend(toks)
+                if on_tokens is not None:
+                    on_tokens(rid, toks)
+        return results
+
+
+# ===========================================================================
+# generate entrypoints
+# ===========================================================================
 def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
              max_new_tokens: int, max_len: int,
              temperature: float = 0.0, top_k: int = 0,
              rng: Optional[jax.Array] = None,
-             mesh: Optional[Mesh] = None) -> jax.Array:
-    """Batched generation: prefill + scan-fused decode (the paper's token
-    pipeline, §3.6).  Returns (B, max_new_tokens) generated ids.
+             continuous_batching: bool = False,
+             eos_id: Optional[int] = None,
+             decode_chunk: int = 8,
+             max_batch_slots: Optional[int] = None) -> jax.Array:
+    """Batched generation. Returns (B, max_new_tokens) generated ids.
+
+    Default: equal-length prefill + scan-fused decode (the paper's token
+    pipeline, §3.6).  With `continuous_batching=True` this is a thin wrapper
+    over one `Scheduler` run — per-slot ragged decode with EOS (`eos_id`)
+    retirement over `max_batch_slots` KV slots (default: the batch size);
+    rows that finish early are padded with `eos_id` (or 0).
 
     temperature=0 reproduces greedy decoding exactly; temperature>0 samples
     (optionally top_k-truncated) with `rng` (default PRNGKey(0)).
     """
     B, S = prompt_batch["tokens"].shape
-    prefill = make_prefill_step(model, mesh)
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    if continuous_batching:
+        sched = Scheduler(model, params,
+                          max_batch_slots=max_batch_slots or B,
+                          max_len=max_len, eos_id=eos_id,
+                          temperature=temperature, top_k=top_k,
+                          decode_chunk=decode_chunk, rng=rng)
+        tokens = np.asarray(prompt_batch["tokens"])
+        rids = [sched.submit(tokens[b].tolist(), max_new_tokens)
+                for b in range(B)]
+        results = sched.run()
+        pad = 0 if eos_id is None else int(eos_id)
+        out = np.full((B, max_new_tokens), pad, np.int32)
+        for b, rid in enumerate(rids):
+            got = results.get(rid, [])[:max_new_tokens]
+            out[b, : len(got)] = got
+        return jnp.asarray(out)
+    prefill = make_prefill_step(model)
     cache = model.init_cache(B, max_len)
     logits, cache, enc_out = prefill(params, prompt_batch, cache)
-    rng = jax.random.PRNGKey(0) if rng is None else rng
     rng, sub = jax.random.split(rng)
     tok0 = sample_logits(logits, sub, temperature, top_k)[:, None]
-    decode = make_generate_fn(model, S, max_new_tokens, mesh,
-                              temperature, top_k)
+    decode = make_generate_fn(model, S, max_new_tokens, temperature, top_k)
     return decode(params, tok0, cache, rng, enc_out)
 
 
 def greedy_generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
-                    max_new_tokens: int, max_len: int,
-                    mesh: Optional[Mesh] = None):
+                    max_new_tokens: int, max_len: int):
     """Batched greedy decoding (temperature 0 wrapper around `generate`)."""
-    return generate(model, params, prompt_batch, max_new_tokens, max_len,
-                    mesh=mesh)
+    return generate(model, params, prompt_batch, max_new_tokens, max_len)

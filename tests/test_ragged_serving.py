@@ -1,0 +1,223 @@
+"""Ragged continuous-batching coverage (ISSUE 2).
+
+  * per-slot kv_len parity: vectorized kernels vs a per-sequence reference
+    loop of scalar calls — bit-for-bit
+  * zero-compute on inactive slots (kv_len == 0) via the return_iters probe
+  * ragged behavioral attention parity vs per-sequence scalar calls
+  * cache_write_ragged scatter semantics
+  * Scheduler: greedy parity vs the classic equal-length path, mixed-length
+    per-request parity with slot reuse, EOS retirement mid-scan
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import PIMConfig
+from repro.core import attention as attn
+from repro.data import pipeline as data
+from repro.kernels import ops
+from repro.kernels.pim_attention import pim_attention_pallas
+from repro.kernels.pim_decode import pim_decode_pallas
+from repro.models.model_zoo import build_model
+from repro.runtime import serve_lib
+
+PIM = PIMConfig()
+
+
+def _mixed_cache(key, B, max_len, lens, Hkv, Dh, scale=0.5):
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (B, max_len, Hkv, Dh)) * scale
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (B, max_len, Hkv, Dh)) * scale
+    cache = attn.cache_write(attn.init_kv_cache(B, max_len, Hkv, Dh),
+                             k, v, 0, PIM)
+    return k, v, cache._replace(length=jnp.asarray(lens, jnp.int32))
+
+
+def _single_cache(k, v, b, length, max_len, Hkv, Dh):
+    return attn.cache_write(attn.init_kv_cache(1, max_len, Hkv, Dh),
+                            k[b : b + 1, :length], v[b : b + 1, :length],
+                            0, PIM)
+
+
+# ---------------------------------------------------------------------------
+# kernel-level ragged parity
+# ---------------------------------------------------------------------------
+def test_decode_kernel_per_slot_kv_len_parity_and_zero_compute():
+    """Vector [q_pos_b, kv_len_b] decode == per-sequence scalar reference,
+    bit-for-bit; a kv_len == 0 slot runs ZERO KV partitions and returns 0."""
+    B, max_len, H, Hkv, Dh, bk = 4, 128, 4, 2, 32, 32
+    lens = np.array([90, 1, 0, 37], np.int32)
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, 1, H, Dh)) * 0.5
+    k, v, cache = _mixed_cache(key, B, max_len, lens, Hkv, Dh)
+    qq = ops.kernel_attention_layout(q, cache)
+    offs = jnp.maximum(jnp.asarray(lens) - 1, 0)
+    o_vec, iters = pim_decode_pallas(*qq, offs, cache.length, block_k=bk,
+                                     interpret=True, return_iters=True)
+    o_vec = np.asarray(o_vec).reshape(B, H, 1, Dh)
+    per_slot = np.asarray(iters).reshape(B, Hkv, -1).sum(axis=(1, 2))
+    np.testing.assert_array_equal(per_slot, [Hkv * -(-l // bk) for l in lens])
+    assert per_slot[2] == 0                       # inactive slot: no compute
+    np.testing.assert_array_equal(o_vec[2], 0.0)  # and a well-defined output
+    for b in range(B):
+        if lens[b] == 0:
+            continue
+        cb = _single_cache(k, v, b, int(lens[b]), max_len, Hkv, Dh)
+        qb = ops.kernel_attention_layout(q[b : b + 1], cb)
+        ob = np.asarray(pim_decode_pallas(
+            *qb, jnp.int32(lens[b] - 1), cb.length, block_k=bk,
+            interpret=True)).reshape(H, 1, Dh)
+        np.testing.assert_array_equal(o_vec[b], ob)
+
+
+def test_prefill_kernel_per_row_valid_len_parity():
+    """Ragged prefill: per-row [q_offset, kv_len] masks each row against its
+    OWN length — no cross-contamination vs isolated per-sequence calls."""
+    B, max_len, Sq, H, Hkv, Dh = 3, 96, 8, 4, 2, 32
+    lens = np.array([64, 8, 23], np.int32)
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (B, Sq, H, Dh)) * 0.5
+    k, v, cache = _mixed_cache(key, B, max_len, lens, Hkv, Dh)
+    offs = jnp.maximum(jnp.asarray(lens) - Sq, 0)
+    qq = ops.kernel_attention_layout(q, cache)
+    o, iters = pim_attention_pallas(*qq, offs, cache.length, block_q=8,
+                                    block_k=16, interpret=True,
+                                    return_iters=True)
+    o = np.asarray(o).reshape(B, H, Sq, Dh)
+    for b in range(B):
+        cb = _single_cache(k, v, b, int(lens[b]), max_len, Hkv, Dh)
+        qb = ops.kernel_attention_layout(q[b : b + 1], cb)
+        ob = np.asarray(pim_attention_pallas(
+            *qb, jnp.int32(max(int(lens[b]) - Sq, 0)), cb.length,
+            block_q=8, block_k=16, interpret=True)).reshape(H, Sq, Dh)
+        np.testing.assert_array_equal(o[b], ob)
+    # shorter rows executed fewer KV blocks than the longest one
+    per_row = np.asarray(iters).reshape(B, H, -1).sum(axis=(1, 2))
+    assert per_row[1] < per_row[2] < per_row[0]
+
+
+def test_behavioral_ragged_parity():
+    """core.attention.pim_attention with (B,) q_offset/length == per-sequence
+    scalar calls (the two-pass behavioral pipeline)."""
+    B, max_len, H, Hkv, Dh = 3, 64, 4, 2, 32
+    lens = np.array([50, 7, 21], np.int32)
+    key = jax.random.PRNGKey(2)
+    q = jax.random.normal(key, (B, 1, H, Dh)) * 0.5
+    k, v, cache = _mixed_cache(key, B, max_len, lens, Hkv, Dh)
+    from repro.configs.base import LUTSoftmaxConfig
+    lut = LUTSoftmaxConfig()
+    offs = jnp.maximum(jnp.asarray(lens) - 1, 0)
+    o = np.asarray(attn.pim_attention(q, cache, PIM, lut, offs,
+                                      out_dtype=jnp.float32))
+    for b in range(B):
+        cb = _single_cache(k, v, b, int(lens[b]), max_len, Hkv, Dh)
+        ob = np.asarray(attn.pim_attention(
+            q[b : b + 1], cb, PIM, lut, jnp.int32(lens[b] - 1),
+            out_dtype=jnp.float32))
+        np.testing.assert_array_equal(o[b : b + 1], ob)
+
+
+def test_cache_write_ragged_scatter_and_lengths():
+    B, max_len, Hkv, Dh = 3, 32, 2, 8
+    key = jax.random.PRNGKey(3)
+    base_k = jax.random.normal(key, (B, 4, Hkv, Dh))
+    base_v = jax.random.normal(jax.random.fold_in(key, 1), (B, 4, Hkv, Dh))
+    cache = attn.init_kv_cache(B, max_len, Hkv, Dh, ragged=True)
+    pos = jnp.asarray([0, 5, 20], jnp.int32)
+    seq_lens = jnp.asarray([4, 2, 0], jnp.int32)
+    out = attn.cache_write_ragged(cache, base_k, base_v, pos, PIM, seq_lens)
+    np.testing.assert_array_equal(np.asarray(out.length), [4, 7, 20])
+    kq, _, ks, _ = attn.quantize_kv(base_k, base_v, PIM)
+    # row 1 wrote its 4 tokens at positions 5..8 (2 valid, 2 masked-garbage)
+    np.testing.assert_array_equal(np.asarray(out.k_q[1, 5:9]),
+                                  np.asarray(kq[1]))
+    np.testing.assert_array_equal(np.asarray(out.k_q[1, :5]), 0)
+    np.testing.assert_array_equal(np.asarray(out.k_scale[0, :4]),
+                                  np.asarray(ks[0]))
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_scheduler_equal_length_matches_classic_generate(smoke_model):
+    cfg, model, params = smoke_model
+    prompt = {"tokens": jnp.asarray(data.lm_batch(0, 3, 8, cfg.vocab_size))}
+    out_legacy = serve_lib.greedy_generate(model, params, prompt, 6, 32)
+    out_sched = serve_lib.generate(model, params, prompt, 6, 32,
+                                   continuous_batching=True)
+    np.testing.assert_array_equal(np.asarray(out_legacy),
+                                  np.asarray(out_sched))
+
+
+def test_scheduler_mixed_lengths_slot_reuse_parity(smoke_model):
+    """4 mixed-length requests through 2 slots (forcing queueing + slot
+    reuse) must each reproduce their isolated greedy generation."""
+    cfg, model, params = smoke_model
+    full = np.asarray(data.lm_batch(1, 4, 24, cfg.vocab_size))
+    lens = [5, 17, 24, 9]
+    budgets = [4, 7, 10, 13]
+    sched = serve_lib.Scheduler(model, params, max_batch_slots=2, max_len=64)
+    rids = [sched.submit(full[i][: lens[i]].tolist(), budgets[i])
+            for i in range(4)]
+    res = sched.run()
+    for i in range(4):
+        p = {"tokens": jnp.asarray(full[i : i + 1, : lens[i]])}
+        ref = np.asarray(serve_lib.greedy_generate(
+            model, params, p, budgets[i], 64))[0]
+        np.testing.assert_array_equal(np.asarray(res[rids[i]]), ref)
+
+
+def test_scheduler_eos_retirement_mid_scan(smoke_model):
+    """A sequence emitting eos_id mid-decode-chunk stops exactly there; the
+    freed slot admits the next queued request."""
+    cfg, model, params = smoke_model
+    full = np.asarray(data.lm_batch(2, 2, 12, cfg.vocab_size))
+    # reference run without EOS to learn the greedy stream
+    ref = serve_lib.Scheduler(model, params, max_batch_slots=1, max_len=32,
+                              decode_chunk=8)
+    r0 = ref.submit(full[0].tolist(), 8)
+    stream = ref.run()[r0]
+    eos = stream[3]                       # retire mid-chunk (step 3 of 8)
+    cut = stream.index(eos)               # first occurrence wins
+    sched = serve_lib.Scheduler(model, params, max_batch_slots=1, max_len=32,
+                                decode_chunk=8, eos_id=eos)
+    ra = sched.submit(full[0].tolist(), 8)
+    rb = sched.submit(full[1].tolist(), 3)     # queued behind slot 0
+    res = sched.run()
+    assert res[ra] == stream[: cut + 1]        # truncated at EOS, inclusive
+    # the queued request got the freed slot and ran to its own budget
+    p = {"tokens": jnp.asarray(full[1 : 2])}
+    ref_b = np.asarray(serve_lib.greedy_generate(model, params, p, 3, 32))[0]
+    np.testing.assert_array_equal(np.asarray(res[rb]), ref_b)
+
+
+def test_scheduler_rejects_unsupported_arch():
+    cfg = get_config("recurrentgemma-9b", smoke=True)
+    model = build_model(cfg)
+    with pytest.raises(NotImplementedError):
+        serve_lib.Scheduler(model, None, max_batch_slots=2, max_len=32)
+
+
+def test_scheduler_sampled_determinism(smoke_model):
+    cfg, model, params = smoke_model
+    prompt = {"tokens": jnp.asarray(data.lm_batch(3, 2, 8, cfg.vocab_size))}
+    rng = jax.random.PRNGKey(11)
+    out1 = serve_lib.generate(model, params, prompt, 5, 32, temperature=0.7,
+                              top_k=16, rng=rng, continuous_batching=True)
+    out2 = serve_lib.generate(model, params, prompt, 5, 32, temperature=0.7,
+                              top_k=16, rng=rng, continuous_batching=True)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert bool(jnp.all((out1 >= 0) & (out1 < cfg.vocab_size)))

@@ -77,6 +77,42 @@ def test_sampled_generate_shapes_and_rng_determinism():
     np.testing.assert_array_equal(np.asarray(out_g), np.asarray(out_gg))
 
 
+def test_sample_logits_top_k_geq_vocab_is_unrestricted():
+    """top_k >= V must not error (lax.top_k would) and must equal top_k=0."""
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (4, 16))
+    skey = jax.random.PRNGKey(1)
+    for k in (16, 17, 1000):
+        out = serve_lib.sample_logits(logits, skey, temperature=0.9, top_k=k)
+        ref = serve_lib.sample_logits(logits, skey, temperature=0.9, top_k=0)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_sample_logits_top_k_1_is_greedy_under_any_temperature():
+    key = jax.random.PRNGKey(2)
+    logits = jax.random.normal(key, (8, 32))
+    greedy = jnp.argmax(logits, axis=-1)
+    for temp in (0.1, 1.0, 7.5):
+        out = serve_lib.sample_logits(logits, jax.random.PRNGKey(3),
+                                      temperature=temp, top_k=1)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(greedy))
+
+
+def test_sample_logits_deterministic_under_fixed_key():
+    logits = jax.random.normal(jax.random.PRNGKey(4), (4, 64))
+    key = jax.random.PRNGKey(5)
+    a = serve_lib.sample_logits(logits, key, temperature=1.3, top_k=8)
+    b = serve_lib.sample_logits(logits, key, temperature=1.3, top_k=8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = serve_lib.sample_logits(logits, jax.random.PRNGKey(6),
+                                temperature=1.3, top_k=0)
+    assert bool(jnp.all((c >= 0) & (c < 64)))
+    # temperature 0 is greedy and needs no key at all
+    g = serve_lib.sample_logits(logits, None, temperature=0.0, top_k=5)
+    np.testing.assert_array_equal(np.asarray(g),
+                                  np.asarray(jnp.argmax(logits, axis=-1)))
+
+
 def test_whisper_generate_with_frames():
     cfg = get_config("whisper-tiny", smoke=True)
     model = build_model(cfg)
