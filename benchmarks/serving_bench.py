@@ -1,8 +1,9 @@
-"""Serving throughput: ragged continuous batching vs the padded baseline.
+"""Serving throughput: ragged continuous batching vs the padded baseline,
+and paged-pool admission vs the dense slot cache.
 
-Trace: requests with mixed prompt lengths (16-512 by default) and uneven
-completion budgets (staggered EOS).  Two ways to serve it with the same
-number of KV-cache slots:
+Leg 1 (mixed trace): requests with mixed prompt lengths (16-512 by default)
+and uneven completion budgets (staggered EOS).  Two ways to serve it with
+the same number of KV-cache slots:
 
   * padded baseline — group requests into fixed batches, pad every prompt to
     the trace maximum, decode the batch for the LONGEST completion budget;
@@ -11,12 +12,24 @@ number of KV-cache slots:
     admission prefill, fused chunk decode, EOS/budget retirement and
     immediate slot reuse.
 
-Both paths are compiled+warmed before timing; the tracked signal is useful
-tokens/sec (only tokens within each request's budget count).  A second probe
-measures the decode kernel's per-slot early-out: KV partitions touched per
-token with ragged per-sequence `kv_len` vs the padded whole-batch scalar.
+Leg 2 (long-tail trace): a few near-max_len prompts + many short ones, served
+under the SAME KV token budget two ways:
 
-Writes BENCH_serving.json.  `--smoke` shrinks the trace for CI.
+  * slot scheduler (PR 2 baseline) — budget // max_len dense slots: every
+    admitted request pins a whole max_len buffer, so the shorts queue behind
+    the longs even though most of the pinned KV is dead padding.
+  * paged scheduler — the same budget as a page pool shared by more slot
+    rows: admission needs only the prompt's pages, decode allocates lazily
+    at page boundaries, retirement frees pages immediately — the shorts
+    pack into the pages the longs never touch.
+
+Both paths are compiled+warmed before timing; the tracked signal is useful
+tokens/sec (only tokens within each request's budget count), plus peak KV
+bytes actually pinned.  A probe also measures the decode kernel's per-slot
+early-out: KV partitions touched per token with ragged per-sequence `kv_len`
+vs the padded whole-batch scalar.
+
+Writes BENCH_serving.json.  `--smoke` shrinks the traces for CI.
 """
 from __future__ import annotations
 
@@ -65,12 +78,36 @@ def _serve_padded(model, params, trace, slots, max_len):
     return useful
 
 
-def _serve_ragged(model, params, trace, slots, max_len, chunk):
+def _serve_ragged(model, params, trace, slots, max_len, chunk,
+                  page_size=0, num_pages=0):
     sched = serve_lib.Scheduler(model, params, max_batch_slots=slots,
-                                max_len=max_len, decode_chunk=chunk)
+                                max_len=max_len, decode_chunk=chunk,
+                                page_size=page_size, num_pages=num_pages)
     rids = [sched.submit(p, t) for p, t in trace]
     results = sched.run()
-    return sum(len(results[r]) for r in rids)
+    return sum(len(results[r]) for r in rids), sched
+
+
+def _make_longtail_trace(rng: np.random.RandomState, n_short, n_long,
+                         s_lo, s_hi, long_len, t_lo, t_hi, t_long, vocab):
+    """Few long + many short prompts, longs submitted first (they pin their
+    slots for the whole run — the fragmentation worst case)."""
+    base = np.asarray(data.lm_batch(7, n_short + n_long, long_len, vocab))
+    trace = []
+    for i in range(n_long):
+        trace.append((base[i, :long_len].tolist(), int(t_long)))
+    for i in range(n_short):
+        L = int(rng.randint(s_lo, s_hi + 1))
+        trace.append((base[n_long + i, :L].tolist(),
+                      int(rng.randint(t_lo, t_hi + 1))))
+    return trace
+
+
+def _kv_bytes_per_token(cfg) -> int:
+    """KV bytes pinned per cached token across the whole stack: int8 K + V
+    plus one f32 K-scale + V-scale per kv head, per layer."""
+    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    return cfg.num_layers * (2 * hkv * dh + 2 * 4 * hkv)
 
 
 def _decode_blocks_probe(lens, max_len, block_k):
@@ -121,7 +158,7 @@ def run(smoke: bool = False):
     got_p = _serve_padded(model, params, trace, slots, max_len)
     dt_p = time.time() - t0
     t0 = time.time()
-    got_r = _serve_ragged(model, params, trace, slots, max_len, chunk)
+    got_r, _ = _serve_ragged(model, params, trace, slots, max_len, chunk)
     dt_r = time.time() - t0
     assert got_p == got_r == useful, (got_p, got_r, useful)
 
@@ -132,6 +169,65 @@ def run(smoke: bool = False):
     print(f"padded baseline : {dt_p:6.2f}s  {tps_p:8.1f} tok/s")
     print(f"ragged scheduler: {dt_r:6.2f}s  {tps_r:8.1f} tok/s")
     print(f"speedup         : {dt_p / dt_r:6.2f}x")
+
+    # ---- leg 2: long-tail trace, paged pool vs dense slot cache ----------
+    # equal KV token budget: `slot_slots` dense max_len buffers == the whole
+    # page pool (minus the reserved trash page)
+    # paged_slots is sized so worst-case concurrent demand (longs at full
+    # length + every other slot on a max-size short) stays BELOW the pool:
+    # the paged run must win on throughput while provably pinning fewer
+    # KV bytes at peak than the dense slot cache's always-allocated budget.
+    # Sizing note: this CPU bench runs the BEHAVIORAL attention, whose
+    # per-row cost is O(max_len) with no per-slot early-out — so the paged
+    # win here comes from round reduction (2-4x fewer scheduler rounds at
+    # modest extra per-round cost), which is the overhead-dominated regime
+    # of moderate max_len.  On TPU with the kernel path the per-page
+    # early-out extends the same win to long sequences.
+    if smoke:
+        (n_short, n_long, s_lo, s_hi, long_len, lt_lo, lt_hi, t_long,
+         lt_max_len, ps, slot_slots, paged_slots) = (
+            8, 1, 8, 24, 72, 4, 8, 8, 96, 16, 2, 4)
+    else:
+        (n_short, n_long, s_lo, s_hi, long_len, lt_lo, lt_hi, t_long,
+         lt_max_len, ps, slot_slots, paged_slots) = (
+            28, 1, 12, 24, 96, 4, 8, 16, 128, 16, 2, 4)
+    budget_tokens = slot_slots * lt_max_len
+    num_pages = budget_tokens // ps + 1          # + reserved trash page
+    lt_trace = _make_longtail_trace(np.random.RandomState(1), n_short, n_long,
+                                    s_lo, s_hi, long_len, lt_lo, lt_hi,
+                                    t_long, cfg.vocab_size)
+    lt_useful = sum(t for _, t in lt_trace)
+    print(f"\nlong-tail trace: {n_long} long (prompt {long_len}, budget "
+          f"{t_long}) + {n_short} short (prompts {s_lo}-{s_hi}, budgets "
+          f"{lt_lo}-{lt_hi}); KV budget {budget_tokens} tokens "
+          f"({slot_slots} dense slots == {num_pages - 1} pages of {ps})")
+
+    _serve_ragged(model, params, lt_trace, slot_slots, lt_max_len, chunk)
+    _serve_ragged(model, params, lt_trace, paged_slots, lt_max_len, chunk,
+                  page_size=ps, num_pages=num_pages)
+    t0 = time.time()
+    got_s, _ = _serve_ragged(model, params, lt_trace, slot_slots, lt_max_len,
+                             chunk)
+    dt_s = time.time() - t0
+    t0 = time.time()
+    got_g, paged_sched = _serve_ragged(model, params, lt_trace, paged_slots,
+                                       lt_max_len, chunk, page_size=ps,
+                                       num_pages=num_pages)
+    dt_g = time.time() - t0
+    assert got_s == got_g == lt_useful, (got_s, got_g, lt_useful)
+    tps_s, tps_g = lt_useful / dt_s, lt_useful / dt_g
+    bpt = _kv_bytes_per_token(cfg)
+    slot_pinned = budget_tokens                      # dense: always allocated
+    paged_pinned = paged_sched.peak_pages_in_use * ps
+    print(f"slot scheduler  : {dt_s:6.2f}s  {tps_s:8.1f} tok/s  "
+          f"pinned {slot_pinned} KV tokens ({slot_pinned * bpt} B)")
+    print(f"paged scheduler : {dt_g:6.2f}s  {tps_g:8.1f} tok/s  "
+          f"peak pinned {paged_pinned} KV tokens ({paged_pinned * bpt} B), "
+          f"{paged_sched.n_evictions} evictions")
+    print(f"paged speedup   : {dt_s / dt_g:6.2f}x  "
+          f"(pinned KV bytes/useful token: "
+          f"{slot_pinned * bpt / lt_useful:.0f} -> "
+          f"{paged_pinned * bpt / lt_useful:.0f})")
 
     # fixed-size probe (interpret mode, one decode step): per-slot kv_len
     # early-out vs the padded whole-batch scalar on a 512-token cache
@@ -152,6 +248,26 @@ def run(smoke: bool = False):
         "speedup": round(dt_p / dt_r, 3),
         "decode_blocks_ragged": it_r,
         "decode_blocks_padded": it_p,
+        "longtail": {
+            "n_long": n_long, "long_prompt": long_len, "long_budget": t_long,
+            "n_short": n_short, "short_prompts": [s_lo, s_hi],
+            "short_budgets": [lt_lo, lt_hi],
+            "max_len": lt_max_len, "useful_tokens": lt_useful,
+            "kv_budget_tokens": budget_tokens,
+            "page_size": ps, "num_pages": num_pages,
+            "slot_slots": slot_slots, "paged_slots": paged_slots,
+            "slot_tokens_per_sec": round(tps_s, 2),
+            "paged_tokens_per_sec": round(tps_g, 2),
+            "paged_speedup": round(dt_s / dt_g, 3),
+            "slot_pinned_kv_tokens": slot_pinned,
+            "paged_peak_pinned_kv_tokens": paged_pinned,
+            "kv_bytes_per_token": bpt,
+            "slot_pinned_kv_bytes_per_useful_token":
+                round(slot_pinned * bpt / lt_useful, 1),
+            "paged_pinned_kv_bytes_per_useful_token":
+                round(paged_pinned * bpt / lt_useful, 1),
+            "paged_evictions": paged_sched.n_evictions,
+        },
     }
     with open("BENCH_serving.json", "w") as f:
         json.dump(metrics, f, indent=2, sort_keys=True)
@@ -163,6 +279,13 @@ def run(smoke: bool = False):
     assert tps_r > margin * tps_p, (
         f"ragged scheduler regressed vs padded baseline: {tps_r:.1f} <= "
         f"{margin} * {tps_p:.1f} tok/s")
+    # paged admission must beat the PR 2 slot cache on the long-tail trace
+    # (>= 1.2x in full mode per the ISSUE acceptance bar) AND pin less KV
+    lt_margin = 0.85 if smoke else 1.2
+    assert tps_g > lt_margin * tps_s, (
+        f"paged scheduler too slow vs slot baseline: {tps_g:.1f} <= "
+        f"{lt_margin} * {tps_s:.1f} tok/s")
+    assert paged_pinned < slot_pinned, (paged_pinned, slot_pinned)
     return metrics
 
 

@@ -12,5 +12,7 @@ python -m pytest -x -q
 echo "== kernel + decode benches (parity + pruning probes) =="
 python -m benchmarks.run --only kernel_bench,decode_bench --json BENCH_kernels.json
 
-echo "== serving bench (ragged continuous batching vs padded baseline) =="
+echo "== serving bench: ragged vs padded + paged-pool vs slot-cache (smoke) =="
+# leg 2 inside is the paged-serving smoke: long-tail trace, paged admission
+# must not regress vs the dense slot scheduler (BENCH_serving.json#longtail)
 python -m benchmarks.serving_bench --smoke

@@ -14,10 +14,12 @@ training is QAT through the PIM linears with straight-through gradients).
 """
 from __future__ import annotations
 
+import os
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import LUTSoftmaxConfig, PIMConfig
 from repro.core import quant
@@ -57,6 +59,115 @@ def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
     )
 
 
+# ---------------------------------------------------------------------------
+# paged KV cache: a global pool of fixed-size pages + per-slot page tables
+# ---------------------------------------------------------------------------
+TRASH_PAGE = 0
+"""Physical page 0 is reserved as the write sink for invalid destinations
+(tokens beyond a row's `seq_lens`, or logical positions whose page-table
+entry is unallocated).  The allocator never hands it out, attention masks
+always exclude it (its tokens are beyond every slot's `kv_len`), so garbage
+written there is never observable."""
+
+
+class PagedKVCache(NamedTuple):
+    """int8 PIM-resident KV pool of `num_pages` fixed-size pages.
+
+    Unlike `KVCache` there is no batch axis: every serving slot owns a set of
+    physical pages named by its page-table row (`(B, max_pages)` int32, -1 =
+    unallocated), and slot metadata (per-slot `kv_len`, the table itself)
+    travels alongside the pool instead of inside it.  Page `TRASH_PAGE` (0)
+    is reserved — see its docstring.  Layout matches the dense cache per
+    page: `(num_pages, page_size, Hkv, Dh)` int8 K/V with per-(token, head)
+    scales.
+    """
+
+    k_q: jax.Array        # (P, page_size, Hkv, Dh) int8
+    v_q: jax.Array        # (P, page_size, Hkv, Dh) int8
+    k_scale: jax.Array    # (P, page_size, Hkv) f32
+    v_scale: jax.Array    # (P, page_size, Hkv) f32
+
+    @property
+    def num_pages(self) -> int:
+        return self.k_q.shape[0]
+
+    @property
+    def page_size(self) -> int:
+        return self.k_q.shape[1]
+
+
+def init_paged_kv_cache(num_pages: int, page_size: int, n_kv: int,
+                        head_dim: int) -> PagedKVCache:
+    """Pool of `num_pages` pages (page 0 reserved as the trash page), each
+    holding `page_size` tokens for all `n_kv` heads."""
+    return PagedKVCache(
+        k_q=jnp.zeros((num_pages, page_size, n_kv, head_dim), jnp.int8),
+        v_q=jnp.zeros((num_pages, page_size, n_kv, head_dim), jnp.int8),
+        k_scale=jnp.zeros((num_pages, page_size, n_kv), jnp.float32),
+        v_scale=jnp.zeros((num_pages, page_size, n_kv), jnp.float32),
+    )
+
+
+def paged_cache_write(pool: PagedKVCache, k: jax.Array, v: jax.Array, pos,
+                      cfg: PIMConfig, page_table: jax.Array,
+                      seq_lens=None) -> PagedKVCache:
+    """Per-slot write through the page table: row b's token i lands at
+    logical position pos_b + i, i.e. physical page
+    `page_table[b, (pos_b + i) // page_size]`, offset `(pos_b + i) %
+    page_size`.
+
+    Tokens beyond a row's `seq_lens` (padding of a left-aligned prefill
+    chunk, or an inactive slot's decode garbage) and tokens whose page-table
+    entry is unallocated are routed to `TRASH_PAGE` — unlike the dense slot
+    cache, a stray scatter here would corrupt pages owned by OTHER slots, so
+    the trash page is load-bearing, not just tidy.
+    """
+    B, S = k.shape[:2]
+    ps = pool.page_size
+    n_tables = page_table.shape[1]
+    k_q, v_q, ks, vs = quantize_kv(k, v, cfg)
+    pos = jnp.asarray(pos, jnp.int32)
+    logical = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]  # (B, S)
+    valid = logical < n_tables * ps
+    if seq_lens is not None:
+        valid &= jnp.arange(S)[None, :] < jnp.asarray(seq_lens, jnp.int32)[:, None]
+    page_idx = jnp.clip(logical // ps, 0, n_tables - 1)
+    pid = jnp.take_along_axis(page_table, page_idx, axis=1)           # (B, S)
+    pid = jnp.where(valid & (pid > TRASH_PAGE), pid, TRASH_PAGE)
+    slot = logical % ps
+    return PagedKVCache(
+        k_q=pool.k_q.at[pid, slot].set(k_q),
+        v_q=pool.v_q.at[pid, slot].set(v_q),
+        k_scale=pool.k_scale.at[pid, slot].set(ks),
+        v_scale=pool.v_scale.at[pid, slot].set(vs),
+    )
+
+
+def paged_gather(pool: PagedKVCache, page_table: jax.Array,
+                 kv_len: jax.Array) -> KVCache:
+    """Gather a slot-dense `KVCache` view of the pool: row b of the result is
+    row b of the page table concatenated page by page (unallocated entries
+    read the trash page — always beyond `kv_len`, so masked).
+
+    This is the behavioral reference for the page-table-aware kernels: the
+    gathered view run through `pim_attention` is bit-identical to a dense
+    slot cache holding the same tokens, because masked positions contribute
+    exactly zero to the two-phase LUT normalization.
+    """
+    B = page_table.shape[0]
+    pid = jnp.clip(page_table, 0, pool.num_pages - 1)                 # (B, n)
+    ps, Hkv, Dh = pool.page_size, pool.k_q.shape[2], pool.k_q.shape[3]
+    n = page_table.shape[1]
+    return KVCache(
+        k_q=pool.k_q[pid].reshape(B, n * ps, Hkv, Dh),
+        v_q=pool.v_q[pid].reshape(B, n * ps, Hkv, Dh),
+        k_scale=pool.k_scale[pid].reshape(B, n * ps, Hkv),
+        v_scale=pool.v_scale[pid].reshape(B, n * ps, Hkv),
+        length=jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,)),
+        positions=jnp.zeros((0,), jnp.int32),
+    )
+
+
 def quantize_kv(k: jax.Array, v: jax.Array, cfg: PIMConfig):
     """Quantize-on-write (per token, per kv head)."""
     k_scale = quant.symmetric_max_scale(k, cfg.input_bits, axis=-1)
@@ -82,8 +193,27 @@ def cache_write(cache: KVCache, k: jax.Array, v: jax.Array, pos, cfg: PIMConfig)
     )
 
 
+DEBUG_CACHE_WRITES = bool(int(os.environ.get("REPRO_DEBUG_CACHE_WRITES", "0")))
+"""When set (or `debug=True` is passed), `cache_write_ragged` raises on rows
+whose valid tokens would not fit the buffer instead of silently truncating."""
+
+
+def _raise_on_ragged_overflow(pos, end, max_len):
+    pos, end = np.asarray(pos), np.asarray(end)
+    if (end > max_len).any():
+        bad = np.flatnonzero(end > max_len)
+        raise ValueError(
+            "cache_write_ragged overflow: rows "
+            f"{bad.tolist()} write past max_len={int(max_len)} "
+            f"(pos={pos[bad].tolist()}, end={end[bad].tolist()}); tokens "
+            "beyond the buffer are dropped and `length` is capped — pass "
+            "debug=False / unset REPRO_DEBUG_CACHE_WRITES to accept the "
+            "truncation contract")
+
+
 def cache_write_ragged(cache: KVCache, k: jax.Array, v: jax.Array, pos,
-                       cfg: PIMConfig, seq_lens=None) -> KVCache:
+                       cfg: PIMConfig, seq_lens=None,
+                       debug: Optional[bool] = None) -> KVCache:
     """Per-slot scatter write: batch row b writes its S tokens at buffer
     positions [pos_b, pos_b + S).
 
@@ -93,22 +223,39 @@ def cache_write_ragged(cache: KVCache, k: jax.Array, v: jax.Array, pos,
     their true prompt length and padding K/V beyond it stays masked.  A row
     with seq_lens == 0 (inactive slot) keeps length == pos — typically 0 —
     and the garbage it writes is never visible to attention.
+
+    Truncation contract: a write whose destination position falls outside
+    [0, max_len) is DROPPED (out-of-bounds scatter indices are discarded, the
+    in-bounds prefix of the row is still written) and the row's `length` is
+    capped at max_len — it never clamps onto position max_len - 1, so the
+    last valid token is never silently overwritten.  With `debug=True` (or
+    env REPRO_DEBUG_CACHE_WRITES=1) the overflow is reported: eagerly it
+    raises ValueError before any write; under jit it is best-effort — the
+    `jax.debug.callback` fires with the same error, but async dispatch means
+    the truncating write still completes and the failure may surface later
+    (as an XlaRuntimeError at a sync point) or only in the logged traceback.
     """
     B, S = k.shape[:2]
+    max_len = cache.k_q.shape[1]
     k_q, v_q, ks, vs = quantize_kv(k, v, cfg)
     pos = jnp.asarray(pos, jnp.int32)
     rows = jnp.arange(B)[:, None]
-    cols = jnp.clip(pos[:, None] + jnp.arange(S)[None, :], 0,
-                    cache.k_q.shape[1] - 1)
+    cols = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
     if seq_lens is None:
-        new_len = pos + S
+        end = pos + S
     else:
-        new_len = pos + jnp.asarray(seq_lens, jnp.int32)
+        end = pos + jnp.asarray(seq_lens, jnp.int32)
+    if DEBUG_CACHE_WRITES if debug is None else debug:
+        if isinstance(end, jax.core.Tracer):
+            jax.debug.callback(_raise_on_ragged_overflow, pos, end, max_len)
+        else:
+            _raise_on_ragged_overflow(pos, end, max_len)
+    new_len = jnp.minimum(end, max_len)
     return KVCache(
-        k_q=cache.k_q.at[rows, cols].set(k_q),
-        v_q=cache.v_q.at[rows, cols].set(v_q),
-        k_scale=cache.k_scale.at[rows, cols].set(ks),
-        v_scale=cache.v_scale.at[rows, cols].set(vs),
+        k_q=cache.k_q.at[rows, cols].set(k_q, mode="drop"),
+        v_q=cache.v_q.at[rows, cols].set(v_q, mode="drop"),
+        k_scale=cache.k_scale.at[rows, cols].set(ks, mode="drop"),
+        v_scale=cache.v_scale.at[rows, cols].set(vs, mode="drop"),
         length=new_len,
         positions=cache.positions,
     )
@@ -240,14 +387,23 @@ def expected_kv_block_iters(
 _PIM_ATTN_CHUNK = 512
 
 
-def _pim_attend_block_grouped(qb, q_pos, k_q, ks_bh, v_q, vs_bh, vs_cum,
-                              kv_len, pim_cfg: PIMConfig,
-                              lut_cfg: LUTSoftmaxConfig,
-                              causal: bool, window: int):
-    """GQA-grouped query block: the KV cache is NEVER head-expanded — q is
-    reshaped to (B, cq, Hkv, G, Dh) and contracted against the raw int8
-    cache, so decode reads Hkv-many (not H-many) int8 KV streams.
-    (Beyond-paper optimization; see EXPERIMENTS.md §Perf cell 3.)
+def _pim_attend_block(qb, q_pos, k_q, ks_bh, v_q, vs_bh, vs_cum,
+                      kv_len, pim_cfg: PIMConfig,
+                      lut_cfg: LUTSoftmaxConfig,
+                      causal: bool, window: int):
+    """One query block of the paper's Score -> LUT-Softmax -> AV pipeline,
+    GQA-grouped: q is reshaped to (B, cq, Hkv, G, Dh) and contracted against
+    the raw int8 cache, so decode reads Hkv-many (not H-many) int8 KV
+    streams and the cache is never head-expanded.  (Beyond-paper
+    optimization; see EXPERIMENTS.md §Perf cell 3.)
+
+    The quantized-ADC mode (`adc_mode != "ideal"`) is the G == 1
+    specialization of the same pipeline: the caller head-expands the KV
+    cache and the Score/AV contractions route through the ADC transfer
+    curve (`pim_scores_int` / `pim_av_int`) instead of the direct MXU
+    einsum — every surrounding op (scale folds, requantize, LUT softmax)
+    is shared, and at G == 1 the grouped arithmetic is elementwise
+    identical to the historical ungrouped implementation.
 
     qb: (B, cq, H, Dh); q_pos: (B, cq) absolute positions; kv_len: (B,)
     per-sequence valid cache lengths.  k_q/v_q: (B, Sk, Hkv, Dh) int8;
@@ -256,23 +412,32 @@ def _pim_attend_block_grouped(qb, q_pos, k_q, ks_bh, v_q, vs_bh, vs_cum,
     B, cq, H, Dh = qb.shape
     Sk, Hkv = k_q.shape[1], k_q.shape[2]
     G = H // Hkv
+    ideal = pim_cfg.adc_mode == "ideal"
+    assert ideal or G == 1, "quantized ADC mode requires a head-expanded KV"
     sm_scale = 1.0 / (Dh ** 0.5)
 
+    # --- Score module: int8 QK^T ------------------------------------------
     q_scale = quant.symmetric_max_scale(qb, pim_cfg.input_bits, axis=-1)
     q_q = quant.quantize(qb, q_scale, pim_cfg.input_bits)
-    qg = q_q.reshape(B, cq, Hkv, G, Dh)
-    # Score engine: direct int8 contraction (no int32 KV materialization)
-    s_int = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_q,
-                       preferred_element_type=jnp.int32)   # (B,Hkv,G,cq,Sk)
+    if ideal:
+        qg = q_q.reshape(B, cq, Hkv, G, Dh)
+        # direct int8 contraction (no int32 KV materialization)
+        s_int = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_q,
+                           preferred_element_type=jnp.int32)
+    else:
+        # ADC-quantized partial sums on the (B,H,cq,Sk) layout + G == 1 axis
+        s_int = pim_scores_int(q_q, k_q, pim_cfg)[:, :, None]
     qs = q_scale[..., 0].reshape(B, cq, Hkv, G).transpose(0, 2, 3, 1)
     s_real = (s_int.astype(jnp.float32)
               * qs[..., None]
               * ks_bh[:, :, None, None, :]
-              * sm_scale)
+              * sm_scale)                                  # (B,Hkv,G,cq,Sk)
+    # requantize to the 8-bit score port (paper: QK_output is 2048x8 bits)
     qmax = (1 << (lut_cfg.input_bits - 1)) - 1
     s_codes = jnp.clip(jnp.round(s_real / lut_cfg.score_scale),
                        -qmax - 1, qmax).astype(jnp.int32)
 
+    # --- Softmax module: LUT + 2-phase normalization ----------------------
     k_pos = jnp.arange(Sk)[None, None, :]                  # (1, 1, Sk)
     mask = k_pos < kv_len[:, None, None]                   # (B, cq, Sk)
     if causal:
@@ -282,7 +447,13 @@ def _pim_attend_block_grouped(qb, q_pos, k_q, ks_bh, v_q, vs_bh, vs_cum,
     codes = lut_softmax_codes(s_codes, lut_cfg, mask=mask[:, None, None])
     p_u8 = probs_to_uint8(codes, lut_cfg)                  # (B,Hkv,G,cq,Sk)
 
+    # --- AV through V-stationary PIM macros --------------------------------
+    # Per-token V scales are folded into the probabilities *before* the array
+    # (a digital fixed-point pre-scale of the 8-bit DAC input), so the
+    # in-array contraction stays pure integer and remains ADC-quantizable.
     if causal:
+        # causal fold scale: running max of v scales up to each query position
+        # (never peeks at future tokens — preserves autoregressive semantics)
         idx = jnp.clip(q_pos, 0, Sk - 1)[:, None, :]       # (B, 1, cq)
         s_fold = jnp.maximum(
             jnp.take_along_axis(vs_cum, idx, axis=2), 1e-8)  # (B,Hkv,cq)
@@ -295,77 +466,16 @@ def _pim_attend_block_grouped(qb, q_pos, k_q, ks_bh, v_q, vs_bh, vs_cum,
                   / s_fold[:, :, None, :, None]),
         0, 255,
     ).astype(jnp.int32)
-    # u8 codes (0..255) x int8 V: the KV-side operand stays int8 (the 2.9 GB
-    # stream); the small p tile rides as int32
-    o_int = jnp.einsum("bhgqk,bkhd->bqhgd", p255, v_q,
-                       preferred_element_type=jnp.int32)
+    if ideal:
+        # u8 codes (0..255) x int8 V: the KV-side operand stays int8 (the
+        # 2.9 GB stream); the small p tile rides as int32
+        o_int = jnp.einsum("bhgqk,bkhd->bqhgd", p255, v_q,
+                           preferred_element_type=jnp.int32)
+    else:
+        o_int = pim_av_int(p255[:, :, 0], v_q, pim_cfg)[:, :, :, None]
     o = (o_int.astype(jnp.float32)
          * s_fold.transpose(0, 2, 1)[:, :, :, None, None] * (2.0 ** -8))
     return o.reshape(B, cq, H, Dh)
-
-
-def _pim_attend_block(qb, q_pos, k_q, k_scale_bh, v_q, vs_bh, vs_cum, kv_len,
-                      pim_cfg: PIMConfig, lut_cfg: LUTSoftmaxConfig,
-                      causal: bool, window: int):
-    """One query block of the paper's Score -> LUT-Softmax -> AV pipeline.
-
-    qb: (B, cq, H, Dh); q_pos: (B, cq) absolute positions; kv_len: (B,).
-    k_q/v_q: (B, Sk, H, Dh) int8 (GQA-expanded); *_bh scales: (B, H, Sk).
-    """
-    B, cq, H, Dh = qb.shape
-    Sk = k_q.shape[1]
-    sm_scale = 1.0 / (Dh ** 0.5)
-
-    # --- Score module: int8 QK^T ------------------------------------------
-    q_scale = quant.symmetric_max_scale(qb, pim_cfg.input_bits, axis=-1)
-    q_qb = quant.quantize(qb, q_scale, pim_cfg.input_bits)
-    s_int = pim_scores_int(q_qb, k_q, pim_cfg)                 # (B,H,cq,Sk)
-    s_real = (
-        s_int
-        * q_scale[:, :, :, 0].transpose(0, 2, 1)[:, :, :, None]
-        * k_scale_bh[:, :, None, :]
-        * sm_scale
-    )
-    # requantize to the 8-bit score port (paper: QK_output is 2048x8 bits)
-    qmax = (1 << (lut_cfg.input_bits - 1)) - 1
-    s_codes = jnp.clip(
-        jnp.round(s_real / lut_cfg.score_scale), -qmax - 1, qmax
-    ).astype(jnp.int32)
-
-    # --- Softmax module: LUT + 2-phase normalization ----------------------
-    k_pos = jnp.arange(Sk)[None, None, :]                      # (1, 1, Sk)
-    mask = k_pos < kv_len[:, None, None]                       # (B, cq, Sk)
-    if causal:
-        mask = mask & (k_pos <= q_pos[:, :, None])
-    if window:
-        mask = mask & (k_pos > q_pos[:, :, None] - window)
-    codes = lut_softmax_codes(s_codes, lut_cfg, mask=mask[:, None])
-
-    # --- AV through V-stationary PIM macros --------------------------------
-    # Per-token V scales are folded into the probabilities *before* the array
-    # (a digital fixed-point pre-scale of the 8-bit DAC input), so the
-    # in-array contraction stays pure integer and remains ADC-quantizable.
-    p_u8 = probs_to_uint8(codes, lut_cfg)                      # (B,H,cq,Sk)
-    if causal:
-        # causal fold scale: running max of v scales up to each query position
-        # (never peeks at future tokens — preserves autoregressive semantics)
-        idx = jnp.clip(q_pos, 0, Sk - 1)[:, None, :]           # (B, 1, cq)
-        s_fold = jnp.maximum(
-            jnp.take_along_axis(vs_cum, idx, axis=2), 1e-8)    # (B,H,cq)
-    else:
-        s_fold = jnp.maximum(
-            jnp.max(vs_bh, axis=-1, keepdims=True), 1e-8
-        ) * jnp.ones((1, 1, cq))
-    p_fold = jnp.clip(
-        jnp.round(
-            p_u8.astype(jnp.float32)
-            * vs_bh[:, :, None, :]
-            / s_fold[:, :, :, None]
-        ),
-        0, 255,
-    ).astype(jnp.int32)
-    o_int = pim_av_int(p_fold, v_q, pim_cfg)                   # (B,cq,H,Dh)
-    return o_int * s_fold.transpose(0, 2, 1)[..., None] * (2.0 ** -8)
 
 
 def pim_attention(
@@ -401,15 +511,16 @@ def pim_attention(
         k_q, v_q = cache.k_q, cache.v_q
         ks_bh = cache.k_scale.transpose(0, 2, 1)               # (B,Hkv,Sk)
         vs_bh = cache.v_scale.transpose(0, 2, 1)
-        block = _pim_attend_block_grouped
     else:
+        # quantized ADC: head-expand so the G == 1 branch of the shared
+        # block routes every contraction through the ADC transfer curve
         k_q = _expand_kv(cache.k_q, q_per_kv)
         ks_bh = _expand_kv(cache.k_scale[..., None], q_per_kv
                            )[..., 0].transpose(0, 2, 1)        # (B,H,Sk)
         v_q = _expand_kv(cache.v_q, q_per_kv)
         vs_bh = _expand_kv(cache.v_scale[..., None], q_per_kv
                            )[..., 0].transpose(0, 2, 1)
-        block = _pim_attend_block
+    block = _pim_attend_block
     vs_cum = jax.lax.cummax(vs_bh, axis=2) if causal else vs_bh
 
     cq = _PIM_ATTN_CHUNK

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import LUTSoftmaxConfig, PIMConfig
 from repro.core import quant
-from repro.core.attention import KVCache
+from repro.core.attention import KVCache, PagedKVCache
 from repro.kernels import pim_attention as _attn_k
 from repro.kernels import pim_decode as _dec_k
 from repro.kernels import pim_matmul as _mm_k
@@ -54,6 +54,16 @@ def lut_softmax(
     return codes.reshape(lead + (scores_q.shape[-1],))
 
 
+def _q_kernel_layout(q: jax.Array, input_bits: int):
+    """(B, Sq, H, Dh) float q -> head-major int8 (B*H, Sq, Dh) + scales."""
+    B, Sq, H, Dh = q.shape
+    q_scale = quant.symmetric_max_scale(q, input_bits, axis=-1)
+    q_q = quant.quantize(q, q_scale, input_bits)
+    q_q = q_q.transpose(0, 2, 1, 3).reshape(B * H, Sq, Dh)
+    qs = q_scale[..., 0].transpose(0, 2, 1).reshape(B * H, Sq)
+    return q_q, qs
+
+
 def kernel_attention_layout(q: jax.Array, cache: KVCache,
                             input_bits: int = 8):
     """(B, Sq, H, Dh) float q + KVCache -> the flat head-major int8 operand
@@ -62,16 +72,23 @@ def kernel_attention_layout(q: jax.Array, cache: KVCache,
     ordered so that q row bh maps to KV row bh // q_per_kv."""
     B, Sq, H, Dh = q.shape
     _, Sk, Hkv, _ = cache.k_q.shape
-    q_scale = quant.symmetric_max_scale(q, input_bits, axis=-1)
-    q_q = quant.quantize(q, q_scale, input_bits)
-    # (B, S, H, D) -> (B*H, S, D)
-    q_q = q_q.transpose(0, 2, 1, 3).reshape(B * H, Sq, Dh)
-    qs = q_scale[..., 0].transpose(0, 2, 1).reshape(B * H, Sq)
+    q_q, qs = _q_kernel_layout(q, input_bits)
     k_q = cache.k_q.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, Dh)
     v_q = cache.v_q.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, Dh)
     ks = cache.k_scale.transpose(0, 2, 1).reshape(B * Hkv, Sk)
     vs = cache.v_scale.transpose(0, 2, 1).reshape(B * Hkv, Sk)
     return q_q, qs, k_q, ks, v_q, vs
+
+
+def paged_kernel_layout(pool: PagedKVCache):
+    """(P, page_size, Hkv, Dh) pool -> the head-major page-pool layout the
+    page-table-aware kernels take: (Hkv, P, page_size, Dh) K/V with
+    (Hkv, P, page_size) scales."""
+    k_q = pool.k_q.transpose(2, 0, 1, 3)
+    v_q = pool.v_q.transpose(2, 0, 1, 3)
+    ks = pool.k_scale.transpose(2, 0, 1)
+    vs = pool.v_scale.transpose(2, 0, 1)
+    return k_q, ks, v_q, vs
 
 
 def pim_flash_attention(
@@ -108,5 +125,46 @@ def pim_flash_attention(
             jnp.asarray(q_offset, jnp.int32), cache.length,
             pim_cfg, lut_cfg, causal=causal, window=window,
             interpret=_interpret(),
+        )
+    return o.reshape(B, H, Sq, Dh).transpose(0, 2, 1, 3).astype(out_dtype)
+
+
+def pim_paged_flash_attention(
+    q: jax.Array,              # (B, Sq, H, Dh) float
+    pool: PagedKVCache,
+    page_table: jax.Array,     # (B, max_pages) int32, -1 = unallocated
+    kv_len: jax.Array,         # (B,) int32 valid tokens per slot
+    q_offset,                  # (B,) int32 absolute position of query 0
+    pim_cfg: PIMConfig = PIMConfig(),
+    lut_cfg: LUTSoftmaxConfig = LUTSoftmaxConfig(),
+    causal: bool = True,
+    out_dtype=jnp.bfloat16,
+    decode_kernel: bool = True,
+) -> jax.Array:
+    """Fused PIM attention over the paged KV pool: both kernels walk the
+    slot's page-table row instead of a contiguous cache (pages are the
+    split-K partitions of the decode grid; the prefill kernel's KV axis runs
+    over table entries).  Bit-identical to `pim_flash_attention` over a
+    dense cache holding the same tokens with block_k == page_size.
+
+    Sliding-window layers are not paged (the scheduler gates them out), so
+    there is no `window` parameter here.
+    """
+    B, Sq, H, Dh = q.shape
+    q_q, qs = _q_kernel_layout(q, pim_cfg.input_bits)
+    k_q, ks, v_q, vs = paged_kernel_layout(pool)
+    if Sq == 1 and decode_kernel:
+        o = _dec_k.pim_decode_pallas(
+            q_q, qs, k_q, ks, v_q, vs,
+            jnp.asarray(q_offset, jnp.int32), jnp.asarray(kv_len, jnp.int32),
+            pim_cfg, lut_cfg, causal=causal, interpret=_interpret(),
+            page_table=page_table,
+        )
+    else:
+        o = _attn_k.pim_attention_pallas(
+            q_q, qs, k_q, ks, v_q, vs,
+            jnp.asarray(q_offset, jnp.int32), jnp.asarray(kv_len, jnp.int32),
+            pim_cfg, lut_cfg, causal=causal, interpret=_interpret(),
+            page_table=page_table,
         )
     return o.reshape(B, H, Sq, Dh).transpose(0, 2, 1, 3).astype(out_dtype)

@@ -67,6 +67,7 @@ def _block_needed(k_start, block_k, q_lo, q_hi, kv_len, causal: bool,
 
 def _attn_kernel(
     scalars_ref,                       # SMEM (2, nb): [q_offset_b, kv_len_b]
+    pt_ref,                            # SMEM (nb, n_k_blocks) page table
     q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, table_ref,
     out_ref, iters_ref,
     m_ref, denom_ref, acc_ref,
@@ -90,25 +91,27 @@ def _attn_kernel(
     kv_len = scalars_ref[1, b]
 
     qi = pl.program_id(1)
+    # an unallocated page (id < 0) is a clamped placeholder fetch and must be
+    # skipped even with prune=False — its tokens are beyond kv_len by the
+    # allocator invariant (dense callers pass an all-zero dummy table)
+    needed = pt_ref[b, ki] >= 0
     if prune:
-        needed = _block_needed(
+        needed &= _block_needed(
             ki * block_k, block_k,
             q_offset + qi * block_q, q_offset + (qi + 1) * block_q - 1,
             kv_len, causal, window,
         )
-    else:
-        needed = jnp.bool_(True)
 
     @pl.when(needed)
     def _body():
         iters_ref[0, 0] += 1
         q = q_ref[...][0]                  # (bq, Dh) int8
-        k = k_ref[...][0]                  # (bk, Dh) int8
+        k = k_ref[...].reshape(block_k, k_ref.shape[-1])   # (bk, Dh) int8
         s_int = jax.lax.dot_general(       # (bq, bk) int32 — the PIM Score engine
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
         )
         qs = qs_ref[...][0]                # (bq,) f32
-        ks = ks_ref[...][0]                # (bk,) f32
+        ks = ks_ref[...].reshape(block_k)  # (bk,) f32
         s_real = s_int.astype(jnp.float32) * qs[:, None] * ks[None, :] * sm_scale
 
         # requantize to the 8-bit score port
@@ -148,8 +151,8 @@ def _attn_kernel(
             e = jax.lax.dynamic_update_slice(e, e_c, (0, lo))
 
         denom_ref[...] = denom_ref[...] * resc + jnp.sum(e, axis=-1, keepdims=True)
-        v = v_ref[...][0]                  # (bk, Dh) int8
-        vs = vs_ref[...][0]                # (bk,) f32
+        v = v_ref[...].reshape(block_k, v_ref.shape[-1])   # (bk, Dh) int8
+        vs = vs_ref[...].reshape(block_k)  # (bk,) f32
         v_deq = v.astype(jnp.float32) * vs[:, None]
         pv = jax.lax.dot_general(
             e, v_deq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
@@ -173,10 +176,10 @@ def _attn_kernel(
 def pim_attention_pallas(
     q_q: jax.Array,        # (BH, Sq, Dh) int8
     q_scale: jax.Array,    # (BH, Sq) f32
-    k_q: jax.Array,        # (BHkv, Sk, Dh) int8
-    k_scale: jax.Array,    # (BHkv, Sk) f32
-    v_q: jax.Array,        # (BHkv, Sk, Dh) int8
-    v_scale: jax.Array,    # (BHkv, Sk) f32
+    k_q: jax.Array,        # (BHkv, Sk, Dh) int8, or (Hkv, P, ps, Dh) paged
+    k_scale: jax.Array,    # (BHkv, Sk) f32, or (Hkv, P, ps) paged
+    v_q: jax.Array,        # like k_q
+    v_scale: jax.Array,    # like k_scale
     q_offset: jax.Array,   # () or (B,) int32 — absolute position of query 0
     kv_len: jax.Array,     # () or (B,) int32 — valid cache length per sequence
     pim_cfg: PIMConfig = PIMConfig(),
@@ -189,6 +192,7 @@ def pim_attention_pallas(
     interpret: bool = False,
     prune: bool = True,
     return_iters: bool = False,
+    page_table: jax.Array | None = None,   # (B, max_pages) int32, -1 = free
 ):
     """Fused PIM attention. Returns (BH, Sq, Dh) f32 (scales already applied).
 
@@ -198,31 +202,52 @@ def pim_attention_pallas(
     prefill packs without cross-contamination and empty rows cost zero
     KV-block iterations.
 
+    With `page_table` set, K/V operands are a page pool in head-major layout
+    (`(Hkv, num_pages, page_size, Dh)`): the KV grid axis runs over the
+    table width, `block_k` is forced to the page size, and each
+    (head, q-block, kv-block) cell streams the physical page named by its
+    slot's table row (scalar-prefetched SMEM read inside the BlockSpec
+    index map).  Unallocated entries (-1) execute zero iterations — chunked
+    ragged prefill over scattered pages is bit-identical to the dense
+    layout at block_k == page_size.
+
     With `return_iters=True` also returns the (BH, n_q_blocks) int32 count of
     KV-block iterations each q-block actually executed (the grid-pruning
     probe: causal prefill ~halves it, decode sees ceil(kv_len/block_k)).
     """
     BH, Sq, Dh = q_q.shape
-    BHkv, Sk, _ = k_q.shape
-    assert BH % BHkv == 0
-    q_per_kv = BH // BHkv
     q_off = jnp.reshape(jnp.asarray(q_offset, jnp.int32), (-1,))
     kvl = jnp.reshape(jnp.asarray(kv_len, jnp.int32), (-1,))
     nb = max(q_off.shape[0], kvl.shape[0])
     assert BH % nb == 0, (BH, nb)
+    if page_table is not None:
+        Hkv, P, ps, _ = k_q.shape
+        assert page_table.shape[0] == nb, (page_table.shape, nb)
+        block_k = ps
+        n_k_blocks = page_table.shape[1]
+        q_per_kv = BH // (nb * Hkv)
+        pt = jnp.asarray(page_table, jnp.int32)
+    else:
+        BHkv, Sk, _ = k_q.shape
+        assert BH % BHkv == 0
+        q_per_kv = BH // BHkv
+        pad_k = (-Sk) % block_k
+        if pad_k:
+            k_q = jnp.pad(k_q, ((0, 0), (0, pad_k), (0, 0)))
+            v_q = jnp.pad(v_q, ((0, 0), (0, pad_k), (0, 0)))
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad_k)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad_k)))
+        n_k_blocks = (Sk + pad_k) // block_k
+        pt = jnp.zeros((nb, n_k_blocks), jnp.int32)   # dummy: all allocated
     block_q = min(block_q, max(8, ((Sq + 7) // 8) * 8))
-    pad_q, pad_k = (-Sq) % block_q, (-Sk) % block_k
+    pad_q = (-Sq) % block_q
     if pad_q:
         q_q = jnp.pad(q_q, ((0, 0), (0, pad_q), (0, 0)))
         q_scale = jnp.pad(q_scale, ((0, 0), (0, pad_q)))
-    if pad_k:
-        k_q = jnp.pad(k_q, ((0, 0), (0, pad_k), (0, 0)))
-        v_q = jnp.pad(v_q, ((0, 0), (0, pad_k), (0, 0)))
-        k_scale = jnp.pad(k_scale, ((0, 0), (0, pad_k)))
-        v_scale = jnp.pad(v_scale, ((0, 0), (0, pad_k)))
-    Sqp, Skp = Sq + pad_q, Sk + pad_k
-    grid = (BH, Sqp // block_q, Skp // block_k)
+    Sqp = Sq + pad_q
+    grid = (BH, Sqp // block_q, n_k_blocks)
     table, frac = build_exp_table(lut_cfg)
+    h_per_b = BH // nb
 
     kernel = functools.partial(
         _attn_kernel,
@@ -231,38 +256,53 @@ def pim_attention_pallas(
         sm_scale=1.0 / (Dh ** 0.5), score_scale=lut_cfg.score_scale,
         input_bits=lut_cfg.input_bits, table_frac_bits=frac,
         gather_chunk=min(gather_chunk, block_k),
-        prune=prune, h_per_b=BH // nb,
+        prune=prune, h_per_b=h_per_b,
     )
     scalars = jnp.stack(
         [jnp.broadcast_to(q_off, (nb,)), jnp.broadcast_to(kvl, (nb,))]
     )                                                        # (2, nb)
+    if page_table is not None:
+        # flat q row b*H + h attends kv head (b*H + h) // q_per_kv; its page
+        # pool row is that modulo Hkv, and the page comes from the slot's
+        # scalar-prefetched table (clamped to the trash page when -1 — the
+        # guarded body never reads the placeholder)
+        kv_spec = pl.BlockSpec(
+            (1, 1, block_k, Dh),
+            lambda b, i, k, s, t, qpk=q_per_kv, hk=Hkv, hb=h_per_b: (
+                jax.lax.rem(b // qpk, hk),
+                jnp.maximum(t[b // hb, k], 0), 0, 0),
+        )
+        kvs_spec = pl.BlockSpec(
+            (1, 1, block_k),
+            lambda b, i, k, s, t, qpk=q_per_kv, hk=Hkv, hb=h_per_b: (
+                jax.lax.rem(b // qpk, hk),
+                jnp.maximum(t[b // hb, k], 0), 0),
+        )
+    else:
+        kv_spec = pl.BlockSpec(
+            (1, block_k, Dh),
+            lambda b, i, k, s, t, qpk=q_per_kv: (b // qpk, k, 0),
+        )
+        kvs_spec = pl.BlockSpec(
+            (1, block_k), lambda b, i, k, s, t, qpk=q_per_kv: (b // qpk, k)
+        )
     out, iters = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, block_q, Dh), lambda b, i, k, s: (b, i, 0)),
-                pl.BlockSpec((1, block_q), lambda b, i, k, s: (b, i)),
-                pl.BlockSpec(
-                    (1, block_k, Dh),
-                    lambda b, i, k, s, qpk=q_per_kv: (b // qpk, k, 0),
-                ),
-                pl.BlockSpec(
-                    (1, block_k), lambda b, i, k, s, qpk=q_per_kv: (b // qpk, k)
-                ),
-                pl.BlockSpec(
-                    (1, block_k, Dh),
-                    lambda b, i, k, s, qpk=q_per_kv: (b // qpk, k, 0),
-                ),
-                pl.BlockSpec(
-                    (1, block_k), lambda b, i, k, s, qpk=q_per_kv: (b // qpk, k)
-                ),
-                pl.BlockSpec((256,), lambda b, i, k, s: (0,)),
+                pl.BlockSpec((1, block_q, Dh), lambda b, i, k, s, t: (b, i, 0)),
+                pl.BlockSpec((1, block_q), lambda b, i, k, s, t: (b, i)),
+                kv_spec,
+                kvs_spec,
+                kv_spec,
+                kvs_spec,
+                pl.BlockSpec((256,), lambda b, i, k, s, t: (0,)),
             ],
             out_specs=[
-                pl.BlockSpec((1, block_q, Dh), lambda b, i, k, s: (b, i, 0)),
-                pl.BlockSpec((1, 1), lambda b, i, k, s: (b, i)),
+                pl.BlockSpec((1, block_q, Dh), lambda b, i, k, s, t: (b, i, 0)),
+                pl.BlockSpec((1, 1), lambda b, i, k, s, t: (b, i)),
             ],
             scratch_shapes=[
                 pltpu.VMEM((block_q, 1), jnp.float32),
@@ -275,7 +315,7 @@ def pim_attention_pallas(
             jax.ShapeDtypeStruct((BH, Sqp // block_q), jnp.int32),
         ],
         interpret=interpret,
-    )(scalars, q_q, q_scale, k_q, k_scale, v_q, v_scale, table)
+    )(scalars, pt, q_q, q_scale, k_q, k_scale, v_q, v_scale, table)
     out = out[:, :Sq]
     if return_iters:
         return out, iters

@@ -22,6 +22,16 @@ paper's integer dataflow:
     factors from the SAME 256-entry exp table (exp(-d*s) = table[d]/2^frac),
     exactly the arithmetic the online prefill kernel uses between blocks, so
     split-K numerics stay paper-faithful (within the usual LUT rounding).
+  * **Paged KV walk** — with `page_table` set, K/V come from a global page
+    pool (`(Hkv, P, page_size, Dh)` head-major layout) and every KV
+    partition IS one page: the BlockSpec index map reads the slot's
+    page-table row from SMEM (scalar prefetch) to turn the logical
+    partition index into a physical page id, so the split-K grid walks
+    scattered pages exactly as it walks a contiguous cache.  Unallocated
+    entries (-1) early-out like out-of-length partitions: zero compute,
+    and the combine treats them as empty (exact zero contribution), so
+    paged output is bit-identical to the dense layout at block_k ==
+    page_size.
 """
 from __future__ import annotations
 
@@ -39,6 +49,7 @@ from repro.kernels.pim_attention import _NEG, _block_needed, _lut_gather
 
 def _decode_kernel(
     scalars_ref,                       # SMEM (2, nb): [q_pos_b, kv_len_b]
+    pt_ref,                            # SMEM (nb, n_k_blocks) page table
     q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, table_ref,
     m_ref, den_ref, acc_ref, iters_ref,
     *, block_k: int, g_pad: int, causal: bool, window: int,
@@ -50,19 +61,23 @@ def _decode_kernel(
     b = pl.program_id(0) // hkv_per_b
     q_pos = scalars_ref[0, b]          # absolute position of the single query
     kv_len = scalars_ref[1, b]
-    needed = _block_needed(ki * block_k, block_k, q_pos, q_pos, kv_len,
-                           causal, window)
+    # unallocated pages (id < 0) can never contribute: their tokens are
+    # beyond kv_len by the allocator invariant, and their VMEM block is a
+    # clamped placeholder fetch — skip before any compute (dense callers
+    # pass an all-zero dummy table, so this is a no-op there)
+    needed = (pt_ref[b, ki] >= 0) & _block_needed(
+        ki * block_k, block_k, q_pos, q_pos, kv_len, causal, window)
 
     @pl.when(needed)
     def _body():
         iters_ref[0, 0] = 1
-        q = q_ref[...][0]              # (G, Dh) int8 — packed group heads
-        k = k_ref[...][0]              # (bk, Dh) int8
+        q = q_ref[...].reshape(g_pad, q_ref.shape[-1])    # (G, Dh) int8
+        k = k_ref[...].reshape(block_k, k_ref.shape[-1])  # (bk, Dh) int8
         s_int = jax.lax.dot_general(   # (G, bk) int32 — the PIM Score engine
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
         )
-        qs = qs_ref[...][0]            # (G,) f32
-        ks = ks_ref[...][0]            # (bk,) f32
+        qs = qs_ref[...].reshape(g_pad)                   # (G,) f32
+        ks = ks_ref[...].reshape(block_k)                 # (bk,) f32
         s_real = s_int.astype(jnp.float32) * qs[:, None] * ks[None, :] * sm_scale
 
         qmax = float((1 << (input_bits - 1)) - 1)
@@ -82,8 +97,8 @@ def _decode_kernel(
         m = jnp.max(codes, axis=-1, keepdims=True)           # (G, 1)
         d = jnp.clip(m - codes, 0, 255).astype(jnp.int32)
         e = jnp.where(mask, _lut_gather(d, table_f), 0.0)    # (G, bk)
-        v = v_ref[...][0]              # (bk, Dh) int8
-        vs = vs_ref[...][0]            # (bk,) f32
+        v = v_ref[...].reshape(block_k, v_ref.shape[-1])     # (bk, Dh) int8
+        vs = vs_ref[...].reshape(block_k)                    # (bk,) f32
         v_deq = v.astype(jnp.float32) * vs[:, None]
         acc = jax.lax.dot_general(     # (G, Dh)
             e, v_deq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
@@ -110,10 +125,10 @@ def _decode_kernel(
 def pim_decode_pallas(
     q_q: jax.Array,        # (BH, 1, Dh) int8
     q_scale: jax.Array,    # (BH, 1) f32
-    k_q: jax.Array,        # (BHkv, Sk, Dh) int8
-    k_scale: jax.Array,    # (BHkv, Sk) f32
-    v_q: jax.Array,        # (BHkv, Sk, Dh) int8
-    v_scale: jax.Array,    # (BHkv, Sk) f32
+    k_q: jax.Array,        # (BHkv, Sk, Dh) int8, or (Hkv, P, ps, Dh) paged
+    k_scale: jax.Array,    # (BHkv, Sk) f32, or (Hkv, P, ps) paged
+    v_q: jax.Array,        # like k_q
+    v_scale: jax.Array,    # like k_scale
     q_offset: jax.Array,   # () or (B,) int32 — absolute position of the query
     kv_len: jax.Array,     # () or (B,) int32 — valid cache length per slot
     pim_cfg: PIMConfig = PIMConfig(),
@@ -123,6 +138,7 @@ def pim_decode_pallas(
     block_k: int = 256,
     interpret: bool = False,
     return_iters: bool = False,
+    page_table: jax.Array | None = None,   # (B, max_pages) int32, -1 = free
 ):
     """Split-K decode attention. Returns (BH, 1, Dh) f32.
 
@@ -131,19 +147,45 @@ def pim_decode_pallas(
     early-outs against its own sequence length, so a retired/empty slot
     (kv_len == 0) executes zero KV partitions.
 
+    With `page_table` set, K/V operands are a page POOL in head-major layout
+    (`(Hkv, num_pages, page_size, Dh)`, see `ops.paged_kernel_layout`) and
+    each KV partition is one page of `page_table[b]` — `block_k` is forced
+    to the page size and the partition count to the table width.  Slot b's
+    logical partition ki reads physical page `page_table[b, ki]`; entries
+    < 0 (unallocated) run zero compute and contribute exactly zero.
+
     With `return_iters=True` also returns the (BHkv, n_k_blocks) int32 map of
     KV partitions that actually ran (sum == blocks touched this token).
     """
     BH, Sq, Dh = q_q.shape
     assert Sq == 1, "pim_decode_pallas is specialized to single-token decode"
-    BHkv, Sk, _ = k_q.shape
-    assert BH % BHkv == 0
-    G = BH // BHkv
-    g_pad = max(8, ((G + 7) // 8) * 8)
     q_off = jnp.reshape(jnp.asarray(q_offset, jnp.int32), (-1,))
     kvl = jnp.reshape(jnp.asarray(kv_len, jnp.int32), (-1,))
     nb = max(q_off.shape[0], kvl.shape[0])
+
+    if page_table is not None:
+        Hkv, P, ps, _ = k_q.shape
+        assert page_table.shape[0] == nb, (page_table.shape, nb)
+        block_k = ps
+        n_k_blocks = page_table.shape[1]
+        BHkv = nb * Hkv
+        pt = jnp.asarray(page_table, jnp.int32)
+    else:
+        BHkv, Sk, _ = k_q.shape
+        pad_k = (-Sk) % block_k
+        if pad_k:
+            k_q = jnp.pad(k_q, ((0, 0), (0, pad_k), (0, 0)))
+            v_q = jnp.pad(v_q, ((0, 0), (0, pad_k), (0, 0)))
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad_k)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad_k)))
+        n_k_blocks = (Sk + pad_k) // block_k
+        # dummy table (all allocated): the page guard in the kernel is a no-op
+        pt = jnp.zeros((nb, n_k_blocks), jnp.int32)
+    assert BH % BHkv == 0
+    G = BH // BHkv
+    g_pad = max(8, ((G + 7) // 8) * 8)
     assert BHkv % nb == 0, (BHkv, nb)
+    hkv_per_b = BHkv // nb
 
     # pack the q heads of each KV group into the sublane dimension
     qg = q_q[:, 0].reshape(BHkv, G, Dh)
@@ -151,13 +193,6 @@ def pim_decode_pallas(
     if g_pad != G:
         qg = jnp.pad(qg, ((0, 0), (0, g_pad - G), (0, 0)))
         qsg = jnp.pad(qsg, ((0, 0), (0, g_pad - G)))
-    pad_k = (-Sk) % block_k
-    if pad_k:
-        k_q = jnp.pad(k_q, ((0, 0), (0, pad_k), (0, 0)))
-        v_q = jnp.pad(v_q, ((0, 0), (0, pad_k), (0, 0)))
-        k_scale = jnp.pad(k_scale, ((0, 0), (0, pad_k)))
-        v_scale = jnp.pad(v_scale, ((0, 0), (0, pad_k)))
-    n_k_blocks = (Sk + pad_k) // block_k
     grid = (BHkv, n_k_blocks)
     table, frac = build_exp_table(lut_cfg)
 
@@ -165,30 +200,47 @@ def pim_decode_pallas(
         _decode_kernel,
         block_k=block_k, g_pad=g_pad, causal=causal, window=window,
         sm_scale=1.0 / (Dh ** 0.5), score_scale=lut_cfg.score_scale,
-        input_bits=lut_cfg.input_bits, hkv_per_b=BHkv // nb,
+        input_bits=lut_cfg.input_bits, hkv_per_b=hkv_per_b,
     )
     scalars = jnp.stack(
         [jnp.broadcast_to(q_off, (nb,)), jnp.broadcast_to(kvl, (nb,))]
     )                                                        # (2, nb)
+    if page_table is not None:
+        # the index map turns the logical KV partition into a physical page:
+        # clamped to the trash page for unallocated entries (the guarded
+        # kernel body never reads the placeholder block)
+        kv_spec = pl.BlockSpec(
+            (1, 1, block_k, Dh),
+            lambda b, k, s, t, h=hkv_per_b: (
+                jax.lax.rem(b, h), jnp.maximum(t[b // h, k], 0), 0, 0),
+        )
+        kvs_spec = pl.BlockSpec(
+            (1, 1, block_k),
+            lambda b, k, s, t, h=hkv_per_b: (
+                jax.lax.rem(b, h), jnp.maximum(t[b // h, k], 0), 0),
+        )
+    else:
+        kv_spec = pl.BlockSpec((1, block_k, Dh), lambda b, k, s, t: (b, k, 0))
+        kvs_spec = pl.BlockSpec((1, block_k), lambda b, k, s, t: (b, k))
     part_m, part_den, part_acc, iters = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, g_pad, Dh), lambda b, k, s: (b, 0, 0)),
-                pl.BlockSpec((1, g_pad), lambda b, k, s: (b, 0)),
-                pl.BlockSpec((1, block_k, Dh), lambda b, k, s: (b, k, 0)),
-                pl.BlockSpec((1, block_k), lambda b, k, s: (b, k)),
-                pl.BlockSpec((1, block_k, Dh), lambda b, k, s: (b, k, 0)),
-                pl.BlockSpec((1, block_k), lambda b, k, s: (b, k)),
-                pl.BlockSpec((256,), lambda b, k, s: (0,)),
+                pl.BlockSpec((1, g_pad, Dh), lambda b, k, s, t: (b, 0, 0)),
+                pl.BlockSpec((1, g_pad), lambda b, k, s, t: (b, 0)),
+                kv_spec,
+                kvs_spec,
+                kv_spec,
+                kvs_spec,
+                pl.BlockSpec((256,), lambda b, k, s, t: (0,)),
             ],
             out_specs=[
-                pl.BlockSpec((1, 1, g_pad), lambda b, k, s: (b, k, 0)),
-                pl.BlockSpec((1, 1, g_pad), lambda b, k, s: (b, k, 0)),
-                pl.BlockSpec((1, 1, g_pad, Dh), lambda b, k, s: (b, k, 0, 0)),
-                pl.BlockSpec((1, 1), lambda b, k, s: (b, k)),
+                pl.BlockSpec((1, 1, g_pad), lambda b, k, s, t: (b, k, 0)),
+                pl.BlockSpec((1, 1, g_pad), lambda b, k, s, t: (b, k, 0)),
+                pl.BlockSpec((1, 1, g_pad, Dh), lambda b, k, s, t: (b, k, 0, 0)),
+                pl.BlockSpec((1, 1), lambda b, k, s, t: (b, k)),
             ],
         ),
         out_shape=[
@@ -198,11 +250,14 @@ def pim_decode_pallas(
             jax.ShapeDtypeStruct((BHkv, n_k_blocks), jnp.int32),
         ],
         interpret=interpret,
-    )(scalars, qg, qsg, k_q, k_scale, v_q, v_scale, table)
+    )(scalars, pt, qg, qsg, k_q, k_scale, v_q, v_scale, table)
 
     # ---- stage 2: combine partitions in the LUT domain ---------------------
     # Rescale each partition to the global max with exp(-d*s) = table[d]/2^frac
     # — the same arithmetic the online prefill kernel applies between blocks.
+    # Skipped partitions (m == _NEG) get rescale 0: adding their exact-zero
+    # partials never changes the f32 sums, which is what keeps paged (table-
+    # width partitions) bit-identical to dense (ceil(Sk/bk) partitions).
     table_f = table.astype(jnp.float32)
     m_glob = jnp.max(part_m, axis=1, keepdims=True)          # (BHkv, 1, G)
     d = jnp.clip(m_glob - part_m, 0, 255).astype(jnp.int32)

@@ -6,7 +6,10 @@ cache (greedy by default; --temperature/--top-k for sampling).
 
 --continuous-batching serves the same prompts through the ragged slot
 scheduler (per-sequence KV lengths, EOS retirement via --eos-id, slot count
-via --max-batch-slots) instead of the padded equal-length loop.
+via --max-batch-slots) instead of the padded equal-length loop; adding
+--page-size N (and optionally --num-pages) swaps the scheduler's KV storage
+for the shared paged pool (page-granular admission, lazy allocation,
+free-on-retire).  --top-p enables nucleus sampling on any path.
 """
 from __future__ import annotations
 
@@ -42,6 +45,9 @@ def main(argv=None):
                     help="0 = greedy; >0 samples with temperature softmax")
     ap.add_argument("--top-k", type=int, default=0,
                     help="restrict sampling to the top-k logits (0 = all)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling: keep the smallest logit set with "
+                         "cumulative probability >= top-p (1.0 = all)")
     ap.add_argument("--seed", type=int, default=0, help="sampling rng seed")
     ap.add_argument("--continuous-batching", action="store_true",
                     help="serve through the ragged slot scheduler (per-"
@@ -50,7 +56,17 @@ def main(argv=None):
                     help="KV cache slots for the scheduler (0 = --batch)")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="retire sequences on this token id (-1 = never)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="tokens per KV page: >0 switches the scheduler to "
+                         "the paged pool (requires --continuous-batching)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="KV pool pages incl. the reserved trash page "
+                         "(0 = match the dense slot footprint)")
     args = ap.parse_args(argv)
+    if args.page_size and not args.continuous_batching:
+        ap.error("--page-size requires --continuous-batching")
+    if args.num_pages and not args.page_size:
+        ap.error("--num-pages requires --page-size")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     import dataclasses
@@ -80,10 +96,11 @@ def main(argv=None):
     eos = None if args.eos_id < 0 else args.eos_id
     out = serve_lib.generate(
         model, params, batch, args.new_tokens, max_len,
-        temperature=args.temperature, top_k=args.top_k,
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
         rng=jax.random.PRNGKey(args.seed),
         continuous_batching=args.continuous_batching, eos_id=eos,
-        max_batch_slots=args.max_batch_slots or None)
+        max_batch_slots=args.max_batch_slots or None,
+        page_size=args.page_size, num_pages=args.num_pages)
     jax.block_until_ready(out)
     dt = time.time() - t0
     if args.continuous_batching and eos is not None:
@@ -96,9 +113,14 @@ def main(argv=None):
             toks += int(hits[0]) + 1 if hits.size else row.size
     else:
         toks = args.batch * args.new_tokens
-    mode = "scheduler" if args.continuous_batching else "scan-fused"
+    if args.page_size:
+        mode = f"scheduler/paged(ps={args.page_size})"
+    elif args.continuous_batching:
+        mode = "scheduler"
+    else:
+        mode = "scan-fused"
     print(f"[serve] arch={cfg.name} attn={cfg.attn_impl} mode={mode} "
-          f"temp={args.temperature} top_k={args.top_k} "
+          f"temp={args.temperature} top_k={args.top_k} top_p={args.top_p} "
           f"generated {out.shape} in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s incl. prefill+compile)")
     print("[serve] first sequences:", out[:2, :12].tolist())

@@ -110,7 +110,14 @@ def attn_block_fwd_train(params, x, pos_ids, cfg: ModelConfig,
 
 
 def attn_block_init_state(cfg: ModelConfig, batch: int, max_len: int,
-                          window: int = 0, ragged: bool = False):
+                          window: int = 0, ragged: bool = False,
+                          page_size: int = 0, num_pages: int = 0):
+    if page_size:
+        if window:
+            raise NotImplementedError(
+                "paged KV does not support sliding-window (ring) layers")
+        return A.init_paged_kv_cache(num_pages, page_size, cfg.num_kv_heads,
+                                     cfg.resolved_head_dim)
     ring = bool(window) and max_len > window
     cache_len = min(max_len, window) if ring else max_len
     return A.init_kv_cache(batch, cache_len, cfg.num_kv_heads,
@@ -134,8 +141,28 @@ def _serve_attend(q, cache, offset, cfg: ModelConfig, window: int, causal: bool)
     )
 
 
+def _serve_attend_paged(q, pool, pages, kv_len, offset, cfg: ModelConfig,
+                        causal: bool):
+    """Attend over the paged pool: the kernel path walks the page table in
+    both Pallas kernels; the behavioral path runs the exact two-pass pipeline
+    over a gathered slot-dense view (the bit-exact paged reference)."""
+    if cfg.attn_impl == "kernel":
+        from repro.kernels import ops
+        return ops.pim_paged_flash_attention(
+            q, pool, pages, kv_len, offset, cfg.pim, cfg.lut, causal=causal,
+            out_dtype=jnp.dtype(cfg.compute_dtype),
+            decode_kernel=cfg.decode_kernel,
+        )
+    dense = A.paged_gather(pool, pages, kv_len)
+    return A.pim_attention(
+        q, dense, cfg.pim, cfg.lut, q_offset=offset, causal=causal,
+        out_dtype=jnp.dtype(cfg.compute_dtype),
+    )
+
+
 def attn_block_fwd_serve(params, x, cache: A.KVCache, offset, cfg: ModelConfig,
-                         window: int = 0, causal: bool = True, seq_lens=None):
+                         window: int = 0, causal: bool = True, seq_lens=None,
+                         pages=None):
     """Prefill (S>1, offset=0) or decode (S=1, offset=cache fill).
 
     Ragged slot mode: `offset` may be a (B,) vector of per-slot write
@@ -143,6 +170,11 @@ def attn_block_fwd_serve(params, x, cache: A.KVCache, offset, cfg: ModelConfig,
     this chunk (< S for left-aligned padded prefill rows, 0 for inactive
     slots).  K/V are scatter-written per slot and attention masks each row
     against its own length.  Sliding-window (ring) layers stay scalar-only.
+
+    Paged slot mode: `cache` is a `PagedKVCache` pool and `pages` the
+    (B, max_pages) page table — K/V scatter through the table into the
+    slot's physical pages, attention walks the table, and each row's valid
+    length is `offset + seq_lens` (or `offset + S`).
     """
     B, S, _ = x.shape
     ragged = getattr(offset, "ndim", 0) >= 1
@@ -150,8 +182,20 @@ def attn_block_fwd_serve(params, x, cache: A.KVCache, offset, cfg: ModelConfig,
     pos_ids = (offset[:, None] + jnp.arange(S)[None, :] if ragged
                else offset + jnp.arange(S))
     q, k, v = _qkv(params["attn"], h, cfg, pos_ids)
-    cache_len = cache.k_q.shape[1]
-    if ragged:
+    cache_len = cache.k_q.shape[1]   # dense buffer len (page_size if paged)
+    if isinstance(cache, A.PagedKVCache):
+        if pages is None:
+            raise ValueError("paged serve step requires a page table")
+        if window:
+            raise NotImplementedError(
+                "paged serving does not support sliding-window layers")
+        offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (B,))
+        cache = A.paged_cache_write(cache, k, v, offset, cfg.pim, pages,
+                                    seq_lens)
+        kv_len = offset + (S if seq_lens is None
+                           else jnp.asarray(seq_lens, jnp.int32))
+        o = _serve_attend_paged(q, cache, pages, kv_len, offset, cfg, causal)
+    elif ragged:
         if window and cache_len == window:
             raise NotImplementedError(
                 "ragged serving does not support ring (sliding-window) caches")

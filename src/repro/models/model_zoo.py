@@ -115,12 +115,14 @@ def build_model(cfg: ModelConfig) -> Model:
         total = ce + aux
         return total, {"loss": total, "ce": ce, "aux": aux}
 
-    def init_cache(batch, max_len, ragged=False):
-        return T.init_cache(cfg, batch, max_len, ragged=ragged)
+    def init_cache(batch, max_len, ragged=False, page_size=0, num_pages=0):
+        return T.init_cache(cfg, batch, max_len, ragged=ragged,
+                            page_size=page_size, num_pages=num_pages)
 
     def forward_serve(params, batch, cache, offset, enc_out=None,
-                      seq_lens=None):
+                      seq_lens=None, pages=None):
         return T.forward_serve(params, batch, cache, offset, cfg,
-                               enc_out=enc_out, seq_lens=seq_lens)
+                               enc_out=enc_out, seq_lens=seq_lens,
+                               pages=pages)
 
     return Model(cfg, init, forward_train, loss, init_cache, forward_serve)

@@ -66,9 +66,15 @@ def _block_fwd_train(kind: str, params, x, pos_ids, cfg: ModelConfig,
 
 
 def _block_init_state(kind: str, cfg: ModelConfig, batch: int, max_len: int,
-                      ragged: bool = False):
+                      ragged: bool = False, page_size: int = 0,
+                      num_pages: int = 0):
+    if page_size and kind not in ("attn", "moe"):
+        raise NotImplementedError(
+            f"paged KV is only supported for attention stacks (got {kind!r})")
     if kind in ("attn", "moe"):
-        return B.attn_block_init_state(cfg, batch, max_len, ragged=ragged)
+        return B.attn_block_init_state(cfg, batch, max_len, ragged=ragged,
+                                       page_size=page_size,
+                                       num_pages=num_pages)
     if kind == "attn_local":
         return B.attn_block_init_state(cfg, batch, max_len, window=cfg.window)
     if kind == "xattn":
@@ -83,15 +89,15 @@ def _block_init_state(kind: str, cfg: ModelConfig, batch: int, max_len: int,
 
 
 def _block_fwd_serve(kind: str, params, x, state, offset, cfg: ModelConfig,
-                     enc_out=None, seq_lens=None):
+                     enc_out=None, seq_lens=None, pages=None):
     if kind in ("attn", "moe"):
         return B.attn_block_fwd_serve(params, x, state, offset, cfg,
                                       window=0, causal=cfg.causal,
-                                      seq_lens=seq_lens)
+                                      seq_lens=seq_lens, pages=pages)
     if kind == "attn_local":
         return B.attn_block_fwd_serve(params, x, state, offset, cfg,
                                       window=cfg.window, causal=True,
-                                      seq_lens=seq_lens)
+                                      seq_lens=seq_lens, pages=pages)
     if kind == "xattn":
         return B.xattn_block_fwd_serve(params, x, state, offset, cfg,
                                        enc_out=enc_out)
@@ -295,26 +301,32 @@ def forward_hidden(params, batch: Dict[str, jax.Array], cfg: ModelConfig):
 # serve: cache init, prefill, decode
 # ---------------------------------------------------------------------------
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               ragged: bool = False):
+               ragged: bool = False, page_size: int = 0, num_pages: int = 0):
     """Serve-state tree.  With `ragged=True` every KV cache carries a (B,)
     per-slot `length` vector (all zeros = every slot empty/inactive) — the
-    layout the continuous-batching scheduler requires."""
+    layout the continuous-batching scheduler requires.
+
+    With `page_size > 0` every attention layer's state is instead a
+    `PagedKVCache` pool of `num_pages` pages (page 0 reserved as the trash
+    page; no batch axis — slots are rows of the page table the caller
+    threads through `forward_serve(pages=...)`)."""
     pat, R, tail = pattern_layout(cfg)
 
+    def one(kind):
+        return _block_init_state(kind, cfg, batch, max_len, ragged=ragged,
+                                 page_size=page_size, num_pages=num_pages)
+
     def stacked(kind):
-        st = _block_init_state(kind, cfg, batch, max_len, ragged=ragged)
+        st = one(kind)
         return jax.tree.map(lambda a: jnp.broadcast_to(a, (R,) + a.shape), st)
 
     cache = {
         "blocks": tuple(stacked(kind) for kind in pat),
-        "tail": tuple(_block_init_state(kind, cfg, batch, max_len,
-                                        ragged=ragged)
-                      for kind in tail),
+        "tail": tuple(one(kind) for kind in tail),
     }
     if "moe" in pat and cfg.num_dense_layers:
         cache["dense_prefix"] = tuple(
-            _block_init_state("attn", cfg, batch, max_len, ragged=ragged)
-            for _ in range(cfg.num_dense_layers))
+            one("attn") for _ in range(cfg.num_dense_layers))
     return cache
 
 
@@ -352,7 +364,8 @@ def cache_scatter(big, sub, slots):
 
 def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
                   cfg: ModelConfig, enc_out: Optional[jax.Array] = None,
-                  seq_lens: Optional[jax.Array] = None):
+                  seq_lens: Optional[jax.Array] = None,
+                  pages: Optional[jax.Array] = None):
     """One serve step (prefill chunk or single-token decode).
 
     Ragged slot mode: `offset` may be a (B,) vector of per-slot positions and
@@ -360,6 +373,11 @@ def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
     beyond it is written to the cache but never advertised via `length`).
     Logits are then taken at each row's LAST VALID position instead of the
     shared final position.
+
+    Paged slot mode: the cache tree holds `PagedKVCache` pools and `pages`
+    is the shared (B, max_pages) page table — every attention layer writes
+    and attends through the same table (one table row per slot names that
+    slot's physical pages in every layer's pool).
 
     Returns (logits_last (B,V), new_cache, enc_out) — enc_out is computed on
     the first (offset==0) call for encoder-decoder archs and threaded back.
@@ -374,7 +392,7 @@ def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
         dp = []
         for p, st in zip(params["dense_prefix"], cache["dense_prefix"]):
             x, st = _block_fwd_serve("attn", p, x, st, offset, cfg,
-                                     seq_lens=seq_lens)
+                                     seq_lens=seq_lens, pages=pages)
             dp.append(st)
         new_cache["dense_prefix"] = tuple(dp)
 
@@ -384,7 +402,7 @@ def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
         for j, kind in enumerate(pat):
             x, st = _block_fwd_serve(kind, group_params[j], x, group_state[j],
                                      offset, cfg, enc_out=enc_out,
-                                     seq_lens=seq_lens)
+                                     seq_lens=seq_lens, pages=pages)
             new_states.append(st)
         return x, tuple(new_states)
 
@@ -396,7 +414,7 @@ def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
         x, st = _block_fwd_serve(
             _moe_kind_for_layer(cfg, kind, R * len(pat) + i),
             params["tail"][i], x, cache["tail"][i], offset, cfg,
-            enc_out=enc_out, seq_lens=seq_lens)
+            enc_out=enc_out, seq_lens=seq_lens, pages=pages)
         new_tail.append(st)
     new_cache["tail"] = tuple(new_tail)
     if seq_lens is not None:

@@ -15,6 +15,9 @@ Two generation paths:
     against its OWN length, and retired on EOS / token budget — at which
     point the slot is immediately reusable.  `generate(...,
     continuous_batching=True)` is a thin wrapper over one Scheduler run.
+    With `page_size > 0` the slots share a PAGED pool (vLLM-style): page-
+    granular admission, lazy page allocation at decode boundaries, free-on-
+    retire — one long sequence no longer pins a whole max_len buffer.
 
 Sharding note: these builders use plain jit with donated caches; partitioning
 propagates from the inputs — the launch layer device_puts params/caches with
@@ -56,13 +59,20 @@ def make_decode_step(model: Model) -> Callable:
 
 
 def sample_logits(logits: jax.Array, key: Optional[jax.Array],
-                  temperature: float = 0.0, top_k: int = 0) -> jax.Array:
+                  temperature: float = 0.0, top_k: int = 0,
+                  top_p: float = 1.0) -> jax.Array:
     """(B, V) logits -> (B,) token ids.
 
     temperature == 0 is greedy (key may be None); otherwise temperature
-    softmax sampling, optionally restricted to the top_k logits.  top_k >= V
-    is clipped to V (i.e. unrestricted); top_k == 1 is greedy regardless of
-    temperature (the only non-(-inf) logit is the max).
+    softmax sampling, optionally restricted to the top_k logits and/or the
+    top-p (nucleus) probability mass.  top_k >= V is clipped to V (i.e.
+    unrestricted); top_k == 1 is greedy regardless of temperature (the only
+    non-(-inf) logit is the max).  top_p >= 1 is a no-op (bit-identical to
+    not passing it); top_p -> 0 keeps only the argmax token, i.e. greedy
+    (probability ties at the nucleus boundary are broken by token id, so
+    the kept mass never overshoots by more than the boundary token).
+    top_p composes with top_k: the nucleus is taken over the already
+    top_k-truncated distribution.
     """
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1)
@@ -72,12 +82,29 @@ def sample_logits(logits: jax.Array, key: Optional[jax.Array],
         if k < logits.shape[-1]:
             kth = jax.lax.top_k(l, k)[0][..., -1:]
             l = jnp.where(l < kth, -jnp.inf, l)
+    if top_p < 1.0:
+        # nucleus: keep the shortest descending-probability prefix whose
+        # exclusive cumulative mass is below top_p (the boundary token is
+        # included, so the set is never empty — top_p -> 0 keeps exactly
+        # one max token, and f32 cumsum rounding can never collapse the
+        # set to greedy).  Masking happens in SORTED space and is scattered
+        # back through the inverse permutation, so probability ties at the
+        # boundary never drag extra mass in.
+        probs = jax.nn.softmax(l, axis=-1)
+        order = jnp.argsort(-probs, axis=-1)               # descending
+        sp = jnp.take_along_axis(probs, order, axis=-1)
+        exclusive = jnp.cumsum(sp, axis=-1) - sp
+        keep_sorted = (exclusive < top_p).at[..., 0].set(True)
+        keep = jnp.take_along_axis(keep_sorted, jnp.argsort(order, axis=-1),
+                                   axis=-1)
+        l = jnp.where(keep, l, -jnp.inf)
     return jax.random.categorical(key, l, axis=-1)
 
 
 @functools.lru_cache(maxsize=64)
 def make_generate_fn(model: Model, prompt_len: int, max_new_tokens: int,
-                     temperature: float = 0.0, top_k: int = 0) -> Callable:
+                     temperature: float = 0.0, top_k: int = 0,
+                     top_p: float = 1.0) -> Callable:
     """Build the scan-fused decode program (classic equal-length path).
 
     Returns generate(params, tok0, cache, rng, enc_out) -> (B, T) ids where
@@ -97,7 +124,8 @@ def make_generate_fn(model: Model, prompt_len: int, max_new_tokens: int,
                 params, {"tokens": tok}, cache, prompt_len + t,
                 enc_out=enc_out)
             key, sub = jax.random.split(key)
-            nxt = sample_logits(logits, sub, temperature, top_k)[:, None]
+            nxt = sample_logits(logits, sub, temperature, top_k,
+                                top_p)[:, None]
             return (nxt, cache, key), tok[:, 0]
 
         (_, cache, _), toks = jax.lax.scan(
@@ -123,7 +151,7 @@ def scheduler_supported(cfg: ModelConfig) -> bool:
 @functools.lru_cache(maxsize=64)
 def make_ragged_prefill_fn(model: Model, n: int, pad_len: int, max_len: int,
                            temperature: float = 0.0,
-                           top_k: int = 0) -> Callable:
+                           top_k: int = 0, top_p: float = 1.0) -> Callable:
     """Admission prefill: n left-aligned prompts padded to pad_len are run
     through one forward with per-row valid lengths (padding K/V beyond a
     row's length is written but never advertised), each row's first token is
@@ -135,8 +163,28 @@ def make_ragged_prefill_fn(model: Model, n: int, pad_len: int, max_len: int,
         offs = jnp.zeros((n,), jnp.int32)
         logits, sub, _ = model.forward_serve(
             params, {"tokens": tokens}, sub, offs, seq_lens=lens)
-        tok0 = sample_logits(logits, key, temperature, top_k)
+        tok0 = sample_logits(logits, key, temperature, top_k, top_p)
         return T.cache_scatter(big_cache, sub, slots), tok0
+
+    return jax.jit(prefill, donate_argnums=(3,))
+
+
+@functools.lru_cache(maxsize=64)
+def make_paged_prefill_fn(model: Model, n: int, pad_len: int,
+                          temperature: float = 0.0,
+                          top_k: int = 0, top_p: float = 1.0) -> Callable:
+    """Paged admission prefill: n left-aligned prompts write STRAIGHT into
+    the shared page pool through their slots' page-table rows — no sub-batch
+    cache, no scatter-insert (the pages were assigned by the host allocator,
+    so the write destinations are already this wave's own pages).
+    """
+    def prefill(params, tokens, lens, big_cache, pages, key):
+        offs = jnp.zeros((n,), jnp.int32)
+        logits, big_cache, _ = model.forward_serve(
+            params, {"tokens": tokens}, big_cache, offs, seq_lens=lens,
+            pages=pages)
+        tok0 = sample_logits(logits, key, temperature, top_k, top_p)
+        return big_cache, tok0
 
     return jax.jit(prefill, donate_argnums=(3,))
 
@@ -144,7 +192,7 @@ def make_ragged_prefill_fn(model: Model, n: int, pad_len: int, max_len: int,
 @functools.lru_cache(maxsize=64)
 def make_ragged_decode_fn(model: Model, chunk: int, temperature: float,
                           top_k: int, eos_id: Optional[int],
-                          max_len: int) -> Callable:
+                          max_len: int, top_p: float = 1.0) -> Callable:
     """Fused ragged decode: `chunk` tokens for ALL slots in one lax.scan.
 
     Every step writes each active slot's token at its own cache position,
@@ -153,21 +201,27 @@ def make_ragged_decode_fn(model: Model, chunk: int, temperature: float,
     budget / the cache capacity — retired rows' lengths drop to 0 so the rest
     of the chunk skips them entirely.
 
-    Returns decode(params, tok, cache, lengths, active, remaining, key) ->
-    (tok, cache, lengths, active, remaining, key, toks (chunk, B),
-    emitted (chunk, B) bool).
+    Paged callers pass a trailing (B, max_pages) page table (loop-invariant
+    across the chunk: the host allocator guarantees the table covers
+    `lengths + chunk` tokens per active slot before the call) and the cache
+    is the shared page pool; dense callers simply omit it.
+
+    Returns decode(params, tok, cache, lengths, active, remaining, key
+    [, pages]) -> (tok, cache, lengths, active, remaining, key,
+    toks (chunk, B), emitted (chunk, B) bool).
     """
     eos = -2 if eos_id is None else int(eos_id)   # -2 never matches a token
 
-    def decode(params, tok, cache, lengths, active, remaining, key):
+    def decode(params, tok, cache, lengths, active, remaining, key,
+               pages=None):
         def body(carry, _):
             tok, cache, lengths, active, remaining, key = carry
             act = active.astype(jnp.int32)
             logits, cache, _ = model.forward_serve(
                 params, {"tokens": tok[:, None]}, cache, lengths,
-                seq_lens=act)
+                seq_lens=act, pages=pages)
             key, sub = jax.random.split(key)
-            nxt = sample_logits(logits, sub, temperature, top_k)
+            nxt = sample_logits(logits, sub, temperature, top_k, top_p)
             nxt = jnp.where(active, nxt, -1)
             new_len = lengths + act
             new_active = (active & (nxt != eos) & (remaining > 1)
@@ -215,13 +269,30 @@ class Scheduler:
 
     `run()` drives steps until every request completes and returns
     {request_id: generated tokens}.
+
+    **Paged mode** (`page_size > 0`): KV memory is a shared pool of
+    `num_pages` fixed-size pages instead of `max_batch_slots` dense
+    `max_len` buffers; each slot holds a page-table row.  Admission is
+    page-granular — a queued request is admitted whenever a free slot
+    exists AND the free-page count covers its prompt (never a whole
+    `max_len` slot), pages are allocated lazily as decode crosses page
+    boundaries, and a retired request's pages return to the free list
+    immediately.  When the pool is too fragmented to extend every active
+    slot, the starved slots simply STALL for one chunk (their state is
+    untouched; passing active=False makes them cost zero kernel compute);
+    if no active slot can run at all, the most recently admitted one is
+    evicted — its pages freed and the request re-queued as a continuation
+    (prompt + tokens generated so far), which under greedy decoding resumes
+    the exact same stream.
     """
 
     def __init__(self, model: Model, params, *, max_batch_slots: int = 8,
                  max_len: int = 2048, eos_id: Optional[int] = None,
                  temperature: float = 0.0, top_k: int = 0,
+                 top_p: float = 1.0,
                  decode_chunk: int = 8, rng: Optional[jax.Array] = None,
-                 prefill_bucket: int = 16):
+                 prefill_bucket: int = 16,
+                 page_size: int = 0, num_pages: int = 0):
         if not scheduler_supported(model.cfg):
             raise NotImplementedError(
                 f"arch {model.cfg.name!r} is not supported by the slot "
@@ -234,11 +305,34 @@ class Scheduler:
         self.eos_id = eos_id
         self.temperature = float(temperature)
         self.top_k = int(top_k)
+        self.top_p = float(top_p)
         self.decode_chunk = int(decode_chunk)
         self.prefill_bucket = int(prefill_bucket)
         self.key = jax.random.PRNGKey(0) if rng is None else rng
 
-        self.cache = model.init_cache(self.B, self.max_len, ragged=True)
+        self.paged = int(page_size) > 0
+        if self.paged:
+            self.page_size = int(page_size)
+            self.max_pages = self._pages_for(self.max_len)
+            # default pool: as many tokens as the dense slot cache would pin
+            # (+ the reserved trash page) — callers shrink num_pages to
+            # overcommit slots against a smaller KV budget
+            self.num_pages = int(num_pages) or self.B * self.max_pages + 1
+            if self.num_pages - 1 < self.max_pages:
+                raise ValueError(
+                    f"num_pages={self.num_pages} cannot hold one full-length "
+                    f"sequence ({self.max_pages} pages + 1 reserved)")
+            self.free_pages: List[int] = list(range(1, self.num_pages))
+            self.page_table = np.full((self.B, self.max_pages), -1, np.int32)
+            self.peak_pages_in_use = 0
+            self._admit_seq = np.zeros(self.B, np.int64)
+            self._admit_counter = 0
+            self.n_evictions = 0
+            self.cache = model.init_cache(
+                self.B, self.max_len, ragged=True,
+                page_size=self.page_size, num_pages=self.num_pages)
+        else:
+            self.cache = model.init_cache(self.B, self.max_len, ragged=True)
         self.lengths = np.zeros(self.B, np.int32)     # per-slot kv fill
         self.active = np.zeros(self.B, bool)
         self.remaining = np.zeros(self.B, np.int32)   # token budget left
@@ -268,6 +362,47 @@ class Scheduler:
         # max_len-1 could only ever hold clipped, masked garbage
         return min(b, self.max_len)
 
+    # -- page allocator (paged mode; host-side, pages are device-opaque) ----
+    def _pages_for(self, tokens: int) -> int:
+        return -(-int(tokens) // self.page_size)
+
+    def _alloc_slot(self, slot: int, tokens: int) -> bool:
+        """Grow `slot`'s page-table row to cover `tokens` tokens
+        (all-or-nothing; already-covered prefixes are free)."""
+        need = self._pages_for(min(int(tokens), self.max_len))
+        row = self.page_table[slot]
+        have = int((row >= 0).sum())
+        if need <= have:
+            return True
+        if need - have > len(self.free_pages):
+            return False
+        for j in range(have, need):
+            row[j] = self.free_pages.pop()
+        return True
+
+    def _free_slot_pages(self, slot: int):
+        row = self.page_table[slot]
+        self.free_pages.extend(int(p) for p in row[row >= 0])
+        row[:] = -1
+
+    def pages_in_use(self) -> int:
+        """Allocated (non-free, non-trash) pages right now (paged mode)."""
+        return (self.num_pages - 1) - len(self.free_pages)
+
+    def _evict(self, slot: int):
+        """Free a starved slot and re-queue its request as a continuation:
+        prompt + tokens generated so far, with the remaining budget — under
+        greedy decoding the re-prefill resumes the identical stream."""
+        r = self.slot_req[slot]
+        self.slot_req[slot] = None
+        self.active[slot] = False
+        self.lengths[slot] = 0
+        self.cur_tok[slot] = -1
+        self._free_slot_pages(slot)
+        self.n_evictions += 1
+        if r is not None:
+            self.queue.appendleft(r)
+
     def _retire(self, slot: int):
         r = self.slot_req[slot]
         if r is not None:
@@ -275,38 +410,69 @@ class Scheduler:
         self.slot_req[slot] = None
         self.active[slot] = False
         self.lengths[slot] = 0
+        if self.paged:
+            self._free_slot_pages(slot)
 
     def _admit(self, emitted: Dict[int, List[int]]):
         free = [i for i in range(self.B) if self.slot_req[i] is None]
         wave: List[Tuple[int, Request]] = []
         while free and self.queue:
+            if self.paged:
+                # page-granular admission: the prompt (or eviction
+                # continuation) must fit in free pages — NOT a whole
+                # max_len slot
+                pend = self.queue[0].prompt + self.queue[0].tokens
+                if not self._alloc_slot(free[0], len(pend)):
+                    break                     # FCFS: no starvation of longs
             wave.append((free.pop(0), self.queue.popleft()))
         if not wave:
             return
+        if self.paged:
+            # sample while the wave's prompt pages are held — requests that
+            # retire at admission (budget 1 / instant EOS) free them below,
+            # and the peak metric must still have seen them pinned
+            self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                         self.pages_in_use())
         n = len(wave)
-        lens = np.array([len(r.prompt) for _, r in wave], np.int32)
+        prompts = [r.prompt + r.tokens for _, r in wave]
+        lens = np.array([len(p) for p in prompts], np.int32)
         L = self._bucket(int(lens.max()))
         toks = np.zeros((n, L), np.int32)
-        for i, (_, r) in enumerate(wave):
-            toks[i, : len(r.prompt)] = r.prompt
+        for i, p in enumerate(prompts):
+            toks[i, : len(p)] = p
         slots = np.array([s for s, _ in wave], np.int32)
-        fn = make_ragged_prefill_fn(self.model, n, L, self.max_len,
-                                    self.temperature, self.top_k)
         self.key, sub = jax.random.split(self.key)
-        self.cache, tok0 = fn(self.params, jnp.asarray(toks),
-                              jnp.asarray(lens), self.cache,
-                              jnp.asarray(slots), sub)
+        if self.paged:
+            fn = make_paged_prefill_fn(self.model, n, L, self.temperature,
+                                       self.top_k, self.top_p)
+            self.cache, tok0 = fn(self.params, jnp.asarray(toks),
+                                  jnp.asarray(lens), self.cache,
+                                  jnp.asarray(self.page_table[slots]), sub)
+        else:
+            fn = make_ragged_prefill_fn(self.model, n, L, self.max_len,
+                                        self.temperature, self.top_k,
+                                        self.top_p)
+            self.cache, tok0 = fn(self.params, jnp.asarray(toks),
+                                  jnp.asarray(lens), self.cache,
+                                  jnp.asarray(slots), sub)
         tok0 = np.asarray(tok0)
         for i, (s, r) in enumerate(wave):
             t0 = int(tok0[i])
+            budget_left = r.max_new_tokens - len(r.tokens)
             r.tokens.append(t0)
             emitted.setdefault(r.rid, []).append(t0)
             self.slot_req[s] = r
             self.lengths[s] = lens[i]
             self.cur_tok[s] = t0
-            self.remaining[s] = r.max_new_tokens - 1
+            self.remaining[s] = budget_left - 1
+            if self.paged:
+                self._admit_counter += 1
+                self._admit_seq[s] = self._admit_counter
+            # capacity counts as done: an eviction continuation re-admitted
+            # at exactly max_len tokens just produced its final in-capacity
+            # token — decoding further would write past the buffer/table
             done = ((self.eos_id is not None and t0 == self.eos_id)
-                    or r.max_new_tokens <= 1)
+                    or budget_left <= 1 or int(lens[i]) >= self.max_len)
             if done:
                 self._retire(s)
             else:
@@ -315,16 +481,46 @@ class Scheduler:
     def _decode(self, emitted: Dict[int, List[int]]):
         if not self.active.any():
             return
+        run = self.active.copy()
+        if self.paged:
+            # lazy allocation: extend every active slot's table to cover the
+            # next chunk (capped at max_len — the capacity retirement bound);
+            # starved slots stall for this chunk, and if NOTHING can run the
+            # youngest slot is evicted until something can
+            while True:
+                run = self.active.copy()
+                for b in np.flatnonzero(self.active):
+                    upto = min(int(self.lengths[b]) + self.decode_chunk,
+                               self.max_len)
+                    if not self._alloc_slot(int(b), upto):
+                        run[b] = False
+                if run.any() or not self.active.any():
+                    break
+                young = max(np.flatnonzero(self.active),
+                            key=lambda b: self._admit_seq[b])
+                self._evict(int(young))
+            self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                         self.pages_in_use())
+            if not run.any():
+                return
         fn = make_ragged_decode_fn(self.model, self.decode_chunk,
                                    self.temperature, self.top_k,
-                                   self.eos_id, self.max_len)
-        out = fn(self.params, jnp.asarray(self.cur_tok), self.cache,
-                 jnp.asarray(self.lengths), jnp.asarray(self.active),
-                 jnp.asarray(self.remaining), self.key)
+                                   self.eos_id, self.max_len, self.top_p)
+        # stalled rows advertise length 0 for the whole chunk (writes are
+        # trash-routed, attention runs zero KV partitions — genuinely free,
+        # not just discarded) and have ALL their state restored host-side
+        args = (self.params, jnp.asarray(self.cur_tok), self.cache,
+                jnp.asarray(self.lengths * run), jnp.asarray(run),
+                jnp.asarray(self.remaining), self.key)
+        if self.paged:
+            out = fn(*args, jnp.asarray(self.page_table))
+        else:
+            out = fn(*args)
         tok, self.cache, lengths, active, remaining, self.key, toks, em = out
-        self.cur_tok = np.array(tok)
-        self.lengths = np.array(lengths)
-        self.active = np.array(active)
+        stalled = self.active & ~run
+        self.cur_tok = np.where(run, np.array(tok), self.cur_tok)
+        self.lengths = np.where(run, np.array(lengths), self.lengths)
+        self.active = np.array(active) | stalled
         self.remaining = np.array(remaining)
         toks = np.asarray(toks)                        # (chunk, B)
         em = np.asarray(em)
@@ -346,6 +542,9 @@ class Scheduler:
         emitted: Dict[int, List[int]] = {}
         self._admit(emitted)
         self._decode(emitted)
+        if self.paged:
+            self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                         self.pages_in_use())
         return emitted
 
     def run(self, on_tokens: Optional[Callable[[int, List[int]], None]] = None
@@ -366,22 +565,26 @@ class Scheduler:
 # ===========================================================================
 def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
              max_new_tokens: int, max_len: int,
-             temperature: float = 0.0, top_k: int = 0,
+             temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
              rng: Optional[jax.Array] = None,
              continuous_batching: bool = False,
              eos_id: Optional[int] = None,
              decode_chunk: int = 8,
-             max_batch_slots: Optional[int] = None) -> jax.Array:
+             max_batch_slots: Optional[int] = None,
+             page_size: int = 0, num_pages: int = 0) -> jax.Array:
     """Batched generation. Returns (B, max_new_tokens) generated ids.
 
     Default: equal-length prefill + scan-fused decode (the paper's token
     pipeline, §3.6).  With `continuous_batching=True` this is a thin wrapper
     over one `Scheduler` run — per-slot ragged decode with EOS (`eos_id`)
     retirement over `max_batch_slots` KV slots (default: the batch size);
-    rows that finish early are padded with `eos_id` (or 0).
+    rows that finish early are padded with `eos_id` (or 0).  `page_size > 0`
+    additionally switches the scheduler's KV storage to the paged pool
+    (`num_pages` pages; 0 = match the dense slot footprint).
 
     temperature=0 reproduces greedy decoding exactly; temperature>0 samples
-    (optionally top_k-truncated) with `rng` (default PRNGKey(0)).
+    (optionally top_k- and/or nucleus-top_p-truncated) with `rng`
+    (default PRNGKey(0)).
     """
     B, S = prompt_batch["tokens"].shape
     rng = jax.random.PRNGKey(0) if rng is None else rng
@@ -389,8 +592,9 @@ def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
         sched = Scheduler(model, params,
                           max_batch_slots=max_batch_slots or B,
                           max_len=max_len, eos_id=eos_id,
-                          temperature=temperature, top_k=top_k,
-                          decode_chunk=decode_chunk, rng=rng)
+                          temperature=temperature, top_k=top_k, top_p=top_p,
+                          decode_chunk=decode_chunk, rng=rng,
+                          page_size=page_size, num_pages=num_pages)
         tokens = np.asarray(prompt_batch["tokens"])
         rids = [sched.submit(tokens[b].tolist(), max_new_tokens)
                 for b in range(B)]
@@ -401,12 +605,15 @@ def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
             got = results.get(rid, [])[:max_new_tokens]
             out[b, : len(got)] = got
         return jnp.asarray(out)
+    if page_size:
+        raise ValueError("page_size requires continuous_batching=True")
     prefill = make_prefill_step(model)
     cache = model.init_cache(B, max_len)
     logits, cache, enc_out = prefill(params, prompt_batch, cache)
     rng, sub = jax.random.split(rng)
-    tok0 = sample_logits(logits, sub, temperature, top_k)[:, None]
-    decode = make_generate_fn(model, S, max_new_tokens, temperature, top_k)
+    tok0 = sample_logits(logits, sub, temperature, top_k, top_p)[:, None]
+    decode = make_generate_fn(model, S, max_new_tokens, temperature, top_k,
+                              top_p)
     return decode(params, tok0, cache, rng, enc_out)
 
 

@@ -198,7 +198,7 @@ def cache_specs(cache, mesh: Mesh, global_batch: int) -> Any:
         dp *= mesh.shape[a]
     tp = mesh.shape.get("model", 1)
 
-    from repro.core.attention import KVCache
+    from repro.core.attention import KVCache, PagedKVCache
 
     def spec_for(field: str, shape, stacked: bool = False) -> P:
         nd = len(shape)
@@ -233,7 +233,22 @@ def cache_specs(cache, mesh: Mesh, global_batch: int) -> Any:
                     break
         return P(*spec)
 
+    def paged_spec_for(field: str, shape) -> P:
+        # the page pool has NO batch axis (slots live in the page table) —
+        # never DP-shard it; kv-heads over `model` when divisible, else
+        # replicated (page ids must resolve locally on every DP replica)
+        nd = len(shape)
+        spec = [None] * nd
+        h_ax = nd - 2 if field in ("k_q", "v_q") else nd - 1
+        if tp > 1 and shape[h_ax] % tp == 0 and shape[h_ax] >= tp:
+            spec[h_ax] = "model"
+        return P(*spec)
+
     def visit(node, stacked=False):
+        if isinstance(node, PagedKVCache):
+            return PagedKVCache(*[
+                paged_spec_for(f, getattr(node, f).shape)
+                for f in node._fields])
         if isinstance(node, KVCache):
             return KVCache(*[
                 spec_for(f, getattr(node, f).shape, stacked)

@@ -113,6 +113,66 @@ def test_sample_logits_deterministic_under_fixed_key():
                                   np.asarray(jnp.argmax(logits, axis=-1)))
 
 
+def test_sample_logits_top_p_1_is_bitwise_noop():
+    """top_p=1.0 must be bit-identical to not passing top_p (no nucleus
+    filtering code runs at all)."""
+    logits = jax.random.normal(jax.random.PRNGKey(7), (4, 32))
+    key = jax.random.PRNGKey(8)
+    for tk in (0, 5):
+        a = serve_lib.sample_logits(logits, key, temperature=0.9, top_k=tk,
+                                    top_p=1.0)
+        b = serve_lib.sample_logits(logits, key, temperature=0.9, top_k=tk)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sample_logits_top_p_to_zero_is_greedy():
+    logits = jax.random.normal(jax.random.PRNGKey(9), (8, 32))
+    greedy = jnp.argmax(logits, axis=-1)
+    for p in (0.0, 1e-9, 1e-4, 0.01):   # incl. exactly 0: nucleus never empty
+        for temp in (0.2, 1.0, 5.0):
+            out = serve_lib.sample_logits(logits, jax.random.PRNGKey(10),
+                                          temperature=temp, top_p=p)
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(greedy))
+
+
+def test_sample_logits_top_p_restricts_to_nucleus():
+    """With a distribution whose top-2 tokens carry ~all the mass, any
+    top_p above their joint mass but below 1 samples only those two."""
+    base = np.full((1, 16), -20.0, np.float32)
+    base[0, 3] = 2.0
+    base[0, 11] = 1.5
+    logits = jnp.asarray(base)
+    for i in range(10):
+        out = serve_lib.sample_logits(logits, jax.random.PRNGKey(i),
+                                      temperature=1.0, top_p=0.95)
+        assert int(out[0]) in (3, 11)
+    # deterministic under a fixed key, and composes with top_k=1 (greedy)
+    a = serve_lib.sample_logits(logits, jax.random.PRNGKey(0), 1.0,
+                                top_k=1, top_p=0.95)
+    np.testing.assert_array_equal(np.asarray(a), [3])
+
+
+def test_sampled_generate_top_p_paths():
+    """generate() with top_p: valid ids, deterministic under a fixed rng,
+    and top_p=1.0 reproduces the no-top_p stream exactly."""
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = {"tokens": jnp.asarray(data.lm_batch(5, 2, 8, cfg.vocab_size))}
+    rng = jax.random.PRNGKey(21)
+    a = serve_lib.generate(model, params, prompt, 5, 32, temperature=0.8,
+                           top_p=0.9, rng=rng)
+    b = serve_lib.generate(model, params, prompt, 5, 32, temperature=0.8,
+                           top_p=0.9, rng=rng)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert bool(jnp.all((a >= 0) & (a < cfg.vocab_size)))
+    c = serve_lib.generate(model, params, prompt, 5, 32, temperature=0.8,
+                           top_p=1.0, rng=rng)
+    d = serve_lib.generate(model, params, prompt, 5, 32, temperature=0.8,
+                           rng=rng)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(d))
+
+
 def test_whisper_generate_with_frames():
     cfg = get_config("whisper-tiny", smoke=True)
     model = build_model(cfg)
