@@ -23,13 +23,25 @@ under the SAME KV token budget two ways:
     at page boundaries, retirement frees pages immediately — the shorts
     pack into the pages the longs never touch.
 
+Leg 3 (shared-prefix trace): every request starts with the SAME system
+prompt (a page-aligned common prefix) followed by a short unique tail,
+served through the paged scheduler at equal pool size two ways:
+
+  * sharing off — every slot prefills and stores its own physical copy of
+    the common prefix (N x the pages, N x the prefill compute).
+  * prefix sharing on — admission maps the prefix's page-table entries onto
+    the ONE set of physical pages the first request produced (refcount++),
+    and only the unique tail runs through prefill; greedy outputs are
+    bit-identical.
+
 Both paths are compiled+warmed before timing; the tracked signal is useful
 tokens/sec (only tokens within each request's budget count), plus peak KV
 bytes actually pinned.  A probe also measures the decode kernel's per-slot
 early-out: KV partitions touched per token with ragged per-sequence `kv_len`
 vs the padded whole-batch scalar.
 
-Writes BENCH_serving.json.  `--smoke` shrinks the traces for CI.
+Writes BENCH_serving.json (legs 2/3 under #longtail / #prefix; floors are
+re-checked by scripts/check_bench.py in CI).  `--smoke` shrinks the traces.
 """
 from __future__ import annotations
 
@@ -51,13 +63,24 @@ from repro.models.model_zoo import build_model
 from repro.runtime import serve_lib
 
 
+def _base_tokens(seed: int, n: int, length: int, vocab: int) -> np.ndarray:
+    """(n, length) deterministic token matrix — the one source all three
+    trace builders cut their prompts from."""
+    return np.asarray(data.lm_batch(seed, n, length, vocab))
+
+
+def _rand_trace(base, rows, rng, p_lo, p_hi, t_lo, t_hi, prefix=()):
+    """(prompt, budget) pairs: `prefix` + a [p_lo, p_hi]-token cut of each
+    base row, with a [t_lo, t_hi] completion budget."""
+    prefix = list(prefix)
+    return [(prefix + base[i, : rng.randint(p_lo, p_hi + 1)].tolist(),
+             int(rng.randint(t_lo, t_hi + 1))) for i in rows]
+
+
 def _make_trace(rng: np.random.RandomState, n_req, p_lo, p_hi, t_lo, t_hi,
                 vocab):
-    base = np.asarray(data.lm_batch(0, n_req, p_hi, vocab))
-    lens = rng.randint(p_lo, p_hi + 1, size=n_req)
-    budgets = rng.randint(t_lo, t_hi + 1, size=n_req)
-    return [(base[i, : lens[i]].tolist(), int(budgets[i]))
-            for i in range(n_req)]
+    base = _base_tokens(0, n_req, p_hi, vocab)
+    return _rand_trace(base, range(n_req), rng, p_lo, p_hi, t_lo, t_hi)
 
 
 def _serve_padded(model, params, trace, slots, max_len):
@@ -79,28 +102,38 @@ def _serve_padded(model, params, trace, slots, max_len):
 
 
 def _serve_ragged(model, params, trace, slots, max_len, chunk,
-                  page_size=0, num_pages=0):
+                  page_size=0, num_pages=0, prefix_sharing=False,
+                  prefix_cache_pages=0):
     sched = serve_lib.Scheduler(model, params, max_batch_slots=slots,
                                 max_len=max_len, decode_chunk=chunk,
-                                page_size=page_size, num_pages=num_pages)
+                                page_size=page_size, num_pages=num_pages,
+                                prefix_sharing=prefix_sharing,
+                                prefix_cache_pages=prefix_cache_pages)
     rids = [sched.submit(p, t) for p, t in trace]
     results = sched.run()
-    return sum(len(results[r]) for r in rids), sched
+    return (sum(len(results[r]) for r in rids), sched,
+            [results[r] for r in rids])
 
 
 def _make_longtail_trace(rng: np.random.RandomState, n_short, n_long,
                          s_lo, s_hi, long_len, t_lo, t_hi, t_long, vocab):
     """Few long + many short prompts, longs submitted first (they pin their
     slots for the whole run — the fragmentation worst case)."""
-    base = np.asarray(data.lm_batch(7, n_short + n_long, long_len, vocab))
-    trace = []
-    for i in range(n_long):
-        trace.append((base[i, :long_len].tolist(), int(t_long)))
-    for i in range(n_short):
-        L = int(rng.randint(s_lo, s_hi + 1))
-        trace.append((base[n_long + i, :L].tolist(),
-                      int(rng.randint(t_lo, t_hi + 1))))
-    return trace
+    base = _base_tokens(7, n_short + n_long, long_len, vocab)
+    longs = [(base[i, :long_len].tolist(), int(t_long))
+             for i in range(n_long)]
+    return longs + _rand_trace(base, range(n_long, n_long + n_short), rng,
+                               s_lo, s_hi, t_lo, t_hi)
+
+
+def _make_prefix_trace(rng: np.random.RandomState, n_req, prefix_len,
+                       tail_lo, tail_hi, t_lo, t_hi, vocab):
+    """The shared-system-prompt trace: every request is the SAME
+    `prefix_len`-token prefix + a short unique tail."""
+    base = _base_tokens(11, n_req + 1, max(prefix_len, tail_hi), vocab)
+    prefix = base[n_req, :prefix_len].tolist()
+    return _rand_trace(base, range(n_req), rng, tail_lo, tail_hi,
+                       t_lo, t_hi, prefix=prefix)
 
 
 def _kv_bytes_per_token(cfg) -> int:
@@ -158,7 +191,7 @@ def run(smoke: bool = False):
     got_p = _serve_padded(model, params, trace, slots, max_len)
     dt_p = time.time() - t0
     t0 = time.time()
-    got_r, _ = _serve_ragged(model, params, trace, slots, max_len, chunk)
+    got_r, _, _ = _serve_ragged(model, params, trace, slots, max_len, chunk)
     dt_r = time.time() - t0
     assert got_p == got_r == useful, (got_p, got_r, useful)
 
@@ -206,13 +239,13 @@ def run(smoke: bool = False):
     _serve_ragged(model, params, lt_trace, paged_slots, lt_max_len, chunk,
                   page_size=ps, num_pages=num_pages)
     t0 = time.time()
-    got_s, _ = _serve_ragged(model, params, lt_trace, slot_slots, lt_max_len,
-                             chunk)
+    got_s, _, _ = _serve_ragged(model, params, lt_trace, slot_slots,
+                                lt_max_len, chunk)
     dt_s = time.time() - t0
     t0 = time.time()
-    got_g, paged_sched = _serve_ragged(model, params, lt_trace, paged_slots,
-                                       lt_max_len, chunk, page_size=ps,
-                                       num_pages=num_pages)
+    got_g, paged_sched, _ = _serve_ragged(model, params, lt_trace,
+                                          paged_slots, lt_max_len, chunk,
+                                          page_size=ps, num_pages=num_pages)
     dt_g = time.time() - t0
     assert got_s == got_g == lt_useful, (got_s, got_g, lt_useful)
     tps_s, tps_g = lt_useful / dt_s, lt_useful / dt_g
@@ -228,6 +261,67 @@ def run(smoke: bool = False):
           f"(pinned KV bytes/useful token: "
           f"{slot_pinned * bpt / lt_useful:.0f} -> "
           f"{paged_pinned * bpt / lt_useful:.0f})")
+
+    # ---- leg 3: shared-system-prompt trace, prefix sharing on vs off -----
+    # equal pool both ways; the sharing run must win on tokens/sec, compute
+    # strictly fewer prefill tokens (the skipped prefixes), and hold the
+    # common prefix in exactly ONE set of physical pages (not one per slot)
+    if smoke:
+        (px_req, px_len, px_tail_lo, px_tail_hi, px_t_lo, px_t_hi,
+         px_max_len, px_ps, px_slots) = (10, 160, 4, 8, 2, 4, 192, 16, 4)
+    else:
+        (px_req, px_len, px_tail_lo, px_tail_hi, px_t_lo, px_t_hi,
+         px_max_len, px_ps, px_slots) = (24, 192, 8, 16, 4, 8, 256, 16, 6)
+    px_pages = px_slots * (px_max_len // px_ps) + 1
+    px_trace = _make_prefix_trace(np.random.RandomState(2), px_req, px_len,
+                                  px_tail_lo, px_tail_hi, px_t_lo, px_t_hi,
+                                  cfg.vocab_size)
+    px_useful = sum(t for _, t in px_trace)
+    print(f"\nshared-prefix trace: {px_req} requests x {px_len}-token common "
+          f"prefix + {px_tail_lo}-{px_tail_hi} unique tail, budgets "
+          f"{px_t_lo}-{px_t_hi}; {px_slots} slots, {px_pages - 1} pages of "
+          f"{px_ps}")
+
+    def px_run(share):
+        return _serve_ragged(model, params, px_trace, px_slots, px_max_len,
+                             chunk, page_size=px_ps, num_pages=px_pages,
+                             prefix_sharing=share,
+                             prefix_cache_pages=2 * (px_len // px_ps))
+
+    px_run(False)
+    px_run(True)
+    t0 = time.time()
+    got_u, unshared_sched, res_u = px_run(False)
+    dt_u = time.time() - t0
+    t0 = time.time()
+    got_x, shared_sched, res_x = px_run(True)
+    dt_x = time.time() - t0
+    assert got_u == got_x == px_useful, (got_u, got_x, px_useful)
+    assert res_u == res_x, "prefix sharing changed greedy outputs"
+    tps_u, tps_x = px_useful / dt_u, px_useful / dt_x
+    # every request after the first maps the ONE physical copy of the
+    # prefix: the directory entry pins exactly prefix_len/ps pages and
+    # every hit skipped the full prefix prefill
+    prefix_pages = px_len // px_ps
+    entry_pages, covered = shared_sched.prefix_dir[
+        serve_lib.Scheduler._prefix_key(px_trace[0][0][:px_len])]
+    assert covered == px_len and len(entry_pages) == prefix_pages
+    assert shared_sched.prefix_hits == px_req - 1, shared_sched.prefix_hits
+    assert shared_sched.prefix_hit_tokens == (px_req - 1) * px_len
+    saved = (unshared_sched.prefill_tokens_computed
+             - shared_sched.prefill_tokens_computed)
+    assert saved == (px_req - 1) * px_len, saved
+    print(f"sharing off : {dt_u:6.2f}s  {tps_u:8.1f} tok/s  "
+          f"{unshared_sched.prefill_tokens_computed} prefill tokens, "
+          f"peak {unshared_sched.peak_pages_in_use} pages")
+    print(f"sharing on  : {dt_x:6.2f}s  {tps_x:8.1f} tok/s  "
+          f"{shared_sched.prefill_tokens_computed} prefill tokens, "
+          f"peak {shared_sched.peak_pages_in_use} pages, "
+          f"{shared_sched.prefix_hits} hits, prefix in {prefix_pages} "
+          f"physical pages (1x), {shared_sched.n_cow_copies} CoW copies")
+    print(f"prefix speedup: {dt_u / dt_x:6.2f}x  "
+          f"(prefill tokens {unshared_sched.prefill_tokens_computed} -> "
+          f"{shared_sched.prefill_tokens_computed})")
 
     # fixed-size probe (interpret mode, one decode step): per-slot kv_len
     # early-out vs the padded whole-batch scalar on a 512-token cache
@@ -268,6 +362,27 @@ def run(smoke: bool = False):
                 round(paged_pinned * bpt / lt_useful, 1),
             "paged_evictions": paged_sched.n_evictions,
         },
+        "prefix": {
+            "n_requests": px_req, "prefix_len": px_len,
+            "tail_lens": [px_tail_lo, px_tail_hi],
+            "completion_budgets": [px_t_lo, px_t_hi],
+            "max_len": px_max_len, "page_size": px_ps,
+            "slots": px_slots, "num_pages": px_pages,
+            "useful_tokens": px_useful,
+            "unshared_tokens_per_sec": round(tps_u, 2),
+            "shared_tokens_per_sec": round(tps_x, 2),
+            "speedup": round(dt_u / dt_x, 3),
+            "unshared_prefill_tokens":
+                unshared_sched.prefill_tokens_computed,
+            "shared_prefill_tokens": shared_sched.prefill_tokens_computed,
+            "prefill_tokens_saved": saved,
+            "prefix_hits": shared_sched.prefix_hits,
+            "prefix_physical_pages": prefix_pages,
+            "unshared_peak_pages": unshared_sched.peak_pages_in_use,
+            "shared_peak_pages": shared_sched.peak_pages_in_use,
+            "cow_copies": shared_sched.n_cow_copies,
+            "prefix_dir_evictions": shared_sched.prefix_evictions,
+        },
     }
     with open("BENCH_serving.json", "w") as f:
         json.dump(metrics, f, indent=2, sort_keys=True)
@@ -286,6 +401,15 @@ def run(smoke: bool = False):
         f"paged scheduler too slow vs slot baseline: {tps_g:.1f} <= "
         f"{lt_margin} * {tps_s:.1f} tok/s")
     assert paged_pinned < slot_pinned, (paged_pinned, slot_pinned)
+    # prefix sharing must beat the unshared paged baseline at equal pool
+    # size (>= 1.3x in full mode per the ISSUE acceptance bar)
+    px_margin = 0.85 if smoke else 1.3
+    assert tps_x > px_margin * tps_u, (
+        f"prefix sharing too slow vs unshared paged baseline: {tps_x:.1f} "
+        f"<= {px_margin} * {tps_u:.1f} tok/s")
+    assert (shared_sched.peak_pages_in_use
+            < unshared_sched.peak_pages_in_use), (
+        shared_sched.peak_pages_in_use, unshared_sched.peak_pages_in_use)
     return metrics
 
 

@@ -1,0 +1,60 @@
+#!/usr/bin/env python
+"""Bench-regression gate: fail CI when a recorded serving speedup drops
+below its floor.
+
+Reads BENCH_serving.json (written by benchmarks/serving_bench.py) and
+checks every tracked speedup against a floor chosen by the json's own
+"mode" field — the benches run with --smoke in CI, where wall-clock noise
+on a shared runner gets a tolerance; a full-mode json (committed after a
+local run) is held to the ISSUE acceptance bars.
+
+Usage: python scripts/check_bench.py [BENCH_serving.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+# (dotted key path, full-mode floor, smoke-mode floor)
+FLOORS = [
+    ("speedup", 1.0, 0.85),                  # ragged vs padded (PR 2)
+    ("longtail.paged_speedup", 1.2, 0.85),   # paged vs slot cache (PR 3)
+    ("prefix.speedup", 1.3, 0.85),           # prefix sharing vs unshared
+]
+
+
+def _get(d, path):
+    for k in path.split("."):
+        d = d[k]
+    return d
+
+
+def main(argv=None):
+    path = (argv or sys.argv[1:] or ["BENCH_serving.json"])[0]
+    with open(path) as f:
+        metrics = json.load(f)
+    smoke = metrics.get("mode") == "smoke"
+    failed = []
+    for key, full_floor, smoke_floor in FLOORS:
+        floor = smoke_floor if smoke else full_floor
+        try:
+            got = float(_get(metrics, key))
+        except KeyError:
+            failed.append(f"{key}: MISSING from {path}")
+            continue
+        status = "ok" if got >= floor else "FAIL"
+        print(f"[check_bench] {key}: {got:.3f} (floor {floor}) {status}")
+        if got < floor:
+            failed.append(f"{key}: {got:.3f} < floor {floor}")
+    if failed:
+        print(f"[check_bench] REGRESSION in {path} "
+              f"(mode={metrics.get('mode')}):", file=sys.stderr)
+        for f_ in failed:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+    print(f"[check_bench] {path} ok (mode={metrics.get('mode')})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

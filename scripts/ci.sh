@@ -12,7 +12,12 @@ python -m pytest -x -q
 echo "== kernel + decode benches (parity + pruning probes) =="
 python -m benchmarks.run --only kernel_bench,decode_bench --json BENCH_kernels.json
 
-echo "== serving bench: ragged vs padded + paged-pool vs slot-cache (smoke) =="
-# leg 2 inside is the paged-serving smoke: long-tail trace, paged admission
-# must not regress vs the dense slot scheduler (BENCH_serving.json#longtail)
+echo "== serving bench: ragged vs padded + paged-pool vs slot-cache "
+echo "   + prefix-sharing vs unshared (smoke) =="
+# leg 2 is the paged-serving smoke (long-tail trace, BENCH_serving.json#
+# longtail); leg 3 is the prefix-sharing smoke (shared-system-prompt trace,
+# BENCH_serving.json#prefix) — both must not regress vs their baselines
 python -m benchmarks.serving_bench --smoke
+
+echo "== bench-regression gate: recorded speedups vs floors =="
+python scripts/check_bench.py BENCH_serving.json

@@ -80,6 +80,13 @@ class PagedKVCache(NamedTuple):
     is reserved — see its docstring.  Layout matches the dense cache per
     page: `(num_pages, page_size, Hkv, Dh)` int8 K/V with per-(token, head)
     scales.
+
+    Pages may be SHARED between slots (several page-table rows naming the
+    same physical page): the page-table-aware write/attend paths are
+    oblivious to sharing, so the host allocator is free to refcount pages
+    and map a common prompt prefix once for N requests.  Sharing is safe
+    as long as writes only ever land in pages with refcount 1 — the
+    scheduler enforces that with `copy_pages` copy-on-write.
     """
 
     k_q: jax.Array        # (P, page_size, Hkv, Dh) int8
@@ -166,6 +173,32 @@ def paged_gather(pool: PagedKVCache, page_table: jax.Array,
         length=jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,)),
         positions=jnp.zeros((0,), jnp.int32),
     )
+
+
+def copy_pages(pool: PagedKVCache, src: jax.Array, dst: jax.Array,
+               page_axis: int = 0) -> PagedKVCache:
+    """Copy whole physical pages inside the pool: page `dst[i]` becomes a
+    bit-exact copy of page `src[i]` (K, V and both scale planes).
+
+    This is the device half of copy-on-write sharing: the host allocator
+    detects that a write is about to land in a page whose refcount is > 1,
+    allocates a fresh destination page, and calls this to materialize the
+    private copy BEFORE swapping the slot's page-table entry — the shared
+    original is never touched, so every other holder (live slots, the
+    prefix directory) keeps reading the same bytes.
+
+    `page_axis` selects the pool's page dimension (1 for layer-stacked
+    leaves of shape (R, P, page_size, ...)).  Gather-then-scatter keeps the
+    copy layout-agnostic, so it is safe for both the behavioral gather path
+    and the head-major kernel layout (which transposes at dispatch, not in
+    storage).
+    """
+    def cp(leaf):
+        taken = jnp.take(leaf, src, axis=page_axis)
+        idx = (slice(None),) * page_axis + (dst,)
+        return leaf.at[idx].set(taken)
+
+    return PagedKVCache(*[cp(getattr(pool, f)) for f in pool._fields])
 
 
 def quantize_kv(k: jax.Array, v: jax.Array, cfg: PIMConfig):

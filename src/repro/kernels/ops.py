@@ -91,6 +91,18 @@ def paged_kernel_layout(pool: PagedKVCache):
     return k_q, ks, v_q, vs
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def paged_copy_pages(pool: PagedKVCache, src: jax.Array,
+                     dst: jax.Array) -> PagedKVCache:
+    """jit'd copy-on-write page copy over a single pool (donated): page
+    `dst[i]` := page `src[i]` for K/V and both scale planes.  Layout-safe
+    for the kernel path — `paged_kernel_layout` transposes at dispatch, so
+    copying whole pages in canonical storage keeps both the behavioral
+    gather view and the head-major kernel operands bit-identical."""
+    from repro.core.attention import copy_pages
+    return copy_pages(pool, src, dst)
+
+
 def pim_flash_attention(
     q: jax.Array,              # (B, Sq, H, Dh) float
     cache: KVCache,

@@ -9,7 +9,10 @@ scheduler (per-sequence KV lengths, EOS retirement via --eos-id, slot count
 via --max-batch-slots) instead of the padded equal-length loop; adding
 --page-size N (and optionally --num-pages) swaps the scheduler's KV storage
 for the shared paged pool (page-granular admission, lazy allocation,
-free-on-retire).  --top-p enables nucleus sampling on any path.
+free-on-retire); --prefix-cache additionally shares page-aligned prompt
+prefixes between requests (refcounted pages + copy-on-write, retained
+across retirements up to --prefix-cache-pages).  --top-p enables nucleus
+sampling on any path.
 """
 from __future__ import annotations
 
@@ -62,11 +65,24 @@ def main(argv=None):
     ap.add_argument("--num-pages", type=int, default=0,
                     help="KV pool pages incl. the reserved trash page "
                          "(0 = match the dense slot footprint)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="refcounted prefix sharing + copy-on-write pages: "
+                         "requests with a common page-aligned prompt prefix "
+                         "map the SAME physical pages and skip the shared "
+                         "prefill (requires --page-size)")
+    ap.add_argument("--prefix-cache-pages", type=int, default=0,
+                    help="cap on distinct pages the retained prefix "
+                         "directory may pin after requests retire "
+                         "(LRU-evicted; 0 = pool-pressure-driven only)")
     args = ap.parse_args(argv)
     if args.page_size and not args.continuous_batching:
         ap.error("--page-size requires --continuous-batching")
     if args.num_pages and not args.page_size:
         ap.error("--num-pages requires --page-size")
+    if args.prefix_cache and not args.page_size:
+        ap.error("--prefix-cache requires --page-size")
+    if args.prefix_cache_pages and not args.prefix_cache:
+        ap.error("--prefix-cache-pages requires --prefix-cache")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     import dataclasses
@@ -100,7 +116,9 @@ def main(argv=None):
         rng=jax.random.PRNGKey(args.seed),
         continuous_batching=args.continuous_batching, eos_id=eos,
         max_batch_slots=args.max_batch_slots or None,
-        page_size=args.page_size, num_pages=args.num_pages)
+        page_size=args.page_size, num_pages=args.num_pages,
+        prefix_sharing=args.prefix_cache,
+        prefix_cache_pages=args.prefix_cache_pages)
     jax.block_until_ready(out)
     dt = time.time() - t0
     if args.continuous_batching and eos is not None:
@@ -115,6 +133,8 @@ def main(argv=None):
         toks = args.batch * args.new_tokens
     if args.page_size:
         mode = f"scheduler/paged(ps={args.page_size})"
+        if args.prefix_cache:
+            mode += "+prefix-cache"
     elif args.continuous_batching:
         mode = "scheduler"
     else:

@@ -174,7 +174,13 @@ def attn_block_fwd_serve(params, x, cache: A.KVCache, offset, cfg: ModelConfig,
     Paged slot mode: `cache` is a `PagedKVCache` pool and `pages` the
     (B, max_pages) page table — K/V scatter through the table into the
     slot's physical pages, attention walks the table, and each row's valid
-    length is `offset + seq_lens` (or `offset + S`).
+    length is `offset + seq_lens` (or `offset + S`).  A prefix-shared tail
+    prefill is the offset > 0 case: rows whose leading table entries map
+    already-written (possibly refcount-shared) pages write only their tail
+    tokens at positions [offset, offset + seq_lens) but attend over the
+    full [0, offset + seq_lens) — the scheduler guarantees writes never
+    land in a shared page (copy-on-write privatizes them first), so this
+    path never needs to know about sharing.
     """
     B, S, _ = x.shape
     ragged = getattr(offset, "ndim", 0) >= 1

@@ -362,6 +362,31 @@ def cache_scatter(big, sub, slots):
     return {k: visit(v, sub[k], k == "blocks") for k, v in big.items()}
 
 
+def cache_copy_pages(cache, src, dst):
+    """Copy physical pages `src[i]` -> `dst[i]` in EVERY layer's paged pool.
+
+    A slot's page-table row names the same physical page ids in every
+    layer's pool, so one copy-on-write decision on the host applies to the
+    whole stack: leaves under "blocks" carry a leading layer-repetition
+    axis (page axis 1), "tail"/"dense_prefix" pools have page axis 0.
+    Non-paged leaves are untouched (the tree may mix, e.g. future hybrid
+    stacks); this is the device half of prefix sharing — see
+    `attention.copy_pages`.
+    """
+    from repro.core.attention import PagedKVCache, copy_pages
+
+    def visit(node, stacked):
+        if isinstance(node, PagedKVCache):
+            return copy_pages(node, src, dst, page_axis=1 if stacked else 0)
+        if isinstance(node, dict):
+            return {k: visit(v, stacked) for k, v in node.items()}
+        if isinstance(node, (tuple, list)) and not hasattr(node, "shape"):
+            return type(node)(visit(v, stacked) for v in node)
+        return node
+
+    return {k: visit(v, k == "blocks") for k, v in cache.items()}
+
+
 def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
                   cfg: ModelConfig, enc_out: Optional[jax.Array] = None,
                   seq_lens: Optional[jax.Array] = None,

@@ -18,6 +18,9 @@ Two generation paths:
     With `page_size > 0` the slots share a PAGED pool (vLLM-style): page-
     granular admission, lazy page allocation at decode boundaries, free-on-
     retire — one long sequence no longer pins a whole max_len buffer.
+    `prefix_sharing=True` adds refcounted page sharing: requests with a
+    common page-aligned prompt prefix map the SAME physical pages (and
+    skip the shared prefill), diverging via copy-on-write.
 
 Sharding note: these builders use plain jit with donated caches; partitioning
 propagates from the inputs — the launch layer device_puts params/caches with
@@ -34,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.attention import TRASH_PAGE
 from repro.models import transformer as T
 from repro.models.model_zoo import Model
 
@@ -177,16 +181,34 @@ def make_paged_prefill_fn(model: Model, n: int, pad_len: int,
     the shared page pool through their slots' page-table rows — no sub-batch
     cache, no scatter-insert (the pages were assigned by the host allocator,
     so the write destinations are already this wave's own pages).
+
+    `offs` is the per-row absolute position of the chunk's first token
+    (all zeros for a full-prompt prefill).  With prefix sharing a row's
+    leading page-table entries already hold the shared prefix KV, `offs`
+    is the shared token count, and only the divergent TAIL runs through
+    this forward — row b's queries attend to positions [0, offs_b +
+    lens_b) through the table, so the tail sees the shared prefix exactly
+    as a full prefill would (same quantized bytes -> bit-identical
+    logits).
     """
-    def prefill(params, tokens, lens, big_cache, pages, key):
-        offs = jnp.zeros((n,), jnp.int32)
+    def prefill(params, tokens, lens, big_cache, pages, offs, key):
         logits, big_cache, _ = model.forward_serve(
-            params, {"tokens": tokens}, big_cache, offs, seq_lens=lens,
-            pages=pages)
+            params, {"tokens": tokens}, big_cache,
+            jnp.asarray(offs, jnp.int32), seq_lens=lens, pages=pages)
         tok0 = sample_logits(logits, key, temperature, top_k, top_p)
         return big_cache, tok0
 
     return jax.jit(prefill, donate_argnums=(3,))
+
+
+@functools.lru_cache(maxsize=64)
+def make_page_copy_fn(model: Model) -> Callable:
+    """Copy-on-write device step: copy pages src[i] -> dst[i] in every
+    layer's pool (cache donated — the copy is in-place on device)."""
+    def copy(cache, src, dst):
+        return T.cache_copy_pages(cache, src, dst)
+
+    return jax.jit(copy, donate_argnums=(0,))
 
 
 @functools.lru_cache(maxsize=64)
@@ -240,6 +262,11 @@ def make_ragged_decode_fn(model: Model, chunk: int, temperature: float,
     return jax.jit(decode, donate_argnums=(2,))
 
 
+DEFER = object()
+"""Sentinel: admission must wait for the wave in flight to publish its
+prefix-directory entries (distinct from None == pool full)."""
+
+
 class Request:
     """One generation request tracked by the Scheduler."""
 
@@ -284,6 +311,24 @@ class Scheduler:
     evicted — its pages freed and the request re-queued as a continuation
     (prompt + tokens generated so far), which under greedy decoding resumes
     the exact same stream.
+
+    **Prefix sharing** (`prefix_sharing=True`, paged mode only): every
+    physical page carries a host-side refcount, and a **prefix directory**
+    maps page-aligned token prefixes (plus exact full prompts) to the
+    physical pages holding their KV.  Admission walks the directory and
+    maps a request's leading page-table entries straight onto the matched
+    pages (refcount++), skipping their prefill compute entirely — only the
+    divergent tail (always >= 1 token, so the first sampled token has
+    logits) runs through `make_paged_prefill_fn` at a per-row offset.  A
+    write about to land in a page with refcount > 1 triggers copy-on-write
+    (fresh page, device page copy, table-entry swap; the shared original is
+    never touched).  Retirement decrements refcounts — only pages nobody
+    holds return to the pool, so evict-youngest can never free a page
+    another slot still reads — and additionally KEEPS the retiree's prompt
+    pages in the directory keyed by prompt hash (retire -> keep), so later
+    identical requests hit even after the original slot is gone.  Directory
+    entries are LRU-evicted under pool pressure (and down to
+    `prefix_cache_pages` distinct pages when that cap is set).
     """
 
     def __init__(self, model: Model, params, *, max_batch_slots: int = 8,
@@ -292,7 +337,8 @@ class Scheduler:
                  top_p: float = 1.0,
                  decode_chunk: int = 8, rng: Optional[jax.Array] = None,
                  prefill_bucket: int = 16,
-                 page_size: int = 0, num_pages: int = 0):
+                 page_size: int = 0, num_pages: int = 0,
+                 prefix_sharing: bool = False, prefix_cache_pages: int = 0):
         if not scheduler_supported(model.cfg):
             raise NotImplementedError(
                 f"arch {model.cfg.name!r} is not supported by the slot "
@@ -328,11 +374,29 @@ class Scheduler:
             self._admit_seq = np.zeros(self.B, np.int64)
             self._admit_counter = 0
             self.n_evictions = 0
+            # per-page refcount: holders are slot table rows + directory
+            # entries; only pages that drop to 0 return to the free list
+            self.page_ref = np.zeros(self.num_pages, np.int32)
             self.cache = model.init_cache(
                 self.B, self.max_len, ragged=True,
                 page_size=self.page_size, num_pages=self.num_pages)
         else:
             self.cache = model.init_cache(self.B, self.max_len, ragged=True)
+        self.prefix_sharing = bool(prefix_sharing)
+        if self.prefix_sharing and not self.paged:
+            raise ValueError("prefix_sharing requires page_size > 0")
+        self.prefix_cache_pages = int(prefix_cache_pages)
+        # prefix directory: serialized token prefix -> (pages, tokens
+        # covered); insertion order == LRU order (move_to_end on hit)
+        self.prefix_dir: "collections.OrderedDict[bytes, Tuple[Tuple[int, ...], int]]" = \
+            collections.OrderedDict()
+        self._dir_ref: Dict[int, int] = {}    # page -> directory refcount
+        self._last_keys: list = []            # per-candidate key scratch
+        self.prefix_hits = 0                  # admissions that mapped pages
+        self.prefix_hit_tokens = 0            # prefill tokens skipped
+        self.prefill_tokens_computed = 0      # prefill tokens actually run
+        self.n_cow_copies = 0                 # copy-on-write page copies
+        self.prefix_evictions = 0             # directory entries LRU-evicted
         self.lengths = np.zeros(self.B, np.int32)     # per-slot kv fill
         self.active = np.zeros(self.B, bool)
         self.remaining = np.zeros(self.B, np.int32)   # token budget left
@@ -368,31 +432,191 @@ class Scheduler:
 
     def _alloc_slot(self, slot: int, tokens: int) -> bool:
         """Grow `slot`'s page-table row to cover `tokens` tokens
-        (all-or-nothing; already-covered prefixes are free)."""
+        (all-or-nothing; already-covered prefixes — including prefix-shared
+        mappings — are free).  Under prefix sharing a shortage first
+        reclaims LRU directory entries before reporting failure."""
         need = self._pages_for(min(int(tokens), self.max_len))
         row = self.page_table[slot]
         have = int((row >= 0).sum())
         if need <= have:
             return True
         if need - have > len(self.free_pages):
-            return False
+            self._reclaim(need - have)
+            if need - have > len(self.free_pages):
+                return False
         for j in range(have, need):
-            row[j] = self.free_pages.pop()
+            p = self.free_pages.pop()
+            self.page_ref[p] = 1
+            row[j] = p
         return True
 
     def _free_slot_pages(self, slot: int):
+        """Drop the slot's hold on its pages; only pages with no remaining
+        holder (no other slot, no directory entry) return to the pool."""
         row = self.page_table[slot]
-        self.free_pages.extend(int(p) for p in row[row >= 0])
+        for p in row[row >= 0]:
+            p = int(p)
+            self.page_ref[p] -= 1
+            if self.page_ref[p] == 0:
+                self.free_pages.append(p)
         row[:] = -1
 
     def pages_in_use(self) -> int:
-        """Allocated (non-free, non-trash) pages right now (paged mode)."""
+        """Allocated (non-free, non-trash) pages right now (paged mode) —
+        shared pages count ONCE, which is the whole point of sharing."""
         return (self.num_pages - 1) - len(self.free_pages)
+
+    # -- prefix directory (prefix sharing; host-side metadata) --------------
+    @staticmethod
+    def _prefix_key(tokens: Sequence[int]) -> bytes:
+        return np.asarray(tokens, np.int32).tobytes()
+
+    def directory_pages(self) -> int:
+        """Distinct physical pages currently pinned by directory entries."""
+        return len(self._dir_ref)
+
+    def _dir_put(self, key: bytes, pages: Sequence[int], covered: int):
+        if key in self.prefix_dir:
+            self.prefix_dir.move_to_end(key)
+            return
+        for p in pages:
+            self.page_ref[p] += 1
+            self._dir_ref[p] = self._dir_ref.get(p, 0) + 1
+        self.prefix_dir[key] = (tuple(int(p) for p in pages), int(covered))
+        if self.prefix_cache_pages:
+            while (len(self._dir_ref) > self.prefix_cache_pages
+                   and self.prefix_dir):
+                self._dir_evict_one()
+
+    def _dir_evict_one(self):
+        _, (pages, _) = self.prefix_dir.popitem(last=False)   # LRU
+        for p in pages:
+            self.page_ref[p] -= 1
+            self._dir_ref[p] -= 1
+            if self._dir_ref[p] == 0:
+                del self._dir_ref[p]
+            if self.page_ref[p] == 0:
+                self.free_pages.append(p)
+        self.prefix_evictions += 1
+
+    def _reclaim(self, need: int):
+        """LRU-evict directory entries until `need` pages are free (pages a
+        live slot still holds survive eviction — only the directory's hold
+        is dropped)."""
+        while len(self.free_pages) < need and self.prefix_dir:
+            self._dir_evict_one()
+
+    def clear_prefix_cache(self):
+        """Drop every directory entry (refcounts released; pages no slot
+        holds return to the pool)."""
+        while self.prefix_dir:
+            self._dir_evict_one()
+
+    def _lookup_prefix(self, prompt: Sequence[int]):
+        """Longest directory match for `prompt`: the exact full prompt
+        first (retire->keep entries cover the partial last page too), then
+        page-aligned prefixes longest-first.  Returns (pages, covered) or
+        (None, 0).  Matched entries move to MRU."""
+        buf = self._prefix_key(prompt)
+        hit = self.prefix_dir.get(buf)
+        if hit is not None and hit[1] == len(prompt):
+            self.prefix_dir.move_to_end(buf)
+            return hit
+        for k in range(len(prompt) // self.page_size, 0, -1):
+            key = buf[: 4 * k * self.page_size]
+            hit = self.prefix_dir.get(key)
+            if hit is not None and hit[1] == k * self.page_size:
+                self.prefix_dir.move_to_end(key)
+                return hit
+        return None, 0
+
+    def _registration_keys(self, prompt: Sequence[int], exact: bool):
+        """The directory keys `_register_prefixes` would insert for this
+        prompt (used both for registration and for the intra-wave pending
+        check).  The prompt is serialized ONCE and sliced — int32 keys are
+        4 bytes/token, so prefix k's key is the first 4*k*ps bytes."""
+        ps = self.page_size
+        buf = self._prefix_key(prompt)
+        keys = [(buf[: 4 * k * ps], k, k * ps)
+                for k in range(1, len(prompt) // ps + 1)]
+        if exact and len(prompt) % ps:
+            keys.append((buf, self._pages_for(len(prompt)), len(prompt)))
+        return keys
+
+    def _register_prefixes(self, slot: int, prompt: Sequence[int],
+                           exact: bool):
+        """Publish `slot`'s freshly valid prompt KV: one entry per
+        page-aligned prefix (and, with `exact`, the full prompt including
+        its partial last page — the retire->keep entry).  MUST be called
+        only when no further write can land in the covered pages: after
+        the admission prefill for aligned prefixes (decode writes start
+        past the last full prompt page), at retirement for the exact
+        entry."""
+        row = self.page_table[slot]
+        for key, n_pages, covered in self._registration_keys(prompt, exact):
+            self._dir_put(key, [int(p) for p in row[:n_pages]], covered)
+
+    # -- copy-on-write ------------------------------------------------------
+    def _cow_range(self, slot: int, start: int, end: int,
+                   pairs: List[Tuple[int, int]]) -> bool:
+        """Privatize `slot`'s pages overlapping write range [start, end):
+        any allocated page there with refcount > 1 gets a fresh page
+        (appended to `pairs` as a (src, dst) device copy) and the table
+        entry swapped.  Returns False if a fresh page cannot be found even
+        after reclaiming directory entries (already-swapped entries stay
+        swapped; their copies must still be applied)."""
+        if start >= end:
+            return True
+        row = self.page_table[slot]
+        ps = self.page_size
+        for j in range(start // ps, (end - 1) // ps + 1):
+            p = int(row[j])
+            if p < 0 or self.page_ref[p] <= 1:
+                continue
+            if not self.free_pages:
+                self._reclaim(1)
+                if not self.free_pages:
+                    return False
+            fresh = self.free_pages.pop()
+            self.page_ref[fresh] = 1
+            self.page_ref[p] -= 1        # shared original: never reaches 0
+            row[j] = fresh
+            pairs.append((p, fresh))
+            self.n_cow_copies += 1
+        return True
+
+    def _apply_copies(self, pairs: List[Tuple[int, int]]):
+        """Run the collected CoW page copies as ONE device dispatch (before
+        the wave's prefill/decode, which reads the private copies).  The
+        pair count is padded to the next power of two with trash->trash
+        no-op copies so the jitted copy program compiles O(log n) shapes,
+        not one per distinct CoW count."""
+        if not pairs:
+            return
+        n = 1
+        while n < len(pairs):
+            n *= 2
+        pad = [(TRASH_PAGE, TRASH_PAGE)] * (n - len(pairs))
+        src = jnp.asarray([s for s, _ in pairs + pad], jnp.int32)
+        dst = jnp.asarray([d for _, d in pairs + pad], jnp.int32)
+        self.cache = make_page_copy_fn(self.model)(self.cache, src, dst)
+
+    def _eviction_victim(self) -> int:
+        """The youngest active slot.  Ties on admission sequence (e.g. a
+        state restored from a snapshot, or future batched admission stamps)
+        break on the HIGHEST request id — a property of the request, not of
+        slot-index/dict iteration order, so eviction is deterministic
+        across runs and hosts."""
+        slots = np.flatnonzero(self.active)
+        return int(max(slots, key=lambda b: (int(self._admit_seq[b]),
+                                             self.slot_req[b].rid)))
 
     def _evict(self, slot: int):
         """Free a starved slot and re-queue its request as a continuation:
         prompt + tokens generated so far, with the remaining budget — under
-        greedy decoding the re-prefill resumes the identical stream."""
+        greedy decoding the re-prefill resumes the identical stream.  Pages
+        other holders (slots sharing the prefix, directory entries) still
+        reference merely lose this slot's refcount; they are NOT freed."""
         r = self.slot_req[slot]
         self.slot_req[slot] = None
         self.active[slot] = False
@@ -411,43 +635,132 @@ class Scheduler:
         self.active[slot] = False
         self.lengths[slot] = 0
         if self.paged:
+            if self.prefix_sharing and r is not None:
+                # retire -> keep: publish the full prompt's pages (incl.
+                # the partial last page — its prompt rows are valid; rows
+                # beyond are this request's decode garbage, never
+                # advertised because a later hit re-runs the last prompt
+                # token through CoW) before dropping the slot's hold
+                self._register_prefixes(slot, r.prompt, exact=True)
             self._free_slot_pages(slot)
 
+    def _try_admit_paged(self, slot: int, r: Request, pending_keys,
+                         cow_pairs: List[Tuple[int, int]]) -> Optional[int]:
+        """Place request `r` into `slot` (paged mode): prefix-directory
+        mapping (when sharing), copy-on-write for the tail write range, and
+        fresh-page allocation for the rest.  Returns the tail offset
+        (prompt tokens whose prefill is skipped; 0 without a directory
+        hit), None when the pool cannot hold the request, or DEFER when
+        the request must wait for the wave in flight to publish a matching
+        prefix (admitting now would duplicate the pages it is about to
+        register — the follow-up wave in the same `_admit` call maps them
+        instead)."""
+        pend = r.prompt + r.tokens
+        p_len = len(pend)
+        if self.prefix_sharing:
+            keys = self._registration_keys(pend, True)
+            if any(key in pending_keys for key, _, _ in keys):
+                return DEFER
+            # the wave will register these once admitted (shared with the
+            # caller's pending_keys update — computed once per candidate)
+            self._last_keys = keys
+            pages, covered = self._lookup_prefix(pend)
+            if pages:
+                # map the matched pages; keep >= 1 tail token so the wave's
+                # prefill yields logits for this row's first sampled token
+                tail_start = min(covered, p_len - 1)
+                row = self.page_table[slot]
+                for j, p in enumerate(pages):
+                    row[j] = p
+                    self.page_ref[p] += 1
+                if (self._cow_range(slot, tail_start, p_len, cow_pairs)
+                        and self._alloc_slot(slot, p_len)):
+                    self.prefix_hits += 1
+                    self.prefix_hit_tokens += tail_start
+                    return tail_start
+                # roll back: drop this slot's holds (shared originals
+                # survive via their other holders) and prune copies whose
+                # fresh destination was just returned to the pool
+                self._free_slot_pages(slot)
+                cow_pairs[:] = [pr for pr in cow_pairs
+                                if self.page_ref[pr[1]] > 0]
+                return None
+        return 0 if self._alloc_slot(slot, p_len) else None
+
     def _admit(self, emitted: Dict[int, List[int]]):
+        # a wave may end on DEFER (a queued request wants pages the wave in
+        # flight is about to publish); its prefill registers them host-side
+        # immediately, so a follow-up wave in the SAME scheduling round can
+        # map them — admission only yields to decode when the queue is
+        # drained, slot/page-blocked, or genuinely empty
+        while self._admit_wave(emitted):
+            pass
+
+    def _admit_wave(self, emitted: Dict[int, List[int]]) -> bool:
+        """One admission wave (one prefill dispatch).  Returns True when a
+        follow-up wave should run right away (progress was made AND the
+        wave ended on a prefix deferral, not on lack of slots/pages)."""
         free = [i for i in range(self.B) if self.slot_req[i] is None]
         wave: List[Tuple[int, Request]] = []
+        offs: List[int] = []
+        cow_pairs: List[Tuple[int, int]] = []
+        pending_keys: set = set()
+        deferred = False
         while free and self.queue:
             if self.paged:
                 # page-granular admission: the prompt (or eviction
                 # continuation) must fit in free pages — NOT a whole
-                # max_len slot
-                pend = self.queue[0].prompt + self.queue[0].tokens
-                if not self._alloc_slot(free[0], len(pend)):
+                # max_len slot; shared prefix pages are mapped, not copied
+                t = self._try_admit_paged(free[0], self.queue[0],
+                                          pending_keys, cow_pairs)
+                if t is DEFER:
+                    deferred = True
+                    break
+                if t is None:
                     break                     # FCFS: no starvation of longs
+                offs.append(t)
+                if self.prefix_sharing:
+                    pending_keys.update(k for k, _, _ in self._last_keys)
+            else:
+                offs.append(0)
             wave.append((free.pop(0), self.queue.popleft()))
         if not wave:
-            return
-        if self.paged:
-            # sample while the wave's prompt pages are held — requests that
-            # retire at admission (budget 1 / instant EOS) free them below,
-            # and the peak metric must still have seen them pinned
-            self.peak_pages_in_use = max(self.peak_pages_in_use,
-                                         self.pages_in_use())
+            return False
         n = len(wave)
         prompts = [r.prompt + r.tokens for _, r in wave]
-        lens = np.array([len(p) for p in prompts], np.int32)
+        full_lens = np.array([len(p) for p in prompts], np.int32)
+        offs_a = np.array(offs, np.int32)
+        # only each row's divergent TAIL runs through the prefill forward;
+        # without sharing the tail IS the whole prompt (offsets all 0)
+        tails = [p[o:] for p, o in zip(prompts, offs)]
+        lens = full_lens - offs_a
         L = self._bucket(int(lens.max()))
         toks = np.zeros((n, L), np.int32)
-        for i, p in enumerate(prompts):
+        for i, p in enumerate(tails):
             toks[i, : len(p)] = p
         slots = np.array([s for s, _ in wave], np.int32)
+        self.prefill_tokens_computed += int(lens.sum())
         self.key, sub = jax.random.split(self.key)
         if self.paged:
+            # CoW copies land before the prefill that reads the private
+            # pages; sample the peak while the wave's prompt pages are
+            # held — requests that retire at admission (budget 1 / instant
+            # EOS) free them below, and the metric must have seen them
+            self._apply_copies(cow_pairs)
+            self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                         self.pages_in_use())
             fn = make_paged_prefill_fn(self.model, n, L, self.temperature,
                                        self.top_k, self.top_p)
             self.cache, tok0 = fn(self.params, jnp.asarray(toks),
                                   jnp.asarray(lens), self.cache,
-                                  jnp.asarray(self.page_table[slots]), sub)
+                                  jnp.asarray(self.page_table[slots]),
+                                  jnp.asarray(offs_a), sub)
+            if self.prefix_sharing:
+                # the wave's prompt KV is now fully valid: publish every
+                # page-aligned prefix (the exact-prompt entry waits for
+                # retirement — decode still appends into the partial page)
+                for (s, _), p in zip(wave, prompts):
+                    self._register_prefixes(s, p, exact=False)
         else:
             fn = make_ragged_prefill_fn(self.model, n, L, self.max_len,
                                         self.temperature, self.top_k,
@@ -462,7 +775,7 @@ class Scheduler:
             r.tokens.append(t0)
             emitted.setdefault(r.rid, []).append(t0)
             self.slot_req[s] = r
-            self.lengths[s] = lens[i]
+            self.lengths[s] = full_lens[i]
             self.cur_tok[s] = t0
             self.remaining[s] = budget_left - 1
             if self.paged:
@@ -472,11 +785,12 @@ class Scheduler:
             # at exactly max_len tokens just produced its final in-capacity
             # token — decoding further would write past the buffer/table
             done = ((self.eos_id is not None and t0 == self.eos_id)
-                    or budget_left <= 1 or int(lens[i]) >= self.max_len)
+                    or budget_left <= 1 or int(full_lens[i]) >= self.max_len)
             if done:
                 self._retire(s)
             else:
                 self.active[s] = True
+        return deferred
 
     def _decode(self, emitted: Dict[int, List[int]]):
         if not self.active.any():
@@ -484,21 +798,30 @@ class Scheduler:
         run = self.active.copy()
         if self.paged:
             # lazy allocation: extend every active slot's table to cover the
-            # next chunk (capped at max_len — the capacity retirement bound);
+            # next chunk (capped at max_len — the capacity retirement bound)
+            # and privatize any still-shared page the chunk will write
+            # (normally none: decode writes start past a slot's registered
+            # prefix pages — this is the safety net for exact-prompt hits);
             # starved slots stall for this chunk, and if NOTHING can run the
             # youngest slot is evicted until something can
+            cow_pairs: List[Tuple[int, int]] = []
             while True:
                 run = self.active.copy()
                 for b in np.flatnonzero(self.active):
                     upto = min(int(self.lengths[b]) + self.decode_chunk,
                                self.max_len)
-                    if not self._alloc_slot(int(b), upto):
+                    if not (self._alloc_slot(int(b), upto)
+                            and self._cow_range(int(b), int(self.lengths[b]),
+                                                upto, cow_pairs)):
                         run[b] = False
                 if run.any() or not self.active.any():
                     break
-                young = max(np.flatnonzero(self.active),
-                            key=lambda b: self._admit_seq[b])
-                self._evict(int(young))
+                self._evict(self._eviction_victim())
+                # pruning: copies whose fresh destination the eviction just
+                # freed must not fire (the page may be re-allocated above)
+                cow_pairs[:] = [pr for pr in cow_pairs
+                                if self.page_ref[pr[1]] > 0]
+            self._apply_copies(cow_pairs)
             self.peak_pages_in_use = max(self.peak_pages_in_use,
                                          self.pages_in_use())
             if not run.any():
@@ -571,7 +894,9 @@ def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
              eos_id: Optional[int] = None,
              decode_chunk: int = 8,
              max_batch_slots: Optional[int] = None,
-             page_size: int = 0, num_pages: int = 0) -> jax.Array:
+             page_size: int = 0, num_pages: int = 0,
+             prefix_sharing: bool = False,
+             prefix_cache_pages: int = 0) -> jax.Array:
     """Batched generation. Returns (B, max_new_tokens) generated ids.
 
     Default: equal-length prefill + scan-fused decode (the paper's token
@@ -580,7 +905,9 @@ def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
     retirement over `max_batch_slots` KV slots (default: the batch size);
     rows that finish early are padded with `eos_id` (or 0).  `page_size > 0`
     additionally switches the scheduler's KV storage to the paged pool
-    (`num_pages` pages; 0 = match the dense slot footprint).
+    (`num_pages` pages; 0 = match the dense slot footprint), and
+    `prefix_sharing=True` layers refcounted prefix sharing + copy-on-write
+    on top (`prefix_cache_pages` caps the retained prefix directory).
 
     temperature=0 reproduces greedy decoding exactly; temperature>0 samples
     (optionally top_k- and/or nucleus-top_p-truncated) with `rng`
@@ -594,7 +921,9 @@ def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
                           max_len=max_len, eos_id=eos_id,
                           temperature=temperature, top_k=top_k, top_p=top_p,
                           decode_chunk=decode_chunk, rng=rng,
-                          page_size=page_size, num_pages=num_pages)
+                          page_size=page_size, num_pages=num_pages,
+                          prefix_sharing=prefix_sharing,
+                          prefix_cache_pages=prefix_cache_pages)
         tokens = np.asarray(prompt_batch["tokens"])
         rids = [sched.submit(tokens[b].tolist(), max_new_tokens)
                 for b in range(B)]

@@ -191,6 +191,16 @@ def cache_specs(cache, mesh: Mesh, global_batch: int) -> Any:
     don't divide the TP width — seq-sharded KV is the flash-decoding-style
     fallback; reductions over the sharded axis become psums automatically).
     Recurrent states: batch over DP, widest trailing dim over model.
+
+    Ragged serving metadata is REPLICATED, never DP-sharded: the (B,)
+    per-slot `length` leaves and the scheduler's (B, max_pages) page-table
+    leaves (dict keys "pages"/"page_table"/"seq_lens") carry page ids /
+    fill levels that the host allocator and every replica's kernel
+    scalar-prefetch must resolve identically — sharding the slot axis here
+    is the multi-host scheduler work tracked in ROADMAP.md, not a spec
+    decision.  Paged pools (`PagedKVCache`) have no batch axis at all and
+    follow the same rule: kv-heads over `model` when divisible, else
+    replicated.
     """
     ba = batch_axes(mesh)
     dp = 1
@@ -224,7 +234,11 @@ def cache_specs(cache, mesh: Mesh, global_batch: int) -> Any:
                 if cand != b_ax and shape[cand] % tp == 0 and shape[cand] >= tp:
                     spec[cand] = "model"
                     break
-        elif field in ("length", "positions"):
+        elif field in ("length", "positions", "pages", "page_table",
+                       "seq_lens"):
+            # ragged (B,) lengths and (B, max_pages) page tables: always
+            # replicated, even when a dim matches global_batch (the b_ax
+            # DP spec computed above must NOT apply)
             return P(*([None] * nd))
         else:                                   # recurrent states
             for cand in range(nd - 1, -1, -1):

@@ -1,0 +1,285 @@
+"""Prefix-sharing paged KV coverage (ISSUE 4).
+
+  * bit-exact parity of prefix sharing ON vs OFF vs isolated generation,
+    behavioral AND kernel attention paths
+  * copy-on-write divergence: identical page-aligned prompts share every
+    prompt page; the re-run of the last token privatizes one page and the
+    streams still match isolated greedy exactly
+  * retire -> keep: a request admitted AFTER an identical one retired still
+    hits the directory (exact-prompt entry, partial last page included)
+  * eviction under sharing: a starved pool evicts the youngest slot without
+    freeing pages other holders still reference; outputs stay exact
+  * refcount lifecycle invariants + LRU directory eviction under pressure
+  * deterministic eviction tie-breaking (by rid, not slot/dict order)
+  * replicated sharding specs for ragged (B,) lengths and page tables
+"""
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import pipeline as data
+from repro.models.model_zoo import build_model
+from repro.runtime import serve_lib
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def kernel_model():
+    import dataclasses
+    cfg = dataclasses.replace(get_config("internlm2-1.8b", smoke=True),
+                              attn_impl="kernel")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _isolated(model, params, prompt, budget, max_len):
+    p = {"tokens": jnp.asarray([prompt])}
+    return np.asarray(serve_lib.greedy_generate(
+        model, params, p, budget, max_len))[0].tolist()
+
+
+def _run(model, params, trace, *, slots, max_len, ps, pages, share,
+         chunk=4, cache_pages=0):
+    sched = serve_lib.Scheduler(
+        model, params, max_batch_slots=slots, max_len=max_len,
+        decode_chunk=chunk, page_size=ps, num_pages=pages,
+        prefix_sharing=share, prefix_cache_pages=cache_pages)
+    rids = [sched.submit(p, t) for p, t in trace]
+    res = sched.run()
+    return [res[r] for r in rids], sched
+
+
+# ---------------------------------------------------------------------------
+# parity: sharing on == sharing off == isolated, behavioral path
+# ---------------------------------------------------------------------------
+def test_sharing_parity_behavioral(smoke_model):
+    cfg, model, params = smoke_model
+    base = np.asarray(data.lm_batch(0, 7, 48, cfg.vocab_size))
+    prefix = base[6, :32].tolist()               # 2 shared pages at ps=16
+    trace = [(prefix + base[i, : 5 + i].tolist(), 6 + i) for i in range(5)]
+    off, s_off = _run(model, params, trace, slots=3, max_len=96, ps=16,
+                      pages=40, share=False)
+    on, s_on = _run(model, params, trace, slots=3, max_len=96, ps=16,
+                    pages=40, share=True)
+    assert on == off
+    assert s_on.prefix_hits == len(trace) - 1
+    assert s_on.prefix_hit_tokens == (len(trace) - 1) * 32
+    assert (s_on.prefill_tokens_computed
+            == s_off.prefill_tokens_computed - s_on.prefix_hit_tokens)
+    for i, (p, t) in enumerate(trace):
+        assert on[i] == _isolated(model, params, p, t, 96)
+    # the shared prefix lives in exactly ONE set of physical pages
+    key = serve_lib.Scheduler._prefix_key(prefix)
+    pages, covered = s_on.prefix_dir[key]
+    assert covered == 32 and len(pages) == 2
+    # full refcount drain: directory cleared -> every page back in the pool
+    s_on.clear_prefix_cache()
+    assert len(s_on.free_pages) == s_on.num_pages - 1
+    assert int(s_on.page_ref.sum()) == 0
+
+
+def test_sharing_parity_kernel_path(kernel_model):
+    """Same parity through the page-table-aware Pallas kernels (interpret
+    mode): sharing must be invisible to the kernel path too."""
+    cfg, model, params = kernel_model
+    base = np.asarray(data.lm_batch(3, 3, 24, cfg.vocab_size))
+    prefix = base[2, :16].tolist()               # 2 shared pages at ps=8
+    trace = [(prefix + base[i, : 3 + i].tolist(), 4) for i in range(2)]
+    off, _ = _run(model, params, trace, slots=2, max_len=48, ps=8,
+                  pages=16, share=False)
+    on, s_on = _run(model, params, trace, slots=2, max_len=48, ps=8,
+                    pages=16, share=True)
+    assert on == off
+    assert s_on.prefix_hits == 1 and s_on.prefix_hit_tokens == 16
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write divergence
+# ---------------------------------------------------------------------------
+def test_cow_divergence_identical_aligned_prompts(smoke_model):
+    """Two identical PAGE-ALIGNED prompts: the second maps every prompt
+    page (including the one holding the final token), so its mandatory
+    1-token tail re-run writes into a shared page — copy-on-write must
+    privatize it and both streams must match isolated greedy exactly."""
+    cfg, model, params = smoke_model
+    prompt = np.asarray(data.lm_batch(2, 1, 32, cfg.vocab_size))[0].tolist()
+    trace = [(prompt, 8), (prompt, 12)]
+    on, s_on = _run(model, params, trace, slots=2, max_len=96, ps=16,
+                    pages=30, share=True)
+    assert s_on.n_cow_copies >= 1
+    assert s_on.prefix_hits == 1
+    assert on[0] == _isolated(model, params, prompt, 8, 96)
+    assert on[1] == _isolated(model, params, prompt, 12, 96)
+
+
+def test_retire_keep_exact_prompt_hit(smoke_model):
+    """A request submitted AFTER an identical one fully retired hits the
+    retire->keep exact-prompt entry (27 tokens -> partial page included):
+    only the final token re-runs, through a CoW copy of the partial page."""
+    cfg, model, params = smoke_model
+    prompt = np.asarray(data.lm_batch(5, 1, 27, cfg.vocab_size))[0].tolist()
+    sched = serve_lib.Scheduler(model, params, max_batch_slots=2, max_len=96,
+                                page_size=16, num_pages=30, decode_chunk=4,
+                                prefix_sharing=True)
+    ra = sched.submit(prompt, 6)
+    res_a = sched.run()
+    assert not sched.queue and all(r is None for r in sched.slot_req)
+    rb = sched.submit(prompt, 9)
+    res_b = sched.run()
+    assert sched.prefix_hits == 1
+    assert sched.prefix_hit_tokens == 26          # all but the last token
+    assert sched.n_cow_copies >= 1                # partial page privatized
+    assert res_a[ra] == _isolated(model, params, prompt, 6, 96)
+    assert res_b[rb] == _isolated(model, params, prompt, 9, 96)
+
+
+# ---------------------------------------------------------------------------
+# eviction under sharing
+# ---------------------------------------------------------------------------
+def test_eviction_under_sharing_keeps_shared_pages(smoke_model):
+    """Starved pool + shared prefix: the youngest slot gets evicted, but
+    pages other holders reference only lose ONE refcount — the survivor
+    keeps decoding against valid prefix KV and the continuation re-admits
+    through the directory.  Outputs must equal isolated greedy."""
+    cfg, model, params = smoke_model
+    base = np.asarray(data.lm_batch(4, 2, 40, cfg.vocab_size))
+    prefix = base[0, :32].tolist()
+    t0 = prefix + base[1, :4].tolist()
+    t1 = prefix + base[1, 4:8].tolist()
+    sched = serve_lib.Scheduler(model, params, max_batch_slots=2, max_len=64,
+                                page_size=16, num_pages=5, decode_chunk=8,
+                                prefix_sharing=True)
+    r0 = sched.submit(t0, 24)
+    r1 = sched.submit(t1, 24)
+    res = sched.run()
+    assert sched.n_evictions >= 1
+    assert sched.prefix_hits >= 1
+    assert res[r0] == _isolated(model, params, t0, 24, 64)
+    assert res[r1] == _isolated(model, params, t1, 24, 64)
+    sched.clear_prefix_cache()
+    assert len(sched.free_pages) == sched.num_pages - 1
+    assert int(sched.page_ref.sum()) == 0
+
+
+def test_directory_lru_eviction_under_cap(smoke_model):
+    """`prefix_cache_pages` caps the distinct pages the directory may pin:
+    registrations past the cap LRU-evict older entries, and evicting an
+    entry whose pages a live slot still holds never frees those pages."""
+    cfg, model, params = smoke_model
+    base = np.asarray(data.lm_batch(6, 4, 32, cfg.vocab_size))
+    trace = [(base[i].tolist(), 4) for i in range(4)]    # 4 distinct prompts
+    on, s_on = _run(model, params, trace, slots=2, max_len=64, ps=16,
+                    pages=20, share=True, cache_pages=4)
+    assert s_on.directory_pages() <= 4
+    assert s_on.prefix_evictions >= 1
+    for i, (p, t) in enumerate(trace):
+        assert on[i] == _isolated(model, params, p, t, 64)
+
+
+# ---------------------------------------------------------------------------
+# the device half of CoW: page copies are layout-safe for the kernel path
+# ---------------------------------------------------------------------------
+def test_paged_copy_pages_is_kernel_layout_safe():
+    """`ops.paged_copy_pages` (the single-pool CoW entry; the scheduler
+    uses the all-layer `transformer.cache_copy_pages`) must produce a page
+    whose bytes are identical through BOTH access paths: the behavioral
+    gather and the head-major kernel layout + decode kernel.  A table
+    pointing at the copy must attend bit-identically to the original."""
+    from repro.configs.base import LUTSoftmaxConfig, PIMConfig
+    from repro.core import attention as attn
+    from repro.kernels import ops
+    from repro.kernels.pim_decode import pim_decode_pallas
+
+    PIM, LUT = PIMConfig(), LUTSoftmaxConfig()
+    B, ps, Hkv, H, Dh = 1, 8, 2, 4, 16
+    key = jax.random.PRNGKey(1)
+    k = jax.random.normal(key, (B, ps, Hkv, Dh)) * 0.5
+    v = jax.random.normal(jax.random.fold_in(key, 1), (B, ps, Hkv, Dh)) * 0.5
+    pool = attn.paged_cache_write(
+        attn.init_paged_kv_cache(5, ps, Hkv, Dh), k, v,
+        jnp.zeros(B, jnp.int32), PIM, jnp.asarray([[2, -1]], jnp.int32),
+        seq_lens=jnp.asarray([ps]))
+    copied = ops.paged_copy_pages(pool, jnp.asarray([2], jnp.int32),
+                                  jnp.asarray([4], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(copied.k_q[4]),
+                                  np.asarray(copied.k_q[2]))
+    np.testing.assert_array_equal(np.asarray(copied.v_scale[4]),
+                                  np.asarray(copied.v_scale[2]))
+    # decode through a table naming the COPY == through the original
+    q = jax.random.normal(jax.random.fold_in(key, 2), (B, 1, H, Dh)) * 0.5
+    q_q, qs = ops._q_kernel_layout(q, PIM.input_bits)
+    kq, ks, vq, vs = ops.paged_kernel_layout(copied)
+    lens = jnp.asarray([ps], jnp.int32)
+    outs = [pim_decode_pallas(q_q, qs, kq, ks, vq, vs, lens - 1, lens,
+                              interpret=True,
+                              page_table=jnp.asarray([[p, -1]], jnp.int32))
+            for p in (2, 4)]
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(outs[1]))
+
+
+# ---------------------------------------------------------------------------
+# deterministic eviction tie-breaking (satellite)
+# ---------------------------------------------------------------------------
+def test_eviction_victim_tie_breaks_by_rid(smoke_model):
+    """Equal admission stamps must break on request id (a property of the
+    request), NOT on slot index / dict order: the victim is the highest
+    rid wherever it sits in the slot array."""
+    cfg, model, params = smoke_model
+    sched = serve_lib.Scheduler(model, params, max_batch_slots=3, max_len=32,
+                                page_size=16, num_pages=7)
+    sched.active[:] = [True, True, True]
+    sched._admit_seq[:] = [7, 7, 7]
+    sched.slot_req = [serve_lib.Request(5, [1], 4),
+                      serve_lib.Request(9, [1], 4),
+                      serve_lib.Request(2, [1], 4)]
+    assert sched._eviction_victim() == 1          # rid 9
+    sched.slot_req[1].rid, sched.slot_req[2].rid = 2, 9
+    assert sched._eviction_victim() == 2          # rid moved -> victim moves
+    # a strictly younger admission stamp still dominates rid
+    sched._admit_seq[:] = [8, 7, 7]
+    assert sched._eviction_victim() == 0
+
+
+# ---------------------------------------------------------------------------
+# sharding specs for ragged serving metadata (satellite)
+# ---------------------------------------------------------------------------
+def test_cache_specs_ragged_and_page_table_replicated():
+    """(B,) length leaves and (B, max_pages) page-table leaves must come
+    back REPLICATED even when B == global_batch and DP > 1; KV data leaves
+    keep their batch-DP/heads-TP sharding; paged pools are never
+    DP-sharded (no batch axis) but still TP-shard kv-heads."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.attention import init_kv_cache, init_paged_kv_cache
+    from repro.runtime.sharding import cache_specs
+
+    mesh = SimpleNamespace(axis_names=("data", "model"),
+                           shape={"data": 4, "model": 2})
+    B, S, Hkv, Dh = 4, 32, 2, 16
+    tree = {
+        "tail": (init_kv_cache(B, S, Hkv, Dh, ragged=True),
+                 init_paged_kv_cache(9, 8, Hkv, Dh)),
+        "page_table": np.zeros((B, 6), np.int32),
+        "seq_lens": np.zeros((B,), np.int32),
+    }
+    specs = cache_specs(tree, mesh, global_batch=B)
+    dense, pool = specs["tail"]
+    # KV data: batch over DP, kv-heads over TP — but the ragged (B,)
+    # length leaf stays replicated even though its dim == global_batch
+    assert dense.k_q == P(("data",), None, "model", None)
+    assert dense.length == P(None)
+    assert specs["page_table"] == P(None, None)   # never DP-sharded
+    assert specs["seq_lens"] == P(None)
+    assert pool.k_q == P(None, None, "model", None)
+    assert pool.k_scale == P(None, None, "model")

@@ -117,3 +117,76 @@ def test_kv_cache_write_idempotent_region(heads_pow, seq, seed):
     np.testing.assert_array_equal(np.asarray(c1.k_q), np.asarray(c2.k_q))
     np.testing.assert_array_equal(np.asarray(c1.v_scale),
                                   np.asarray(c2.v_scale))
+
+
+@given(st.integers(1, 4), st.integers(2, 5), st.integers(1, 12),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_paged_cache_write_never_escapes_allocated_pages(
+        B, ps, S, seed):
+    """Drop-mode containment: whatever the (random) page table, per-row
+    offsets and valid lengths, `paged_cache_write` never touches a page
+    outside the writing row's allocated entries — every invalid route
+    (beyond seq_lens, past the table, or into a -1/unallocated entry)
+    lands in the trash page, and pages no row owns keep their bytes."""
+    from repro.core import attention as A
+    rng = np.random.RandomState(seed)
+    Hkv, Dh = 2, 8
+    n_tables = rng.randint(1, 5)
+    P = rng.randint(2, 10)
+    # random table: entries in [-1, P) (may alias pages between rows, may
+    # name the trash page 0 explicitly — all must stay contained)
+    pt = rng.randint(-1, P, size=(B, n_tables)).astype(np.int32)
+    pos = rng.randint(0, n_tables * ps + 2, size=B).astype(np.int32)
+    lens = rng.randint(0, S + 1, size=B).astype(np.int32)
+    key = jax.random.PRNGKey(seed)
+    k = jax.random.normal(key, (B, S, Hkv, Dh))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, Dh))
+    # marker pool: every byte 1 so an unexpected write is visible
+    from repro.core.attention import PagedKVCache
+    base = A.init_paged_kv_cache(P, ps, Hkv, Dh)
+    marked = PagedKVCache(
+        k_q=jnp.ones_like(base.k_q), v_q=jnp.ones_like(base.v_q),
+        k_scale=jnp.ones_like(base.k_scale),
+        v_scale=jnp.ones_like(base.v_scale))
+    out = A.paged_cache_write(marked, k, v, jnp.asarray(pos), PIMConfig(),
+                              jnp.asarray(pt), seq_lens=jnp.asarray(lens))
+    # pages named by NO row's valid in-range writes must be untouched
+    owned = set()
+    for b in range(B):
+        for i in range(int(lens[b])):
+            logical = int(pos[b]) + i
+            if logical >= n_tables * ps:
+                continue                      # past the table -> trash
+            p = int(pt[b, logical // ps])
+            if p > A.TRASH_PAGE:
+                owned.add(p)
+    out_k = np.asarray(out.k_q)
+    for p in range(P):
+        if p == A.TRASH_PAGE or p in owned:
+            continue
+        np.testing.assert_array_equal(
+            out_k[p], np.ones_like(out_k[p]),
+            err_msg=f"page {p} written but owned by no valid route")
+    # and the valid routes DID land: every (page, slot) with exactly ONE
+    # valid writer holds that writer's quantized codes (slots aliased by
+    # several rows have scatter-order-dependent bytes — skipped; the
+    # scheduler's allocator never aliases pages between rows)
+    kq, _, ks, _ = A.quantize_kv(k, v, PIMConfig())
+    kq, ks = np.asarray(kq), np.asarray(ks)
+    writers = {}
+    for b in range(B):
+        for i in range(int(lens[b])):
+            logical = int(pos[b]) + i
+            if logical >= n_tables * ps:
+                continue
+            p = int(pt[b, logical // ps])
+            if p > A.TRASH_PAGE:
+                writers.setdefault((p, logical % ps), []).append((b, i))
+    for (p, slot), who in writers.items():
+        if len(who) != 1:
+            continue
+        b, i = who[0]
+        np.testing.assert_array_equal(out_k[p, slot], kq[b, i])
+        np.testing.assert_array_equal(np.asarray(out.k_scale)[p, slot],
+                                      ks[b, i])
