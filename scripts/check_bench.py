@@ -20,6 +20,14 @@ FLOORS = [
     ("speedup", 1.0, 0.85),                  # ragged vs padded (PR 2)
     ("longtail.paged_speedup", 1.2, 0.85),   # paged vs slot cache (PR 3)
     ("prefix.speedup", 1.3, 0.85),           # prefix sharing vs unshared
+    # mixed prefill+decode steps vs the admission-stall baseline (PR 5):
+    # the recorded full run meets the ISSUE bars (p95 TBT 2.2x >= 2x,
+    # tokens/sec 1.1x >= 0.95x); the floors sit below the CPU box's
+    # run-to-run variance band (1.8-2.2x / 0.9-1.1x — see the
+    # serving_bench leg 4 platform note) so the gate catches scheduler
+    # regressions without flaking on wall-clock noise.
+    ("mixed.p95_tbt_improvement", 1.7, 1.2),
+    ("mixed.tokens_per_sec_ratio", 0.85, 0.75),
 ]
 
 

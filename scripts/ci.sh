@@ -13,10 +13,12 @@ echo "== kernel + decode benches (parity + pruning probes) =="
 python -m benchmarks.run --only kernel_bench,decode_bench --json BENCH_kernels.json
 
 echo "== serving bench: ragged vs padded + paged-pool vs slot-cache "
-echo "   + prefix-sharing vs unshared (smoke) =="
+echo "   + prefix-sharing vs unshared + mixed-steps vs stall (smoke) =="
 # leg 2 is the paged-serving smoke (long-tail trace, BENCH_serving.json#
 # longtail); leg 3 is the prefix-sharing smoke (shared-system-prompt trace,
-# BENCH_serving.json#prefix) — both must not regress vs their baselines
+# BENCH_serving.json#prefix); leg 4 is the chunked-prefill smoke (stall
+# trace, BENCH_serving.json#mixed: p95 TBT + tokens/sec ratio) — all must
+# not regress vs their baselines
 python -m benchmarks.serving_bench --smoke
 
 echo "== bench-regression gate: recorded speedups vs floors =="

@@ -392,19 +392,27 @@ def attention_mask(
 def expected_kv_block_iters(
     q_len: int, k_len: int, q_offset: int, block_q: int, block_k: int,
     causal: bool = True, window: int = 0, kv_valid_len: int | None = None,
+    q_valid_len: int | None = None,
 ) -> int:
     """Analytic count of KV-block iterations one head needs after grid
     pruning: block (qi, ki) is counted iff it is not entirely above the
     causal diagonal, beyond `kv_valid_len`, or outside `window`.  Mirrors
     `_block_needed` in the Pallas kernels — benchmarks/tests compare the
-    kernels' measured iteration probes against this."""
+    kernels' measured iteration probes against this.
+
+    `q_valid_len` (default `q_len`) mirrors the ragged-Q early-out: q blocks
+    at or past it are skipped outright, and the causal reach of a partially
+    valid q block ends at its last VALID query row."""
     kv_valid_len = k_len if kv_valid_len is None else kv_valid_len
+    q_valid_len = q_len if q_valid_len is None else q_valid_len
     n_q = -(-q_len // block_q)
     n_k = -(-k_len // block_k)
     count = 0
     for qi in range(n_q):
+        if qi * block_q >= q_valid_len:
+            continue
         q_lo = q_offset + qi * block_q
-        q_hi = q_offset + (qi + 1) * block_q - 1
+        q_hi = q_offset + min((qi + 1) * block_q, q_valid_len) - 1
         for ki in range(n_k):
             k_start = ki * block_k
             if k_start >= kv_valid_len:

@@ -114,29 +114,36 @@ def pim_flash_attention(
     out_dtype=jnp.bfloat16,
     decode_kernel: bool = True,
     decode_block_k: int = 256,
+    q_len=None,
 ) -> jax.Array:
     """Fused flash-style PIM attention over the int8 KV cache.
 
     Single-token steps (Sq == 1) auto-dispatch to the split-K flash-decode
     kernel when `decode_kernel` is set — full grid occupancy across KV
     partitions instead of one padded q block serializing over the cache.
+
+    `q_len` is the optional (B,) ragged-Q vector: row b's valid query count
+    in this launch (rows past it early-out — see the kernels' docstrings).
+    Rows with q_len == 0 cost zero KV iterations on either kernel.
     """
     B, Sq, H, Dh = q.shape
     q_q, qs, k_q, ks, v_q, vs = kernel_attention_layout(
         q, cache, pim_cfg.input_bits)
+    if q_len is not None:
+        q_len = jnp.asarray(q_len, jnp.int32)
     if Sq == 1 and decode_kernel:
         o = _dec_k.pim_decode_pallas(
             q_q, qs, k_q, ks, v_q, vs,
             jnp.asarray(q_offset, jnp.int32), cache.length,
             pim_cfg, lut_cfg, causal=causal, window=window,
-            block_k=decode_block_k, interpret=_interpret(),
+            block_k=decode_block_k, interpret=_interpret(), q_len=q_len,
         )
     else:
         o = _attn_k.pim_attention_pallas(
             q_q, qs, k_q, ks, v_q, vs,
             jnp.asarray(q_offset, jnp.int32), cache.length,
             pim_cfg, lut_cfg, causal=causal, window=window,
-            interpret=_interpret(),
+            interpret=_interpret(), q_len=q_len,
         )
     return o.reshape(B, H, Sq, Dh).transpose(0, 2, 1, 3).astype(out_dtype)
 
@@ -152,6 +159,7 @@ def pim_paged_flash_attention(
     causal: bool = True,
     out_dtype=jnp.bfloat16,
     decode_kernel: bool = True,
+    q_len=None,
 ) -> jax.Array:
     """Fused PIM attention over the paged KV pool: both kernels walk the
     slot's page-table row instead of a contiguous cache (pages are the
@@ -159,24 +167,29 @@ def pim_paged_flash_attention(
     over table entries).  Bit-identical to `pim_flash_attention` over a
     dense cache holding the same tokens with block_k == page_size.
 
+    `q_len` is the optional (B,) ragged-Q vector (valid query rows per slot;
+    0 = the row contributes nothing to this launch and costs zero compute).
+
     Sliding-window layers are not paged (the scheduler gates them out), so
     there is no `window` parameter here.
     """
     B, Sq, H, Dh = q.shape
     q_q, qs = _q_kernel_layout(q, pim_cfg.input_bits)
     k_q, ks, v_q, vs = paged_kernel_layout(pool)
+    if q_len is not None:
+        q_len = jnp.asarray(q_len, jnp.int32)
     if Sq == 1 and decode_kernel:
         o = _dec_k.pim_decode_pallas(
             q_q, qs, k_q, ks, v_q, vs,
             jnp.asarray(q_offset, jnp.int32), jnp.asarray(kv_len, jnp.int32),
             pim_cfg, lut_cfg, causal=causal, interpret=_interpret(),
-            page_table=page_table,
+            page_table=page_table, q_len=q_len,
         )
     else:
         o = _attn_k.pim_attention_pallas(
             q_q, qs, k_q, ks, v_q, vs,
             jnp.asarray(q_offset, jnp.int32), jnp.asarray(kv_len, jnp.int32),
             pim_cfg, lut_cfg, causal=causal, interpret=_interpret(),
-            page_table=page_table,
+            page_table=page_table, q_len=q_len,
         )
     return o.reshape(B, H, Sq, Dh).transpose(0, 2, 1, 3).astype(out_dtype)

@@ -28,6 +28,12 @@ a fully-masked block (all-`_NEG` codes contribute e=0 and a LUT rescale
 factor of exactly 1.0), so pruning changes iteration count, not numerics.
 A per-(head, q-block) iteration counter is emitted alongside the output so
 benchmarks and tests can assert the pruning actually happened.
+
+Ragged-Q (mixed prefill+decode batches): the scalar-prefetched table is
+(3, B) — [q_offset_b, kv_len_b, q_len_b] — and q blocks at or past a row's
+`q_len_b` early-out entirely, so one launch serves rows contributing 1
+decode token, a prefill chunk, or nothing at all, each walking only its own
+KV blocks.
 """
 from __future__ import annotations
 
@@ -66,7 +72,7 @@ def _block_needed(k_start, block_k, q_lo, q_hi, kv_len, causal: bool,
 
 
 def _attn_kernel(
-    scalars_ref,                       # SMEM (2, nb): [q_offset_b, kv_len_b]
+    scalars_ref,                  # SMEM (3, nb): [q_offset_b, kv_len_b, q_len_b]
     pt_ref,                            # SMEM (nb, n_k_blocks) page table
     q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, table_ref,
     out_ref, iters_ref,
@@ -84,21 +90,30 @@ def _attn_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
         iters_ref[...] = jnp.zeros_like(iters_ref)
 
-    # each grid row reads ITS sequence's [q_offset, kv_len] — ragged batches
-    # prune/mask per sequence (h_per_b rows of the flat BH axis per sequence)
+    # each grid row reads ITS sequence's [q_offset, kv_len, q_len] — ragged
+    # batches prune/mask per sequence (h_per_b rows of the flat BH axis per
+    # sequence), and q blocks past a row's q_len (padding rows of a ragged /
+    # mixed prefill+decode batch) run ZERO KV iterations
     b = pl.program_id(0) // h_per_b
     q_offset = scalars_ref[0, b]
     kv_len = scalars_ref[1, b]
+    q_len = scalars_ref[2, b]
 
     qi = pl.program_id(1)
     # an unallocated page (id < 0) is a clamped placeholder fetch and must be
     # skipped even with prune=False — its tokens are beyond kv_len by the
-    # allocator invariant (dense callers pass an all-zero dummy table)
-    needed = pt_ref[b, ki] >= 0
+    # allocator invariant (dense callers pass an all-zero dummy table); a q
+    # block entirely past q_len holds only padding rows whose output nobody
+    # reads, so it is skipped under the same contract
+    needed = (pt_ref[b, ki] >= 0) & (qi * block_q < q_len)
     if prune:
+        # causal reach ends at the last VALID query row of this block (rows
+        # past q_len are padding — skipping their KV blocks only zeroes
+        # output the caller already ignores)
         needed &= _block_needed(
             ki * block_k, block_k,
-            q_offset + qi * block_q, q_offset + (qi + 1) * block_q - 1,
+            q_offset + qi * block_q,
+            q_offset + jnp.minimum((qi + 1) * block_q, q_len) - 1,
             kv_len, causal, window,
         )
 
@@ -193,6 +208,7 @@ def pim_attention_pallas(
     prune: bool = True,
     return_iters: bool = False,
     page_table: jax.Array | None = None,   # (B, max_pages) int32, -1 = free
+    q_len: jax.Array | None = None,        # () or (B,) int32 valid q rows
 ):
     """Fused PIM attention. Returns (BH, Sq, Dh) f32 (scales already applied).
 
@@ -201,6 +217,15 @@ def pim_attention_pallas(
     early-outs against its OWN sequence's offset/length, so variable-length
     prefill packs without cross-contamination and empty rows cost zero
     KV-block iterations.
+
+    `q_len` (default: all Sq rows valid) is the RAGGED-Q axis: row b's valid
+    query count in this launch.  Whole q blocks at or past a row's q_len
+    early-out before any compute (their output is zero), and the causal
+    prune treats the row's last valid query as its reach — so a mixed
+    prefill+decode batch packs decode rows (q_len 1), prefill-chunk rows
+    (q_len up to the chunk budget) and idle rows (q_len 0, zero iterations)
+    into ONE launch, each paying only its own KV blocks.  Rows below q_len
+    are bit-identical to a q_len=None launch of the same rows.
 
     With `page_table` set, K/V operands are a page pool in head-major layout
     (`(Hkv, num_pages, page_size, Dh)`): the KV grid axis runs over the
@@ -218,7 +243,9 @@ def pim_attention_pallas(
     BH, Sq, Dh = q_q.shape
     q_off = jnp.reshape(jnp.asarray(q_offset, jnp.int32), (-1,))
     kvl = jnp.reshape(jnp.asarray(kv_len, jnp.int32), (-1,))
-    nb = max(q_off.shape[0], kvl.shape[0])
+    ql = jnp.reshape(jnp.asarray(Sq if q_len is None else q_len, jnp.int32),
+                     (-1,))
+    nb = max(q_off.shape[0], kvl.shape[0], ql.shape[0])
     assert BH % nb == 0, (BH, nb)
     if page_table is not None:
         Hkv, P, ps, _ = k_q.shape
@@ -259,8 +286,9 @@ def pim_attention_pallas(
         prune=prune, h_per_b=h_per_b,
     )
     scalars = jnp.stack(
-        [jnp.broadcast_to(q_off, (nb,)), jnp.broadcast_to(kvl, (nb,))]
-    )                                                        # (2, nb)
+        [jnp.broadcast_to(q_off, (nb,)), jnp.broadcast_to(kvl, (nb,)),
+         jnp.broadcast_to(ql, (nb,))]
+    )                                                        # (3, nb)
     if page_table is not None:
         # flat q row b*H + h attends kv head (b*H + h) // q_per_kv; its page
         # pool row is that modulo Hkv, and the page comes from the slot's

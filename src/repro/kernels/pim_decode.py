@@ -48,7 +48,7 @@ from repro.kernels.pim_attention import _NEG, _block_needed, _lut_gather
 
 
 def _decode_kernel(
-    scalars_ref,                       # SMEM (2, nb): [q_pos_b, kv_len_b]
+    scalars_ref,                  # SMEM (3, nb): [q_pos_b, kv_len_b, q_len_b]
     pt_ref,                            # SMEM (nb, n_k_blocks) page table
     q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, table_ref,
     m_ref, den_ref, acc_ref, iters_ref,
@@ -64,8 +64,11 @@ def _decode_kernel(
     # unallocated pages (id < 0) can never contribute: their tokens are
     # beyond kv_len by the allocator invariant, and their VMEM block is a
     # clamped placeholder fetch — skip before any compute (dense callers
-    # pass an all-zero dummy table, so this is a no-op there)
-    needed = (pt_ref[b, ki] >= 0) & _block_needed(
+    # pass an all-zero dummy table, so this is a no-op there).  q_len_b == 0
+    # marks a row that contributes no decode token to this launch (e.g. a
+    # prefill-chunk row of a mixed batch, served by the ragged-Q prefill
+    # kernel instead): zero partitions, exact-zero combine.
+    needed = (pt_ref[b, ki] >= 0) & (scalars_ref[2, b] > 0) & _block_needed(
         ki * block_k, block_k, q_pos, q_pos, kv_len, causal, window)
 
     @pl.when(needed)
@@ -139,6 +142,7 @@ def pim_decode_pallas(
     interpret: bool = False,
     return_iters: bool = False,
     page_table: jax.Array | None = None,   # (B, max_pages) int32, -1 = free
+    q_len: jax.Array | None = None,        # () or (B,) int32, 0 = skip row
 ):
     """Split-K decode attention. Returns (BH, 1, Dh) f32.
 
@@ -146,6 +150,13 @@ def pim_decode_pallas(
     continuous batching): every (slot, kv-head, k-partition) grid cell
     early-outs against its own sequence length, so a retired/empty slot
     (kv_len == 0) executes zero KV partitions.
+
+    `q_len` (default 1 everywhere) marks which rows contribute a decode
+    token to this launch: a row with q_len == 0 runs zero partitions and
+    returns exact zeros — in a mixed prefill+decode step the prefill-chunk
+    rows are masked out here and served by the ragged-Q prefill kernel in
+    the same device program, while rows with q_len > 0 stay bit-identical
+    to an unmasked launch.
 
     With `page_table` set, K/V operands are a page POOL in head-major layout
     (`(Hkv, num_pages, page_size, Dh)`, see `ops.paged_kernel_layout`) and
@@ -161,7 +172,9 @@ def pim_decode_pallas(
     assert Sq == 1, "pim_decode_pallas is specialized to single-token decode"
     q_off = jnp.reshape(jnp.asarray(q_offset, jnp.int32), (-1,))
     kvl = jnp.reshape(jnp.asarray(kv_len, jnp.int32), (-1,))
-    nb = max(q_off.shape[0], kvl.shape[0])
+    ql = jnp.reshape(jnp.asarray(1 if q_len is None else q_len, jnp.int32),
+                     (-1,))
+    nb = max(q_off.shape[0], kvl.shape[0], ql.shape[0])
 
     if page_table is not None:
         Hkv, P, ps, _ = k_q.shape
@@ -203,8 +216,9 @@ def pim_decode_pallas(
         input_bits=lut_cfg.input_bits, hkv_per_b=hkv_per_b,
     )
     scalars = jnp.stack(
-        [jnp.broadcast_to(q_off, (nb,)), jnp.broadcast_to(kvl, (nb,))]
-    )                                                        # (2, nb)
+        [jnp.broadcast_to(q_off, (nb,)), jnp.broadcast_to(kvl, (nb,)),
+         jnp.broadcast_to(ql, (nb,))]
+    )                                                        # (3, nb)
     if page_table is not None:
         # the index map turns the logical KV partition into a physical page:
         # clamped to the trash page for unallocated entries (the guarded

@@ -11,8 +11,10 @@ via --max-batch-slots) instead of the padded equal-length loop; adding
 for the shared paged pool (page-granular admission, lazy allocation,
 free-on-retire); --prefix-cache additionally shares page-aligned prompt
 prefixes between requests (refcounted pages + copy-on-write, retained
-across retirements up to --prefix-cache-pages).  --top-p enables nucleus
-sampling on any path.
+across retirements up to --prefix-cache-pages); --mixed-steps chunks
+admission prefill into mixed prefill+decode steps (at most
+--prefill-chunk-budget prompt tokens per step) so a long prompt never
+stalls the decoding slots.  --top-p enables nucleus sampling on any path.
 """
 from __future__ import annotations
 
@@ -74,6 +76,21 @@ def main(argv=None):
                     help="cap on distinct pages the retained prefix "
                          "directory may pin after requests retire "
                          "(LRU-evicted; 0 = pool-pressure-driven only)")
+    ap.add_argument("--mixed-steps", action="store_true",
+                    help="chunked prefill: every scheduler step is one "
+                         "mixed batch of decode tokens + prompt chunks, so "
+                         "admission never stalls decoding slots (requires "
+                         "--continuous-batching; bit-identical outputs)")
+    ap.add_argument("--prefill-chunk-budget", type=int, default=0,
+                    help="max prompt tokens one mixed step may prefill "
+                         "across all prefilling slots (0 = default 32)")
+    ap.add_argument("--mixed-dispatch", default="fused",
+                    choices=["fused", "paired"],
+                    help="mixed-step shape: one (B, L) rectangle per step "
+                         "('fused', default) or a prefilling-rows-only "
+                         "chunk wave paired with the decode scan "
+                         "('paired'; paged mode only — cheaper when "
+                         "compute dominates dispatch overhead)")
     args = ap.parse_args(argv)
     if args.page_size and not args.continuous_batching:
         ap.error("--page-size requires --continuous-batching")
@@ -83,6 +100,12 @@ def main(argv=None):
         ap.error("--prefix-cache requires --page-size")
     if args.prefix_cache_pages and not args.prefix_cache:
         ap.error("--prefix-cache-pages requires --prefix-cache")
+    if args.mixed_steps and not args.continuous_batching:
+        ap.error("--mixed-steps requires --continuous-batching")
+    if args.prefill_chunk_budget and not args.mixed_steps:
+        ap.error("--prefill-chunk-budget requires --mixed-steps")
+    if args.mixed_dispatch == "paired" and not args.page_size:
+        ap.error("--mixed-dispatch paired requires --page-size")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     import dataclasses
@@ -118,7 +141,10 @@ def main(argv=None):
         max_batch_slots=args.max_batch_slots or None,
         page_size=args.page_size, num_pages=args.num_pages,
         prefix_sharing=args.prefix_cache,
-        prefix_cache_pages=args.prefix_cache_pages)
+        prefix_cache_pages=args.prefix_cache_pages,
+        mixed_steps=args.mixed_steps,
+        prefill_chunk_budget=args.prefill_chunk_budget,
+        mixed_dispatch=args.mixed_dispatch)
     jax.block_until_ready(out)
     dt = time.time() - t0
     if args.continuous_batching and eos is not None:
@@ -139,6 +165,8 @@ def main(argv=None):
         mode = "scheduler"
     else:
         mode = "scan-fused"
+    if args.mixed_steps:
+        mode += "+mixed-steps"
     print(f"[serve] arch={cfg.name} attn={cfg.attn_impl} mode={mode} "
           f"temp={args.temperature} top_k={args.top_k} top_p={args.top_p} "
           f"generated {out.shape} in {dt:.2f}s "

@@ -124,7 +124,8 @@ def attn_block_init_state(cfg: ModelConfig, batch: int, max_len: int,
                            cfg.resolved_head_dim, ring=ring, ragged=ragged)
 
 
-def _serve_attend(q, cache, offset, cfg: ModelConfig, window: int, causal: bool):
+def _serve_attend(q, cache, offset, cfg: ModelConfig, window: int, causal: bool,
+                  q_len=None):
     if cfg.attn_impl == "kernel":
         from repro.kernels import ops
         # Sq == 1 steps dispatch to the split-K flash-decode kernel (full
@@ -134,7 +135,10 @@ def _serve_attend(q, cache, offset, cfg: ModelConfig, window: int, causal: bool)
             out_dtype=jnp.dtype(cfg.compute_dtype),
             decode_kernel=cfg.decode_kernel,
             decode_block_k=cfg.decode_block_k,
+            q_len=q_len,
         )
+    # behavioral path: per-row two-pass arithmetic — rows past a caller's
+    # q_len are garbage the caller already ignores, so no masking is needed
     return A.pim_attention(
         q, cache, cfg.pim, cfg.lut, q_offset=offset, causal=causal,
         window=window, out_dtype=jnp.dtype(cfg.compute_dtype),
@@ -142,7 +146,7 @@ def _serve_attend(q, cache, offset, cfg: ModelConfig, window: int, causal: bool)
 
 
 def _serve_attend_paged(q, pool, pages, kv_len, offset, cfg: ModelConfig,
-                        causal: bool):
+                        causal: bool, q_len=None):
     """Attend over the paged pool: the kernel path walks the page table in
     both Pallas kernels; the behavioral path runs the exact two-pass pipeline
     over a gathered slot-dense view (the bit-exact paged reference)."""
@@ -152,6 +156,7 @@ def _serve_attend_paged(q, pool, pages, kv_len, offset, cfg: ModelConfig,
             q, pool, pages, kv_len, offset, cfg.pim, cfg.lut, causal=causal,
             out_dtype=jnp.dtype(cfg.compute_dtype),
             decode_kernel=cfg.decode_kernel,
+            q_len=q_len,
         )
     dense = A.paged_gather(pool, pages, kv_len)
     return A.pim_attention(
@@ -160,9 +165,43 @@ def _serve_attend_paged(q, pool, pages, kv_len, offset, cfg: ModelConfig,
     )
 
 
+def _mixed_attend(q, cache, offset, kv_len, seq_lens, decode_rows,
+                  cfg: ModelConfig, causal: bool, window: int = 0,
+                  pages=None):
+    """Mixed prefill+decode attention (kernel path): ONE device program, two
+    early-out-complementary launches.
+
+    The ragged-Q prefill launch serves the prefill-chunk rows (decode rows
+    are masked to q_len 0 — zero KV iterations); the Sq == 1 launch serves
+    the decode rows through EXACTLY the dispatch an unchunked decode step
+    uses (split-K decode kernel, or the prefill kernel at Sq == 1 when
+    cfg.decode_kernel is off) with prefill rows masked to kv_len 0 — also
+    zero compute.  Each row therefore pays only its own KV blocks AND
+    produces the same bits it would produce in a separate unchunked
+    prefill/decode dispatch, which is what keeps mixed scheduler steps
+    bit-identical to the admit-then-decode baseline on the kernel path.
+    """
+    sl = jnp.asarray(seq_lens, jnp.int32)
+    ql_prefill = jnp.where(decode_rows, 0, sl)
+    ql_decode = decode_rows.astype(jnp.int32)
+    kv_decode = jnp.where(decode_rows, kv_len, 0)
+    if pages is not None:
+        o = _serve_attend_paged(q, cache, pages, kv_len, offset, cfg, causal,
+                                q_len=ql_prefill)
+        od = _serve_attend_paged(q[:, :1], cache, pages, kv_decode, offset,
+                                 cfg, causal, q_len=ql_decode)
+    else:
+        o = _serve_attend(q, cache, offset, cfg, window, causal,
+                          q_len=ql_prefill)
+        od = _serve_attend(q[:, :1], cache._replace(length=kv_decode), offset,
+                           cfg, window, causal, q_len=ql_decode)
+    o0 = jnp.where(decode_rows[:, None, None], od[:, 0], o[:, 0])
+    return jnp.concatenate([o0[:, None], o[:, 1:]], axis=1)
+
+
 def attn_block_fwd_serve(params, x, cache: A.KVCache, offset, cfg: ModelConfig,
                          window: int = 0, causal: bool = True, seq_lens=None,
-                         pages=None):
+                         pages=None, decode_rows=None):
     """Prefill (S>1, offset=0) or decode (S=1, offset=cache fill).
 
     Ragged slot mode: `offset` may be a (B,) vector of per-slot write
@@ -181,6 +220,14 @@ def attn_block_fwd_serve(params, x, cache: A.KVCache, offset, cfg: ModelConfig,
     full [0, offset + seq_lens) — the scheduler guarantees writes never
     land in a shared page (copy-on-write privatizes them first), so this
     path never needs to know about sharing.
+
+    Mixed slot mode: `decode_rows` is a (B,) bool marking rows that
+    contribute exactly ONE decode token to this step (their seq_lens is 1
+    and their offset is the current fill); the remaining rows carry prefill
+    chunks.  On the kernel path the two row classes dispatch through their
+    unchunked kernels inside one program (`_mixed_attend`); the behavioral
+    path needs no routing — its per-row arithmetic is already identical for
+    any batch composition.
     """
     B, S, _ = x.shape
     ragged = getattr(offset, "ndim", 0) >= 1
@@ -200,13 +247,23 @@ def attn_block_fwd_serve(params, x, cache: A.KVCache, offset, cfg: ModelConfig,
                                     seq_lens)
         kv_len = offset + (S if seq_lens is None
                            else jnp.asarray(seq_lens, jnp.int32))
-        o = _serve_attend_paged(q, cache, pages, kv_len, offset, cfg, causal)
+        if decode_rows is not None and cfg.attn_impl == "kernel":
+            o = _mixed_attend(q, cache, offset, kv_len, seq_lens, decode_rows,
+                              cfg, causal, pages=pages)
+        else:
+            o = _serve_attend_paged(q, cache, pages, kv_len, offset, cfg,
+                                    causal, q_len=seq_lens)
     elif ragged:
         if window and cache_len == window:
             raise NotImplementedError(
                 "ragged serving does not support ring (sliding-window) caches")
         cache = A.cache_write_ragged(cache, k, v, offset, cfg.pim, seq_lens)
-        o = _serve_attend(q, cache, offset, cfg, window, causal)
+        if decode_rows is not None and cfg.attn_impl == "kernel":
+            o = _mixed_attend(q, cache, offset, cache.length, seq_lens,
+                              decode_rows, cfg, causal, window=window)
+        else:
+            o = _serve_attend(q, cache, offset, cfg, window, causal,
+                              q_len=seq_lens)
     elif window and cache_len == window:
         if S > 1:
             # windowed prefill: banded attention within the chunk (single-chunk

@@ -120,9 +120,9 @@ def build_model(cfg: ModelConfig) -> Model:
                             page_size=page_size, num_pages=num_pages)
 
     def forward_serve(params, batch, cache, offset, enc_out=None,
-                      seq_lens=None, pages=None):
+                      seq_lens=None, pages=None, decode_rows=None):
         return T.forward_serve(params, batch, cache, offset, cfg,
                                enc_out=enc_out, seq_lens=seq_lens,
-                               pages=pages)
+                               pages=pages, decode_rows=decode_rows)
 
     return Model(cfg, init, forward_train, loss, init_cache, forward_serve)

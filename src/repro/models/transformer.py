@@ -89,15 +89,18 @@ def _block_init_state(kind: str, cfg: ModelConfig, batch: int, max_len: int,
 
 
 def _block_fwd_serve(kind: str, params, x, state, offset, cfg: ModelConfig,
-                     enc_out=None, seq_lens=None, pages=None):
+                     enc_out=None, seq_lens=None, pages=None,
+                     decode_rows=None):
     if kind in ("attn", "moe"):
         return B.attn_block_fwd_serve(params, x, state, offset, cfg,
                                       window=0, causal=cfg.causal,
-                                      seq_lens=seq_lens, pages=pages)
+                                      seq_lens=seq_lens, pages=pages,
+                                      decode_rows=decode_rows)
     if kind == "attn_local":
         return B.attn_block_fwd_serve(params, x, state, offset, cfg,
                                       window=cfg.window, causal=True,
-                                      seq_lens=seq_lens, pages=pages)
+                                      seq_lens=seq_lens, pages=pages,
+                                      decode_rows=decode_rows)
     if kind == "xattn":
         return B.xattn_block_fwd_serve(params, x, state, offset, cfg,
                                        enc_out=enc_out)
@@ -390,8 +393,10 @@ def cache_copy_pages(cache, src, dst):
 def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
                   cfg: ModelConfig, enc_out: Optional[jax.Array] = None,
                   seq_lens: Optional[jax.Array] = None,
-                  pages: Optional[jax.Array] = None):
-    """One serve step (prefill chunk or single-token decode).
+                  pages: Optional[jax.Array] = None,
+                  decode_rows: Optional[jax.Array] = None):
+    """One serve step (prefill chunk, single-token decode, or a MIXED batch
+    of both).
 
     Ragged slot mode: `offset` may be a (B,) vector of per-slot positions and
     `seq_lens` a (B,) count of valid tokens per row (left-aligned padding
@@ -403,6 +408,14 @@ def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
     is the shared (B, max_pages) page table — every attention layer writes
     and attends through the same table (one table row per slot names that
     slot's physical pages in every layer's pool).
+
+    Mixed slot mode: `decode_rows` is a (B,) bool marking the rows of this
+    step that carry exactly one decode token (the rest carry prefill
+    chunks of up to the scheduler's token budget).  Every attention layer
+    then routes each row class through the kernels its unchunked dispatch
+    would use — one fused device program, per-row bit-identical to separate
+    prefill and decode steps (see `blocks._mixed_attend`).  Only attention
+    stacks support it (the same gate as the slot scheduler).
 
     Returns (logits_last (B,V), new_cache, enc_out) — enc_out is computed on
     the first (offset==0) call for encoder-decoder archs and threaded back.
@@ -417,7 +430,8 @@ def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
         dp = []
         for p, st in zip(params["dense_prefix"], cache["dense_prefix"]):
             x, st = _block_fwd_serve("attn", p, x, st, offset, cfg,
-                                     seq_lens=seq_lens, pages=pages)
+                                     seq_lens=seq_lens, pages=pages,
+                                     decode_rows=decode_rows)
             dp.append(st)
         new_cache["dense_prefix"] = tuple(dp)
 
@@ -427,7 +441,8 @@ def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
         for j, kind in enumerate(pat):
             x, st = _block_fwd_serve(kind, group_params[j], x, group_state[j],
                                      offset, cfg, enc_out=enc_out,
-                                     seq_lens=seq_lens, pages=pages)
+                                     seq_lens=seq_lens, pages=pages,
+                                     decode_rows=decode_rows)
             new_states.append(st)
         return x, tuple(new_states)
 
@@ -439,7 +454,8 @@ def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
         x, st = _block_fwd_serve(
             _moe_kind_for_layer(cfg, kind, R * len(pat) + i),
             params["tail"][i], x, cache["tail"][i], offset, cfg,
-            enc_out=enc_out, seq_lens=seq_lens, pages=pages)
+            enc_out=enc_out, seq_lens=seq_lens, pages=pages,
+            decode_rows=decode_rows)
         new_tail.append(st)
     new_cache["tail"] = tuple(new_tail)
     if seq_lens is not None:

@@ -21,6 +21,19 @@ Two generation paths:
     `prefix_sharing=True` adds refcounted page sharing: requests with a
     common page-aligned prompt prefix map the SAME physical pages (and
     skip the shared prefill), diverging via copy-on-write.
+    `mixed_steps=True` chunks admission prefill: instead of one monolithic
+    prompt dispatch that stalls every decoding slot, each scheduler step is
+    one MIXED batch where decoding slots contribute their next token and
+    prefilling slots the next page-aligned chunk of their prompt (at most
+    `prefill_chunk_budget` prefill tokens per step) — time between tokens
+    stays bounded by the chunk budget, not by the longest queued prompt.
+
+Sampling keys: the Scheduler derives every sampled token's PRNG key from
+(rng, request id, token index) via `fold_in`, NOT from a serially split
+stream — a request's sampled tokens are a pure function of the seed and its
+own stream position.  That is what makes chunked admission, eviction
+continuations, and any interleaving of mixed steps bit-identical to the
+unchunked scheduler even at temperature > 0.
 
 Sharding note: these builders use plain jit with donated caches; partitioning
 propagates from the inputs — the launch layer device_puts params/caches with
@@ -142,6 +155,28 @@ def make_generate_fn(model: Model, prompt_len: int, max_new_tokens: int,
 # ===========================================================================
 # ragged continuous batching
 # ===========================================================================
+def _row_keys(base_key, rids, gens):
+    """Per-row sampling keys: fold (request id, generated-token index) into
+    the scheduler's base key.  A request's i-th generated token always
+    samples with the SAME key no matter which dispatch computes it —
+    admission prefill, a mixed step, a decode chunk-scan, or the re-prefill
+    of an eviction continuation."""
+    fold = lambda r, g: jax.random.fold_in(jax.random.fold_in(base_key, r), g)
+    return jax.vmap(fold)(jnp.maximum(jnp.asarray(rids, jnp.int32), 0),
+                          jnp.asarray(gens, jnp.int32))
+
+
+def sample_logits_per_row(logits: jax.Array, keys, temperature: float = 0.0,
+                          top_k: int = 0, top_p: float = 1.0) -> jax.Array:
+    """`sample_logits` with an independent PRNG key per batch row (keys:
+    (B,) stacked keys from `_row_keys`; ignored when greedy)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.vmap(
+        lambda l, k: sample_logits(l[None], k, temperature, top_k, top_p)[0]
+    )(logits, keys)
+
+
 def scheduler_supported(cfg: ModelConfig) -> bool:
     """The slot scheduler serves pure attention stacks: recurrent/ring states
     can't be length-masked per slot (their state mixes padded positions in),
@@ -159,15 +194,17 @@ def make_ragged_prefill_fn(model: Model, n: int, pad_len: int, max_len: int,
     """Admission prefill: n left-aligned prompts padded to pad_len are run
     through one forward with per-row valid lengths (padding K/V beyond a
     row's length is written but never advertised), each row's first token is
-    sampled from its LAST VALID position's logits, and the sub-batch cache is
-    scatter-inserted into the big cache's free slots.
+    sampled from its LAST VALID position's logits (per-row (rid, index)
+    keys), and the sub-batch cache is scatter-inserted into the big cache's
+    free slots.
     """
-    def prefill(params, tokens, lens, big_cache, slots, key):
+    def prefill(params, tokens, lens, big_cache, slots, rids, gens, base_key):
         sub = model.init_cache(n, max_len, ragged=True)
         offs = jnp.zeros((n,), jnp.int32)
         logits, sub, _ = model.forward_serve(
             params, {"tokens": tokens}, sub, offs, seq_lens=lens)
-        tok0 = sample_logits(logits, key, temperature, top_k, top_p)
+        tok0 = sample_logits_per_row(logits, _row_keys(base_key, rids, gens),
+                                     temperature, top_k, top_p)
         return T.cache_scatter(big_cache, sub, slots), tok0
 
     return jax.jit(prefill, donate_argnums=(3,))
@@ -191,11 +228,13 @@ def make_paged_prefill_fn(model: Model, n: int, pad_len: int,
     as a full prefill would (same quantized bytes -> bit-identical
     logits).
     """
-    def prefill(params, tokens, lens, big_cache, pages, offs, key):
+    def prefill(params, tokens, lens, big_cache, pages, offs, rids, gens,
+                base_key):
         logits, big_cache, _ = model.forward_serve(
             params, {"tokens": tokens}, big_cache,
             jnp.asarray(offs, jnp.int32), seq_lens=lens, pages=pages)
-        tok0 = sample_logits(logits, key, temperature, top_k, top_p)
+        tok0 = sample_logits_per_row(logits, _row_keys(base_key, rids, gens),
+                                     temperature, top_k, top_p)
         return big_cache, tok0
 
     return jax.jit(prefill, donate_argnums=(3,))
@@ -228,22 +267,27 @@ def make_ragged_decode_fn(model: Model, chunk: int, temperature: float,
     `lengths + chunk` tokens per active slot before the call) and the cache
     is the shared page pool; dense callers simply omit it.
 
-    Returns decode(params, tok, cache, lengths, active, remaining, key
-    [, pages]) -> (tok, cache, lengths, active, remaining, key,
+    Sampling uses per-(request, token-index) keys (`_row_keys`): `rids` is
+    the (B,) request id per slot and `gens` the per-slot count of tokens
+    generated so far, incremented in-scan only while a row stays active.
+
+    Returns decode(params, tok, cache, lengths, active, remaining, rids,
+    gens, base_key[, pages]) -> (tok, cache, lengths, active, remaining,
     toks (chunk, B), emitted (chunk, B) bool).
     """
     eos = -2 if eos_id is None else int(eos_id)   # -2 never matches a token
 
-    def decode(params, tok, cache, lengths, active, remaining, key,
-               pages=None):
+    def decode(params, tok, cache, lengths, active, remaining, rids, gens,
+               base_key, pages=None):
         def body(carry, _):
-            tok, cache, lengths, active, remaining, key = carry
+            tok, cache, lengths, active, remaining, gens = carry
             act = active.astype(jnp.int32)
             logits, cache, _ = model.forward_serve(
                 params, {"tokens": tok[:, None]}, cache, lengths,
                 seq_lens=act, pages=pages)
-            key, sub = jax.random.split(key)
-            nxt = sample_logits(logits, sub, temperature, top_k, top_p)
+            nxt = sample_logits_per_row(logits,
+                                        _row_keys(base_key, rids, gens),
+                                        temperature, top_k, top_p)
             nxt = jnp.where(active, nxt, -1)
             new_len = lengths + act
             new_active = (active & (nxt != eos) & (remaining > 1)
@@ -251,15 +295,70 @@ def make_ragged_decode_fn(model: Model, chunk: int, temperature: float,
             # retired slots advertise length 0 from the NEXT step on: the
             # decode kernel's per-slot early-out then runs zero partitions
             lengths = jnp.where(active & ~new_active, 0, new_len)
-            carry = (nxt, cache, lengths, new_active, remaining - act, key)
+            carry = (nxt, cache, lengths, new_active, remaining - act,
+                     gens + act)
             return carry, (nxt, active)
 
         carry, (toks, emitted) = jax.lax.scan(
-            body, (tok, cache, lengths, active, remaining, key), None,
+            body, (tok, cache, lengths, active, remaining, gens), None,
             length=chunk)
-        return carry + (toks, emitted)
+        return carry[:5] + (toks, emitted)
 
     return jax.jit(decode, donate_argnums=(2,))
+
+
+@functools.lru_cache(maxsize=64)
+def make_mixed_step_fn(model: Model, n: int, pad_len: int,
+                       temperature: float = 0.0, top_k: int = 0,
+                       top_p: float = 1.0) -> Callable:
+    """One MIXED scheduler step: every slot row carries either one decode
+    token (decode_rows[b], seq_lens[b] == 1, offs[b] == current fill), a
+    prefill chunk (seq_lens[b] tokens of its prompt at absolute offset
+    offs[b]), or nothing (seq_lens[b] == 0 — idle/stalled, zero compute).
+
+    One forward advances every row's cache; attention routes decode rows
+    through the split-K decode launch and chunk rows through the ragged-Q
+    prefill launch inside the same program (`blocks._mixed_attend`), so
+    each row is bit-identical to its unchunked dispatch.  A token is
+    sampled for every row from its last valid position with per-(rid,
+    index) keys — the host keeps it only for decode rows and for rows whose
+    chunk completed their prompt (their tok0), and discards the rest.
+
+    Returns step(params, toks, cache, offs, seq_lens, decode_rows, rids,
+    gens, base_key[, pages]) -> (cache, tok (n,)).
+    """
+    def step(params, toks, cache, offs, seq_lens, decode_rows, rids, gens,
+             base_key, pages=None):
+        logits, cache, _ = model.forward_serve(
+            params, {"tokens": toks}, cache, jnp.asarray(offs, jnp.int32),
+            seq_lens=seq_lens, pages=pages, decode_rows=decode_rows)
+        tok = sample_logits_per_row(logits, _row_keys(base_key, rids, gens),
+                                    temperature, top_k, top_p)
+        return cache, tok
+
+    return jax.jit(step, donate_argnums=(2,))
+
+
+def plan_prefill_chunk(start: int, prompt_len: int, budget: int,
+                       page_size: int = 0) -> int:
+    """The end of the next admission-prefill chunk for a prompt at progress
+    `start`: at most `budget` tokens, never past `prompt_len`, and — in
+    paged mode — cut back to a page boundary whenever the chunk does not
+    finish the prompt and a boundary past `start` is in reach (so decode
+    and later chunks never write into a page a previous chunk left half
+    validated mid-step).  Always advances (>= start + 1).  The final chunk
+    ends exactly at `prompt_len`, which is what makes chunked admission
+    compute every prompt token exactly once."""
+    if not 0 <= start < prompt_len:
+        raise ValueError(f"start {start} outside [0, {prompt_len})")
+    if budget < 1:
+        raise ValueError(f"prefill chunk budget must be >= 1, got {budget}")
+    end = min(prompt_len, start + budget)
+    if page_size and end < prompt_len:
+        aligned = (end // page_size) * page_size
+        if aligned > start:
+            end = aligned
+    return end
 
 
 DEFER = object()
@@ -329,6 +428,44 @@ class Scheduler:
     identical requests hit even after the original slot is gone.  Directory
     entries are LRU-evicted under pool pressure (and down to
     `prefix_cache_pages` distinct pages when that cap is set).
+
+    **Mixed steps** (`mixed_steps=True`): admission no longer dispatches a
+    monolithic prompt prefill.  An admitted request's slot enters a
+    PREFILLING state (pages/prefix mapping/copy-on-write exactly as
+    before), and while any slot is prefilling each scheduler step advances
+    BOTH row classes: every decoding slot keeps decoding and the
+    prefilling slots consume the next `plan_prefill_chunk` chunks of their
+    prompts — `prefill_chunk_budget` prefill tokens per step, shared FCFS
+    in admission order — so time between tokens is bounded by the chunk
+    budget, never by another request's prompt length.
+
+    The step's dispatch shape is `mixed_dispatch`:
+
+      * ``"fused"`` (default) — ONE (B, L) mixed rectangle: decode rows
+        contribute 1 token at column 0 and route through the very split-K
+        launch an unchunked decode step uses, prefill rows through the
+        ragged-Q prefill launch, inside the same program
+        (`blocks._mixed_attend`; idle rows cost zero KV iterations via the
+        q_len early-out).  One device dispatch per step — best when
+        per-dispatch overhead is comparable to compute (small models, the
+        CPU bench) and the only fused option for the dense slot cache
+        (donated whole, so rows can't be sub-batched).
+      * ``"paired"`` (paged mode only) — a chunk wave carrying ONLY the
+        prefilling slots (any subset of page-table rows can dispatch
+        against the shared pool) back-to-back with the regular decode
+        chunk-scan.  The decode lane never pays the chunk rows' width
+        through the row-batched linears/FFN — best when compute dominates
+        dispatch overhead (large models on real hardware).
+
+    A slot whose chunk completes its prompt samples its first token from
+    that same dispatch; prefix-directory registration happens at
+    completion (queued requests wanting a prefix still in flight wait,
+    exactly like the unchunked DEFER).  Steps with no prefill in flight
+    are plain decode chunk-scans — steady-state throughput is unchanged.
+    Per-request outputs (and the quantized cache bytes behind them) are
+    bit-identical to `mixed_steps=False`: chunked prefill writes the same
+    per-token quantized KV, every row runs its unchunked kernel dispatch,
+    and sampling keys are per-(request, token index).
     """
 
     def __init__(self, model: Model, params, *, max_batch_slots: int = 8,
@@ -338,7 +475,9 @@ class Scheduler:
                  decode_chunk: int = 8, rng: Optional[jax.Array] = None,
                  prefill_bucket: int = 16,
                  page_size: int = 0, num_pages: int = 0,
-                 prefix_sharing: bool = False, prefix_cache_pages: int = 0):
+                 prefix_sharing: bool = False, prefix_cache_pages: int = 0,
+                 mixed_steps: bool = False, prefill_chunk_budget: int = 0,
+                 mixed_dispatch: str = "fused"):
         if not scheduler_supported(model.cfg):
             raise NotImplementedError(
                 f"arch {model.cfg.name!r} is not supported by the slot "
@@ -356,6 +495,27 @@ class Scheduler:
         self.prefill_bucket = int(prefill_bucket)
         self.key = jax.random.PRNGKey(0) if rng is None else rng
 
+        self.mixed_steps = bool(mixed_steps)
+        self.prefill_chunk_budget = int(prefill_chunk_budget) or 32
+        if self.mixed_steps and self.prefill_chunk_budget < 1:
+            raise ValueError("prefill_chunk_budget must be >= 1")
+        if mixed_dispatch not in ("fused", "paired"):
+            raise ValueError(f"unknown mixed_dispatch {mixed_dispatch!r}")
+        if mixed_dispatch == "paired" and not int(page_size) > 0:
+            raise ValueError("mixed_dispatch='paired' requires page_size > 0 "
+                             "(only page-table rows can be sub-batched)")
+        self.mixed_dispatch = mixed_dispatch
+        # admission stamps order chunk scheduling (FCFS) and break eviction
+        # ties; maintained in both dense and paged modes
+        self._admit_seq = np.zeros(self.B, np.int64)
+        self._admit_counter = 0
+        # mixed-step prefilling state: a slot mid-chunked-prefill holds its
+        # full pending token list; `lengths` doubles as its progress cursor
+        self.prefilling = np.zeros(self.B, bool)
+        self._pend: List[Optional[List[int]]] = [None] * self.B
+        # slot -> prefix keys it will register at completion (mixed mode):
+        # queued requests wanting any of them DEFER until then
+        self._inflight_keys: Dict[int, set] = {}
         self.paged = int(page_size) > 0
         if self.paged:
             self.page_size = int(page_size)
@@ -371,8 +531,6 @@ class Scheduler:
             self.free_pages: List[int] = list(range(1, self.num_pages))
             self.page_table = np.full((self.B, self.max_pages), -1, np.int32)
             self.peak_pages_in_use = 0
-            self._admit_seq = np.zeros(self.B, np.int64)
-            self._admit_counter = 0
             self.n_evictions = 0
             # per-page refcount: holders are slot table rows + directory
             # entries; only pages that drop to 0 return to the free list
@@ -613,8 +771,10 @@ class Scheduler:
 
     def _evict(self, slot: int):
         """Free a starved slot and re-queue its request as a continuation:
-        prompt + tokens generated so far, with the remaining budget — under
-        greedy decoding the re-prefill resumes the identical stream.  Pages
+        prompt + tokens generated so far, with the remaining budget — the
+        re-prefill resumes the identical stream (greedy trivially; sampled
+        too, because sampling keys are per-(request, token index), not a
+        serially split stream).  Pages
         other holders (slots sharing the prefix, directory entries) still
         reference merely lose this slot's refcount; they are NOT freed."""
         r = self.slot_req[slot]
@@ -622,6 +782,9 @@ class Scheduler:
         self.active[slot] = False
         self.lengths[slot] = 0
         self.cur_tok[slot] = -1
+        self.prefilling[slot] = False
+        self._pend[slot] = None
+        self._inflight_keys.pop(slot, None)
         self._free_slot_pages(slot)
         self.n_evictions += 1
         if r is not None:
@@ -634,6 +797,9 @@ class Scheduler:
         self.slot_req[slot] = None
         self.active[slot] = False
         self.lengths[slot] = 0
+        self.prefilling[slot] = False
+        self._pend[slot] = None
+        self._inflight_keys.pop(slot, None)
         if self.paged:
             if self.prefix_sharing and r is not None:
                 # retire -> keep: publish the full prompt's pages (incl.
@@ -692,19 +858,26 @@ class Scheduler:
         # flight is about to publish); its prefill registers them host-side
         # immediately, so a follow-up wave in the SAME scheduling round can
         # map them — admission only yields to decode when the queue is
-        # drained, slot/page-blocked, or genuinely empty
+        # drained, slot/page-blocked, or genuinely empty.  In mixed mode a
+        # deferral instead waits for the matching slot's CHUNKED prefill to
+        # complete (steps away), so no follow-up wave runs.
         while self._admit_wave(emitted):
             pass
 
     def _admit_wave(self, emitted: Dict[int, List[int]]) -> bool:
-        """One admission wave (one prefill dispatch).  Returns True when a
-        follow-up wave should run right away (progress was made AND the
-        wave ended on a prefix deferral, not on lack of slots/pages)."""
+        """One admission wave: one prefill dispatch (classic), or slot
+        placement into the PREFILLING state (mixed steps — the chunk
+        dispatches follow in `_mixed_step`).  Returns True when a follow-up
+        wave should run right away (progress was made AND the wave ended on
+        a prefix deferral this round can still resolve)."""
         free = [i for i in range(self.B) if self.slot_req[i] is None]
         wave: List[Tuple[int, Request]] = []
         offs: List[int] = []
         cow_pairs: List[Tuple[int, int]] = []
-        pending_keys: set = set()
+        # prefixes a mid-prefill slot will publish at completion are pending
+        # for every admission until then (mixed mode; empty otherwise)
+        pending_keys: set = set().union(*self._inflight_keys.values()) \
+            if self._inflight_keys else set()
         deferred = False
         while free and self.queue:
             if self.paged:
@@ -726,6 +899,32 @@ class Scheduler:
             wave.append((free.pop(0), self.queue.popleft()))
         if not wave:
             return False
+        if self.mixed_steps:
+            # no prefill dispatch: the slots enter the PREFILLING state with
+            # their pages/prefix mapping/CoW already in place, and
+            # `_mixed_step` feeds their chunks interleaved with decode.
+            # CoW copies still land NOW — before any chunk reads the
+            # privatized pages.
+            if self.paged:
+                self._apply_copies(cow_pairs)
+                self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                             self.pages_in_use())
+            for (s, r), off in zip(wave, offs):
+                pend = r.prompt + r.tokens
+                self.slot_req[s] = r
+                self.prefilling[s] = True
+                self._pend[s] = pend
+                self.lengths[s] = off        # prefix-hit KV is already valid
+                self.cur_tok[s] = -1
+                self.active[s] = False
+                self._admit_counter += 1
+                self._admit_seq[s] = self._admit_counter
+                if self.paged and self.prefix_sharing:
+                    self._inflight_keys[s] = {
+                        k for k, _, _ in self._registration_keys(pend, True)}
+            # a deferral cannot resolve until an in-flight prefill
+            # completes (steps, not waves, away) — never loop here
+            return False
         n = len(wave)
         prompts = [r.prompt + r.tokens for _, r in wave]
         full_lens = np.array([len(p) for p in prompts], np.int32)
@@ -739,8 +938,9 @@ class Scheduler:
         for i, p in enumerate(tails):
             toks[i, : len(p)] = p
         slots = np.array([s for s, _ in wave], np.int32)
+        rids = np.array([r.rid for _, r in wave], np.int32)
+        gens = np.array([len(r.tokens) for _, r in wave], np.int32)
         self.prefill_tokens_computed += int(lens.sum())
-        self.key, sub = jax.random.split(self.key)
         if self.paged:
             # CoW copies land before the prefill that reads the private
             # pages; sample the peak while the wave's prompt pages are
@@ -754,7 +954,8 @@ class Scheduler:
             self.cache, tok0 = fn(self.params, jnp.asarray(toks),
                                   jnp.asarray(lens), self.cache,
                                   jnp.asarray(self.page_table[slots]),
-                                  jnp.asarray(offs_a), sub)
+                                  jnp.asarray(offs_a), jnp.asarray(rids),
+                                  jnp.asarray(gens), self.key)
             if self.prefix_sharing:
                 # the wave's prompt KV is now fully valid: publish every
                 # page-aligned prefix (the exact-prompt entry waits for
@@ -767,7 +968,8 @@ class Scheduler:
                                         self.top_p)
             self.cache, tok0 = fn(self.params, jnp.asarray(toks),
                                   jnp.asarray(lens), self.cache,
-                                  jnp.asarray(slots), sub)
+                                  jnp.asarray(slots), jnp.asarray(rids),
+                                  jnp.asarray(gens), self.key)
         tok0 = np.asarray(tok0)
         for i, (s, r) in enumerate(wave):
             t0 = int(tok0[i])
@@ -778,9 +980,8 @@ class Scheduler:
             self.lengths[s] = full_lens[i]
             self.cur_tok[s] = t0
             self.remaining[s] = budget_left - 1
-            if self.paged:
-                self._admit_counter += 1
-                self._admit_seq[s] = self._admit_counter
+            self._admit_counter += 1
+            self._admit_seq[s] = self._admit_counter
             # capacity counts as done: an eviction continuation re-admitted
             # at exactly max_len tokens just produced its final in-capacity
             # token — decoding further would write past the buffer/table
@@ -792,54 +993,73 @@ class Scheduler:
                 self.active[s] = True
         return deferred
 
+    def _plan_decode_run(self, ahead: int) -> np.ndarray:
+        """The set of active slots that can append `ahead` more tokens this
+        step (paged mode: lazy allocation to cover them — capped at max_len,
+        the capacity retirement bound — plus copy-on-write for any still-
+        shared page the write range touches; normally none — decode writes
+        start past a slot's registered prefix pages, this is the safety net
+        for exact-prompt hits).  Starved slots stall (excluded from the
+        returned mask, state untouched); if NOTHING can run the youngest
+        active slot is evicted until something can.  Dense mode: every
+        active slot runs."""
+        run = self.active.copy()
+        if not self.paged:
+            return run
+        cow_pairs: List[Tuple[int, int]] = []
+        while True:
+            run = self.active.copy()
+            for b in np.flatnonzero(self.active):
+                upto = min(int(self.lengths[b]) + ahead, self.max_len)
+                if not (self._alloc_slot(int(b), upto)
+                        and self._cow_range(int(b), int(self.lengths[b]),
+                                            upto, cow_pairs)):
+                    run[b] = False
+            if run.any() or not self.active.any():
+                break
+            self._evict(self._eviction_victim())
+            # pruning: copies whose fresh destination the eviction just
+            # freed must not fire (the page may be re-allocated above)
+            cow_pairs[:] = [pr for pr in cow_pairs
+                            if self.page_ref[pr[1]] > 0]
+        self._apply_copies(cow_pairs)
+        self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                     self.pages_in_use())
+        return run
+
+    def _slot_rids_gens(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(rids, gens) per slot for `_row_keys` (0s for empty slots —
+        their samples are discarded)."""
+        rids = np.zeros(self.B, np.int32)
+        gens = np.zeros(self.B, np.int32)
+        for b, r in enumerate(self.slot_req):
+            if r is not None:
+                rids[b] = r.rid
+                gens[b] = len(r.tokens)
+        return rids, gens
+
     def _decode(self, emitted: Dict[int, List[int]]):
         if not self.active.any():
             return
-        run = self.active.copy()
-        if self.paged:
-            # lazy allocation: extend every active slot's table to cover the
-            # next chunk (capped at max_len — the capacity retirement bound)
-            # and privatize any still-shared page the chunk will write
-            # (normally none: decode writes start past a slot's registered
-            # prefix pages — this is the safety net for exact-prompt hits);
-            # starved slots stall for this chunk, and if NOTHING can run the
-            # youngest slot is evicted until something can
-            cow_pairs: List[Tuple[int, int]] = []
-            while True:
-                run = self.active.copy()
-                for b in np.flatnonzero(self.active):
-                    upto = min(int(self.lengths[b]) + self.decode_chunk,
-                               self.max_len)
-                    if not (self._alloc_slot(int(b), upto)
-                            and self._cow_range(int(b), int(self.lengths[b]),
-                                                upto, cow_pairs)):
-                        run[b] = False
-                if run.any() or not self.active.any():
-                    break
-                self._evict(self._eviction_victim())
-                # pruning: copies whose fresh destination the eviction just
-                # freed must not fire (the page may be re-allocated above)
-                cow_pairs[:] = [pr for pr in cow_pairs
-                                if self.page_ref[pr[1]] > 0]
-            self._apply_copies(cow_pairs)
-            self.peak_pages_in_use = max(self.peak_pages_in_use,
-                                         self.pages_in_use())
-            if not run.any():
-                return
+        run = self._plan_decode_run(self.decode_chunk)
+        if not run.any():
+            return
         fn = make_ragged_decode_fn(self.model, self.decode_chunk,
                                    self.temperature, self.top_k,
                                    self.eos_id, self.max_len, self.top_p)
         # stalled rows advertise length 0 for the whole chunk (writes are
         # trash-routed, attention runs zero KV partitions — genuinely free,
         # not just discarded) and have ALL their state restored host-side
+        rids, gens = self._slot_rids_gens()
         args = (self.params, jnp.asarray(self.cur_tok), self.cache,
                 jnp.asarray(self.lengths * run), jnp.asarray(run),
-                jnp.asarray(self.remaining), self.key)
+                jnp.asarray(self.remaining), jnp.asarray(rids),
+                jnp.asarray(gens), self.key)
         if self.paged:
             out = fn(*args, jnp.asarray(self.page_table))
         else:
             out = fn(*args)
-        tok, self.cache, lengths, active, remaining, self.key, toks, em = out
+        tok, self.cache, lengths, active, remaining, toks, em = out
         stalled = self.active & ~run
         self.cur_tok = np.where(run, np.array(tok), self.cur_tok)
         self.lengths = np.where(run, np.array(lengths), self.lengths)
@@ -856,15 +1076,180 @@ class Scheduler:
                 r.tokens.extend(int(t) for t in step_toks)
                 emitted.setdefault(r.rid, []).extend(
                     int(t) for t in step_toks)
-            if not self.active[b]:
+            if not self.active[b] and not self.prefilling[b]:
+                # occupied, not decoding, not mid-chunked-prefill: the scan
+                # just finished it (prefilling slots are not in the scan —
+                # they retire through _finish_prefill's bookkeeping instead)
                 self._retire(b)
 
+    # -- mixed prefill+decode steps -----------------------------------------
+    def _finish_prefill(self, slot: int, tok0: int,
+                        emitted: Dict[int, List[int]]):
+        """A chunk just completed `slot`'s prompt: publish its prefixes,
+        record its first sampled token, and either retire it or promote it
+        into the decode pool — the mixed-mode twin of the unchunked
+        admission post-wave bookkeeping."""
+        r = self.slot_req[slot]
+        pend = self._pend[slot]
+        self.prefilling[slot] = False
+        self._pend[slot] = None
+        if self.paged and self.prefix_sharing:
+            self._inflight_keys.pop(slot, None)
+            # the prompt KV is now fully valid: page-aligned prefixes go
+            # live (the exact-prompt entry still waits for retirement)
+            self._register_prefixes(slot, pend, exact=False)
+        budget_left = r.max_new_tokens - len(r.tokens)
+        r.tokens.append(tok0)
+        emitted.setdefault(r.rid, []).append(tok0)
+        self.lengths[slot] = len(pend)
+        self.cur_tok[slot] = tok0
+        self.remaining[slot] = budget_left - 1
+        done = ((self.eos_id is not None and tok0 == self.eos_id)
+                or budget_left <= 1 or len(pend) >= self.max_len)
+        if done:
+            self._retire(slot)
+        else:
+            self.active[slot] = True
+
+    def _post_decode_token(self, slot: int, tok: int,
+                           emitted: Dict[int, List[int]]):
+        """Host-side retirement bookkeeping for ONE decode token emitted by
+        a mixed step — the same conditions the fused chunk-scan applies
+        in-scan (EOS / budget exhausted / cache capacity)."""
+        r = self.slot_req[slot]
+        r.tokens.append(tok)
+        emitted.setdefault(r.rid, []).append(tok)
+        self.remaining[slot] -= 1
+        new_len = int(self.lengths[slot]) + 1
+        done = ((self.eos_id is not None and tok == self.eos_id)
+                or self.remaining[slot] <= 0 or new_len >= self.max_len)
+        if done:
+            self._retire(slot)
+        else:
+            self.lengths[slot] = new_len
+            self.cur_tok[slot] = tok
+
+    def _plan_chunks(self) -> List[Tuple[int, int, int]]:
+        """This step's prefill chunks as (slot, start, end): the per-step
+        `prefill_chunk_budget` handed out FCFS in admission order, each
+        chunk cut by `plan_prefill_chunk` (page-aligned interior
+        boundaries)."""
+        budget = self.prefill_chunk_budget
+        chunks: List[Tuple[int, int, int]] = []
+        for b in sorted(np.flatnonzero(self.prefilling),
+                        key=lambda b: self._admit_seq[b]):
+            if budget <= 0:
+                break
+            start = int(self.lengths[b])
+            end = plan_prefill_chunk(start, len(self._pend[b]), budget,
+                                     self.page_size if self.paged else 0)
+            chunks.append((int(b), start, end))
+            budget -= end - start
+        return chunks
+
+    def _chunk_prefill_wave(self, emitted: Dict[int, List[int]]):
+        """Paged mixed step, prefill half: ONLY the prefilling slots ride
+        this dispatch (the pool has no batch axis — any subset of page-table
+        rows can), so the decode lane never pays their chunk width.  The
+        device program is the SAME `make_paged_prefill_fn` an unchunked
+        admission wave runs, at per-row chunk offsets — which is why chunked
+        bytes and tokens are bit-identical to unchunked admission."""
+        chunks = self._plan_chunks()
+        if not chunks:
+            return
+        n = len(chunks)
+        L = self._bucket(max(e - s for _, s, e in chunks))
+        toks = np.zeros((n, L), np.int32)
+        for i, (b, s, e) in enumerate(chunks):
+            toks[i, : e - s] = self._pend[b][s:e]
+        slots = np.array([b for b, _, _ in chunks], np.int32)
+        offs = np.array([s for _, s, _ in chunks], np.int32)
+        lens = np.array([e - s for _, s, e in chunks], np.int32)
+        rids = np.array([self.slot_req[b].rid for b, _, _ in chunks],
+                        np.int32)
+        gens = np.array([len(self.slot_req[b].tokens)
+                         for b, _, _ in chunks], np.int32)
+        self.prefill_tokens_computed += int(lens.sum())
+        fn = make_paged_prefill_fn(self.model, n, L, self.temperature,
+                                   self.top_k, self.top_p)
+        self.cache, tok0 = fn(self.params, jnp.asarray(toks),
+                              jnp.asarray(lens), self.cache,
+                              jnp.asarray(self.page_table[slots]),
+                              jnp.asarray(offs), jnp.asarray(rids),
+                              jnp.asarray(gens), self.key)
+        tok0 = np.asarray(tok0)
+        for i, (b, s, e) in enumerate(chunks):
+            self.lengths[b] = e
+            if e == len(self._pend[b]):
+                self._finish_prefill(b, int(tok0[i]), emitted)
+
+    def _mixed_step_fused(self, emitted: Dict[int, List[int]]):
+        """Fused mixed step: ONE (B, L) dispatch — every decoding slot that
+        can extend contributes 1 token at column 0, prefilling slots their
+        chunk, idle rows nothing.  Attention routes the two row classes
+        through their unchunked kernels inside the one program
+        (`blocks._mixed_attend` + the ragged-Q q_len early-outs)."""
+        run = self._plan_decode_run(1)
+        chunks = self._plan_chunks()
+        if not chunks and not run.any():
+            return
+        L = self._bucket(max([e - s for _, s, e in chunks] + [1]))
+        toks = np.zeros((self.B, L), np.int32)
+        offs = np.zeros(self.B, np.int32)
+        seq = np.zeros(self.B, np.int32)
+        dec = np.zeros(self.B, bool)
+        for b, s, e in chunks:
+            toks[b, : e - s] = self._pend[b][s:e]
+            offs[b] = s
+            seq[b] = e - s
+        for b in np.flatnonzero(run):
+            toks[b, 0] = self.cur_tok[b]
+            offs[b] = self.lengths[b]
+            seq[b] = 1
+            dec[b] = True
+        self.prefill_tokens_computed += sum(e - s for _, s, e in chunks)
+        rids, gens = self._slot_rids_gens()
+        fn = make_mixed_step_fn(self.model, self.B, L, self.temperature,
+                                self.top_k, self.top_p)
+        args = (self.params, jnp.asarray(toks), self.cache,
+                jnp.asarray(offs), jnp.asarray(seq), jnp.asarray(dec),
+                jnp.asarray(rids), jnp.asarray(gens), self.key)
+        if self.paged:
+            self.cache, tok = fn(*args, jnp.asarray(self.page_table))
+        else:
+            self.cache, tok = fn(*args)
+        tok = np.asarray(tok)
+        for b, s, e in chunks:
+            self.lengths[b] = e
+            if e == len(self._pend[b]):
+                self._finish_prefill(b, int(tok[b]), emitted)
+        for b in np.flatnonzero(dec):
+            self._post_decode_token(b, int(tok[b]), emitted)
+
+    def _mixed_step(self, emitted: Dict[int, List[int]]):
+        """One mixed scheduler step — no slot ever waits for another slot's
+        prompt.  `mixed_dispatch="fused"` (default) advances both row
+        classes in ONE (B, L) device program; `"paired"` (paged mode only)
+        instead runs a prefilling-slots-only chunk wave back-to-back with
+        the regular decode chunk-scan — see the class docstring for the
+        trade-off."""
+        if self.mixed_dispatch == "paired":
+            self._chunk_prefill_wave(emitted)
+            self._decode(emitted)
+        else:
+            self._mixed_step_fused(emitted)
+
     def step(self) -> Dict[int, List[int]]:
-        """One scheduling round: admit -> fused decode chunk -> retire.
-        Returns the tokens generated this round, keyed by request id."""
+        """One scheduling round: admit, then either one mixed
+        prefill+decode dispatch (mixed mode with a prefill in flight) or
+        one fused decode chunk-scan; retire as slots finish.  Returns the
+        tokens generated this round, keyed by request id."""
         emitted: Dict[int, List[int]] = {}
         self._admit(emitted)
-        self._decode(emitted)
+        if self.mixed_steps and self.prefilling.any():
+            self._mixed_step(emitted)
+        else:
+            self._decode(emitted)
         if self.paged:
             self.peak_pages_in_use = max(self.peak_pages_in_use,
                                          self.pages_in_use())
@@ -896,7 +1281,10 @@ def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
              max_batch_slots: Optional[int] = None,
              page_size: int = 0, num_pages: int = 0,
              prefix_sharing: bool = False,
-             prefix_cache_pages: int = 0) -> jax.Array:
+             prefix_cache_pages: int = 0,
+             mixed_steps: bool = False,
+             prefill_chunk_budget: int = 0,
+             mixed_dispatch: str = "fused") -> jax.Array:
     """Batched generation. Returns (B, max_new_tokens) generated ids.
 
     Default: equal-length prefill + scan-fused decode (the paper's token
@@ -905,9 +1293,12 @@ def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
     retirement over `max_batch_slots` KV slots (default: the batch size);
     rows that finish early are padded with `eos_id` (or 0).  `page_size > 0`
     additionally switches the scheduler's KV storage to the paged pool
-    (`num_pages` pages; 0 = match the dense slot footprint), and
+    (`num_pages` pages; 0 = match the dense slot footprint),
     `prefix_sharing=True` layers refcounted prefix sharing + copy-on-write
-    on top (`prefix_cache_pages` caps the retained prefix directory).
+    on top (`prefix_cache_pages` caps the retained prefix directory), and
+    `mixed_steps=True` chunks admission prefill into mixed prefill+decode
+    steps of at most `prefill_chunk_budget` prompt tokens (bit-identical
+    outputs; bounded time between tokens).
 
     temperature=0 reproduces greedy decoding exactly; temperature>0 samples
     (optionally top_k- and/or nucleus-top_p-truncated) with `rng`
@@ -923,7 +1314,10 @@ def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
                           decode_chunk=decode_chunk, rng=rng,
                           page_size=page_size, num_pages=num_pages,
                           prefix_sharing=prefix_sharing,
-                          prefix_cache_pages=prefix_cache_pages)
+                          prefix_cache_pages=prefix_cache_pages,
+                          mixed_steps=mixed_steps,
+                          prefill_chunk_budget=prefill_chunk_budget,
+                          mixed_dispatch=mixed_dispatch)
         tokens = np.asarray(prompt_batch["tokens"])
         rids = [sched.submit(tokens[b].tolist(), max_new_tokens)
                 for b in range(B)]
