@@ -57,9 +57,25 @@ through the paged scheduler at equal pool size two ways:
     page-aligned chunk (<= --prefill-chunk-budget tokens), so TBT stays
     bounded by the chunk budget.  Greedy outputs are bit-identical.
 
-Writes BENCH_serving.json (legs 2/3/4 under #longtail / #prefix / #mixed;
-floors are re-checked by scripts/check_bench.py in CI).  `--smoke` shrinks
-the traces.
+Leg 5 (overload trace): a burst of equal long-context requests over a page
+pool that holds only two of them, so residents continuously evict each
+other and every continuation thrashes out and back in, served two ways:
+
+  * recompute only — an evicted continuation is re-admitted by
+    re-prefilling its prompt plus everything generated so far (O(L^2)
+    attention FLOPs per eviction, paid on every thrash cycle).
+  * hierarchical spill — eviction copies the slot's private pages
+    device->host into a victim pool and re-admission restores them
+    bit-identically (a gather/scatter dispatch, no forward pass).
+
+An untimed admission-control probe reruns the trace with a bounded queue
+and a ttl: one extra submit must be rejected with backpressure, a queued
+continuation must shed as a deadline miss, and every stream that IS served
+to completion must match the unconstrained run.
+
+Writes BENCH_serving.json (legs 2/3/4/5 under #longtail / #prefix /
+#mixed / #overload; floors are re-checked by scripts/check_bench.py in
+CI).  `--smoke` shrinks the traces.
 """
 from __future__ import annotations
 
@@ -136,7 +152,8 @@ def _tbt_stats(stamps):
 def _serve_ragged(model, params, trace, slots, max_len, chunk,
                   page_size=0, num_pages=0, prefix_sharing=False,
                   prefix_cache_pages=0, mixed_steps=False,
-                  prefill_chunk_budget=0, mixed_dispatch="fused"):
+                  prefill_chunk_budget=0, mixed_dispatch="fused",
+                  victim_pool_pages=0, max_queue=0, ttl_steps=None):
     sched = serve_lib.Scheduler(model, params, max_batch_slots=slots,
                                 max_len=max_len, decode_chunk=chunk,
                                 page_size=page_size, num_pages=num_pages,
@@ -144,8 +161,15 @@ def _serve_ragged(model, params, trace, slots, max_len, chunk,
                                 prefix_cache_pages=prefix_cache_pages,
                                 mixed_steps=mixed_steps,
                                 prefill_chunk_budget=prefill_chunk_budget,
-                                mixed_dispatch=mixed_dispatch)
-    rids = [sched.submit(p, t) for p, t in trace]
+                                mixed_dispatch=mixed_dispatch,
+                                victim_pool_pages=victim_pool_pages,
+                                max_queue=max_queue)
+    rids = []
+    for p, t in trace:
+        try:
+            rids.append(sched.submit(p, t, ttl_steps=ttl_steps))
+        except serve_lib.Overloaded:
+            rids.append(None)
     stamps = {}
 
     def on_tokens(rid, toks):
@@ -153,8 +177,10 @@ def _serve_ragged(model, params, trace, slots, max_len, chunk,
         stamps.setdefault(rid, []).extend([now] * len(toks))
 
     results = sched.run(on_tokens=on_tokens)
-    return (sum(len(results[r]) for r in rids), sched,
-            [results[r] for r in rids], _tbt_stats(stamps))
+    # rejected submits (rid None) and requests shed before their first
+    # token have no results entry — they served zero tokens
+    return (sum(len(results.get(r, [])) for r in rids), sched,
+            [results.get(r, []) for r in rids], _tbt_stats(stamps))
 
 
 def _make_longtail_trace(rng: np.random.RandomState, n_short, n_long,
@@ -183,6 +209,16 @@ def _make_stall_trace(n_victims, victim_budget, n_pairs, short_len, long_len,
         trace.append((base[q, :short_len].tolist(), int(quick_budget)))
         trace.append((base[q + 1, :long_len].tolist(), int(long_budget)))
     return trace
+
+
+def _make_overload_trace(n_req, prompt_len, budget, vocab):
+    """`n_req` equal long-context requests over a pool that holds barely
+    two of them: whichever resident is youngest gets evicted every time a
+    neighbour needs a page, so every continuation thrashes out and back —
+    the hierarchical-spill worst case (and the recompute-fallback one)."""
+    base = _base_tokens(19, n_req, prompt_len, vocab)
+    return [(base[i, :prompt_len].tolist(), int(budget))
+            for i in range(n_req)]
 
 
 def _make_prefix_trace(rng: np.random.RandomState, n_req, prefix_len,
@@ -462,6 +498,108 @@ def run(smoke: bool = False):
     print(f"p95 TBT improvement: {tbt_gain:6.2f}x  "
           f"tokens/sec ratio: {tps_ratio:5.3f}")
 
+    # ---- leg 5: overload trace — hierarchical page spill vs recompute ----
+    # a burst of equal long-context requests over a pool that holds only
+    # two of them: the pool is permanently full, so every page a resident
+    # needs evicts the youngest other resident, and the evicted
+    # continuation immediately thrashes back in.  Two ways to bring it
+    # back, same scheduler, same pool, greedy outputs bit-identical:
+    #   * recompute (victim pool off) — re-admission re-prefills the
+    #     prompt plus everything generated so far: O(L^2) attention FLOPs
+    #     per eviction, paid again on every thrash cycle.
+    #   * hierarchical spill — eviction copies the slot's private pages
+    #     device->host into the victim pool and re-admission restores
+    #     them: a page-table rebuild plus one gather/scatter dispatch,
+    #     no forward pass.
+    # Sizing note: the spill win scales with the recomputed prefill's
+    # compute, so the prompts are LONG (the O(L^2) term has to dominate
+    # this box's flat ~40ms dispatch floor — at short prompt lengths
+    # recompute and restore cost the same dispatch and the ratio pins to
+    # ~1.1x no matter the eviction rate).  Timed best-of-3 per side like
+    # leg 4.  An untimed probe then reruns the trace with a bounded queue
+    # (one extra submit must bounce with Overloaded) and a ttl (a queued
+    # continuation must shed as a deadline miss) and checks admission
+    # control never corrupts the streams it does serve.
+    if smoke:
+        (ov_req, ov_prompt, ov_budget, ov_slots, ov_ps, ov_max_len,
+         ov_pool, ov_victim, ov_ttl) = (3, 256, 24, 2, 16, 320, 34, 64, 4)
+    else:
+        (ov_req, ov_prompt, ov_budget, ov_slots, ov_ps, ov_max_len,
+         ov_pool, ov_victim, ov_ttl) = (4, 1024, 64, 2, 32, 1152, 66, 160, 8)
+    ov_trace = _make_overload_trace(ov_req, ov_prompt, ov_budget,
+                                    cfg.vocab_size)
+    ov_useful = sum(t for _, t in ov_trace)
+    print(f"\noverload trace: {ov_req} requests x {ov_prompt}-token prompt, "
+          f"budget {ov_budget}; {ov_slots} slots, {ov_pool} pages of "
+          f"{ov_ps}, victim pool {ov_victim} pages")
+
+    def ov_run(victim):
+        return _serve_ragged(model, params, ov_trace, ov_slots, ov_max_len,
+                             chunk, page_size=ov_ps, num_pages=ov_pool + 1,
+                             victim_pool_pages=victim)
+
+    ov_run(0)
+    ov_run(ov_victim)
+    reps = 3
+    dt_rc = dt_sp = float("inf")
+    tbt_rc = tbt_sp = None
+    for _ in range(reps):
+        t0 = time.time()
+        got_rc, rc_sched, res_rc, tbt = ov_run(0)
+        d = time.time() - t0
+        if d < dt_rc:
+            dt_rc, tbt_rc = d, tbt
+        t0 = time.time()
+        got_sp, sp_sched, res_sp, tbt = ov_run(ov_victim)
+        d = time.time() - t0
+        if d < dt_sp:
+            dt_sp, tbt_sp = d, tbt
+        assert got_rc == got_sp == ov_useful, (got_rc, got_sp, ov_useful)
+        assert res_rc == res_sp, "page spill changed greedy outputs"
+    tps_rc, tps_sp = ov_useful / dt_rc, ov_useful / dt_sp
+    ov_speedup = dt_rc / dt_sp
+    sp_stats = sp_sched.stats
+    print(f"recompute only : {dt_rc:6.2f}s  {tps_rc:8.1f} tok/s  "
+          f"{rc_sched.n_evictions} evictions (all re-prefilled)  "
+          f"(best of {reps})")
+    print(f"page spill     : {dt_sp:6.2f}s  {tps_sp:8.1f} tok/s  "
+          f"{sp_sched.n_evictions} evictions, {sp_stats['spills']} spills / "
+          f"{sp_stats['restores']} restores ({sp_stats['spilled_pages']} "
+          f"pages, {sp_stats['spill_bytes']} B), "
+          f"{sp_stats['recompute_fallbacks']} fallbacks  (best of {reps})")
+    print(f"spill speedup  : {ov_speedup:6.2f}x")
+
+    # untimed admission-control probe: same overload plus one extra submit
+    # against a queue bounded at ov_req (the burst itself fills it, so the
+    # extra submit must bounce with Overloaded) and a ttl measured from
+    # submit that the starved requests cannot survive — the queue waiters
+    # shed before a slot ever frees, and the first thrashed-out resident
+    # sheds from the requeue (exercising victim-record cleanup on a
+    # SPILLED continuation).  Backpressure and shedding change WHO gets
+    # served and how far, never the bytes of what was streamed: every
+    # result must be a bit-exact prefix of the unconstrained run.
+    ov_probe = ov_trace + [ov_trace[-1]]
+    _, pb_sched, res_pb, _ = _serve_ragged(
+        model, params, ov_probe, ov_slots, ov_max_len, chunk,
+        page_size=ov_ps, num_pages=ov_pool + 1,
+        victim_pool_pages=ov_victim, max_queue=ov_req, ttl_steps=ov_ttl)
+    pb_stats = pb_sched.stats
+    assert pb_stats["rejections"] == 1, pb_stats
+    assert res_pb[-1] == [], "rejected submit must serve zero tokens"
+    assert pb_stats["deadline_misses"] >= 1, pb_stats
+    assert pb_stats["victim_pool_pages_used"] == 0, pb_stats
+    pb_complete = sum(1 for r in res_pb if len(r) == ov_budget)
+    assert 1 <= pb_complete < len(ov_probe), pb_complete
+    for i, r in enumerate(res_pb[:ov_req]):
+        assert r == res_sp[i][: len(r)], (
+            f"admission control corrupted stream {i}")
+    print(f"admission probe: max_queue={ov_req} ttl={ov_ttl} -> "
+          f"{pb_stats['rejections']} rejected, "
+          f"{pb_stats['deadline_misses']} deadline misses, "
+          f"{pb_complete}/{len(ov_probe)} served to completion, queue depth "
+          f"p50/p95 {pb_stats['queue_depth_p50']:.0f}/"
+          f"{pb_stats['queue_depth_p95']:.0f}")
+
     # fixed-size probe (interpret mode, one decode step): per-slot kv_len
     # early-out vs the padded whole-batch scalar on a 512-token cache
     probe_lens, probe_max, blk = [16, 100, 250, 400, 512, 0], 512, 64
@@ -548,6 +686,36 @@ def run(smoke: bool = False):
             "p95_tbt_improvement": round(tbt_gain, 3),
             "prefill_tokens_computed": mx_sched.prefill_tokens_computed,
         },
+        "overload": {
+            "n_requests": ov_req, "prompt_len": ov_prompt,
+            "completion_budget": ov_budget,
+            "slots": ov_slots, "max_len": ov_max_len,
+            "page_size": ov_ps, "pool_pages": ov_pool,
+            "victim_pool_pages": ov_victim,
+            "useful_tokens": ov_useful,
+            "recompute_tokens_per_sec": round(tps_rc, 2),
+            "spill_tokens_per_sec": round(tps_sp, 2),
+            "spill_speedup": round(ov_speedup, 3),
+            "recompute_tbt": tbt_rc,
+            "spill_tbt": tbt_sp,
+            "recompute_evictions": rc_sched.n_evictions,
+            "spill_evictions": sp_sched.n_evictions,
+            "spills": sp_stats["spills"],
+            "restores": sp_stats["restores"],
+            "spilled_pages": sp_stats["spilled_pages"],
+            "spill_bytes": sp_stats["spill_bytes"],
+            "recompute_fallbacks": sp_stats["recompute_fallbacks"],
+            "recompute_prefill_tokens": rc_sched.prefill_tokens_computed,
+            "spill_prefill_tokens": sp_sched.prefill_tokens_computed,
+            "admission_probe": {
+                "max_queue": ov_req, "ttl_steps": ov_ttl,
+                "rejections": pb_stats["rejections"],
+                "deadline_misses": pb_stats["deadline_misses"],
+                "served_to_completion": pb_complete,
+                "queue_depth_p50": pb_stats["queue_depth_p50"],
+                "queue_depth_p95": pb_stats["queue_depth_p95"],
+            },
+        },
     }
     with open("BENCH_serving.json", "w") as f:
         json.dump(metrics, f, indent=2, sort_keys=True)
@@ -589,6 +757,17 @@ def run(smoke: bool = False):
     assert tps_ratio > mx_tps_margin, (
         f"mixed steps tokens/sec regressed: {tps_mx:.1f} <= "
         f"{mx_tps_margin} * {tps_st:.1f} tok/s")
+    # hierarchical spill must beat recompute-only eviction recovery on the
+    # overload trace (>= 1.2x in full mode per the ISSUE 7 acceptance bar;
+    # the smoke trace's short prompts sit near the dispatch floor — see the
+    # leg 5 sizing note — so its floor only guards against spill being
+    # slower than the recompute it replaces)
+    ov_margin = 0.9 if smoke else 1.2
+    assert ov_speedup > ov_margin, (
+        f"page spill too slow vs recompute evictions: {ov_speedup:.2f}x "
+        f"<= {ov_margin}x ({tps_sp:.1f} vs {tps_rc:.1f} tok/s)")
+    assert sp_stats["spills"] >= 1 and sp_stats["restores"] >= 1, sp_stats
+    assert rc_sched.n_evictions >= 1, rc_sched.n_evictions
     return metrics
 
 

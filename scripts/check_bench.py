@@ -28,6 +28,14 @@ FLOORS = [
     # regressions without flaking on wall-clock noise.
     ("mixed.p95_tbt_improvement", 1.7, 1.2),
     ("mixed.tokens_per_sec_ratio", 0.85, 0.75),
+    # hierarchical page spill vs recompute-only eviction recovery on the
+    # overload trace (PR 6): the full-mode floor is the ISSUE 7 acceptance
+    # bar (the recorded run has headroom — the spill win scales with the
+    # recomputed prefill's O(L^2) compute); the smoke trace's short
+    # prompts sit near the CPU box's flat dispatch floor (see the
+    # serving_bench leg 5 sizing note), so its floor only guards against
+    # spill being SLOWER than the recompute it replaces.
+    ("overload.spill_speedup", 1.2, 0.9),
 ]
 
 

@@ -201,6 +201,44 @@ def copy_pages(pool: PagedKVCache, src: jax.Array, dst: jax.Array,
     return PagedKVCache(*[cp(getattr(pool, f)) for f in pool._fields])
 
 
+def fetch_pages(pool: PagedKVCache, pages: jax.Array,
+                page_axis: int = 0) -> PagedKVCache:
+    """Gather whole physical pages out of the pool: result page i is a
+    bit-exact copy of pool page `pages[i]` (K, V and both scale planes).
+
+    This is the device half of hierarchical page SPILL: the host scheduler
+    picks a victim slot's private pages, fetches them in one gather, and
+    `jax.device_get`s the result into its host-memory victim pool — an
+    O(pages) copy of already-quantized int8 bytes, instead of the
+    O(prompt) recompute a plain eviction pays.  `page_axis` selects the
+    pool's page dimension (1 for layer-stacked leaves of shape
+    (R, P, page_size, ...)); entries may repeat (e.g. `TRASH_PAGE`
+    padding used to keep the jitted gather at power-of-two widths).
+    """
+    def take(leaf):
+        return jnp.take(leaf, pages, axis=page_axis)
+
+    return PagedKVCache(*[take(getattr(pool, f)) for f in pool._fields])
+
+
+def restore_pages(pool: PagedKVCache, pages: jax.Array, data: PagedKVCache,
+                  page_axis: int = 0) -> PagedKVCache:
+    """Scatter fetched pages back into the pool: pool page `pages[i]`
+    becomes a bit-exact copy of `data` page i — the inverse of
+    `fetch_pages`, used on re-admission of a spilled request.  The
+    destinations are freshly allocated physical pages (plus optional
+    `TRASH_PAGE` padding entries, whose writes land in the reserved sink),
+    so the restored slot's KV is bit-identical to the pre-eviction bytes
+    without recomputing a single prompt token.
+    """
+    def put(leaf, d):
+        idx = (slice(None),) * page_axis + (pages,)
+        return leaf.at[idx].set(d)
+
+    return PagedKVCache(*[put(getattr(pool, f), getattr(data, f))
+                          for f in pool._fields])
+
+
 def quantize_kv(k: jax.Array, v: jax.Array, cfg: PIMConfig):
     """Quantize-on-write (per token, per kv head)."""
     k_scale = quant.symmetric_max_scale(k, cfg.input_bits, axis=-1)

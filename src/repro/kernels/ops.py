@@ -103,6 +103,30 @@ def paged_copy_pages(pool: PagedKVCache, src: jax.Array,
     return copy_pages(pool, src, dst)
 
 
+@jax.jit
+def paged_fetch_pages(pool: PagedKVCache, pages: jax.Array) -> PagedKVCache:
+    """jit'd page fetch over a single pool: result page i is a bit-exact
+    copy of pool page `pages[i]` (K/V + both scale planes) — the device
+    half of spilling a victim slot's pages to host memory.  `pages` may
+    contain repeated `TRASH_PAGE` padding entries so callers can keep the
+    gather at power-of-two widths across recompiles."""
+    from repro.core.attention import fetch_pages
+    return fetch_pages(pool, pages)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def paged_restore_pages(pool: PagedKVCache, pages: jax.Array,
+                        data: PagedKVCache) -> PagedKVCache:
+    """jit'd inverse of `paged_fetch_pages` (pool donated): pool page
+    `pages[i]` := `data` page i.  Restoring spilled bytes into freshly
+    allocated pages is layout-safe for the kernel path for the same reason
+    `paged_copy_pages` is — `paged_kernel_layout` transposes at dispatch,
+    so whole-page writes in canonical storage keep the behavioral gather
+    view and the head-major kernel operands bit-identical."""
+    from repro.core.attention import restore_pages
+    return restore_pages(pool, pages, data)
+
+
 def pim_flash_attention(
     q: jax.Array,              # (B, Sq, H, Dh) float
     cache: KVCache,

@@ -15,6 +15,11 @@ across retirements up to --prefix-cache-pages); --mixed-steps chunks
 admission prefill into mixed prefill+decode steps (at most
 --prefill-chunk-budget prompt tokens per step) so a long prompt never
 stalls the decoding slots.  --top-p enables nucleus sampling on any path.
+--victim-pool-pages N gives the paged scheduler a host-memory spill pool
+(evictions move private KV pages device->host and restore them on
+re-admission instead of recomputing the prompt), and --deadline-ms /
+--max-queue bound the admission queue (stale queued requests are shed,
+over-depth submits rejected with backpressure).
 """
 from __future__ import annotations
 
@@ -91,6 +96,18 @@ def main(argv=None):
                          "chunk wave paired with the decode scan "
                          "('paired'; paged mode only — cheaper when "
                          "compute dominates dispatch overhead)")
+    ap.add_argument("--victim-pool-pages", type=int, default=0,
+                    help="host-memory victim pool (pages): evictions SPILL "
+                         "their private KV pages device->host and restore "
+                         "them on re-admission instead of recomputing the "
+                         "prompt (requires --page-size; 0 = recompute only)")
+    ap.add_argument("--deadline-ms", type=float, default=0,
+                    help="per-request deadline: queued requests older than "
+                         "this are shed as deadline misses (0 = none)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded admission queue: submits beyond this "
+                         "depth are rejected with backpressure (0 = "
+                         "unbounded)")
     args = ap.parse_args(argv)
     if args.page_size and not args.continuous_batching:
         ap.error("--page-size requires --continuous-batching")
@@ -106,6 +123,16 @@ def main(argv=None):
         ap.error("--prefill-chunk-budget requires --mixed-steps")
     if args.mixed_dispatch == "paired" and not args.page_size:
         ap.error("--mixed-dispatch paired requires --page-size")
+    if args.victim_pool_pages and not args.page_size:
+        ap.error("--victim-pool-pages requires --page-size")
+    if args.victim_pool_pages < 0:
+        ap.error("--victim-pool-pages must be >= 0")
+    if args.deadline_ms < 0:
+        ap.error("--deadline-ms must be >= 0")
+    if args.max_queue < 0:
+        ap.error("--max-queue must be >= 0")
+    if (args.deadline_ms or args.max_queue) and not args.continuous_batching:
+        ap.error("--deadline-ms/--max-queue require --continuous-batching")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     import dataclasses
@@ -144,7 +171,10 @@ def main(argv=None):
         prefix_cache_pages=args.prefix_cache_pages,
         mixed_steps=args.mixed_steps,
         prefill_chunk_budget=args.prefill_chunk_budget,
-        mixed_dispatch=args.mixed_dispatch)
+        mixed_dispatch=args.mixed_dispatch,
+        victim_pool_pages=args.victim_pool_pages,
+        max_queue=args.max_queue,
+        deadline_ms=args.deadline_ms or None)
     jax.block_until_ready(out)
     dt = time.time() - t0
     if args.continuous_batching and eos is not None:
@@ -161,6 +191,8 @@ def main(argv=None):
         mode = f"scheduler/paged(ps={args.page_size})"
         if args.prefix_cache:
             mode += "+prefix-cache"
+        if args.victim_pool_pages:
+            mode += f"+spill({args.victim_pool_pages}p)"
     elif args.continuous_batching:
         mode = "scheduler"
     else:

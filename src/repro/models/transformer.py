@@ -390,6 +390,53 @@ def cache_copy_pages(cache, src, dst):
     return {k: visit(v, k == "blocks") for k, v in cache.items()}
 
 
+def cache_fetch_pages(cache, pages):
+    """Gather physical pages `pages[i]` out of EVERY layer's paged pool.
+
+    Returns a tree with the same structure as `cache` where each
+    `PagedKVCache` pool is replaced by a pool-shaped gather of the named
+    pages (leaves under "blocks" keep their leading layer-repetition axis;
+    page axis 1 there, 0 for "tail"/"dense_prefix").  Non-paged leaves map
+    to None — the host half of page spill only moves KV pages.  One fetch
+    covers the whole stack because a slot's page-table row names the same
+    physical page ids in every layer's pool.
+    """
+    from repro.core.attention import PagedKVCache, fetch_pages
+
+    def visit(node, stacked):
+        if isinstance(node, PagedKVCache):
+            return fetch_pages(node, pages, page_axis=1 if stacked else 0)
+        if isinstance(node, dict):
+            return {k: visit(v, stacked) for k, v in node.items()}
+        if isinstance(node, (tuple, list)) and not hasattr(node, "shape"):
+            return type(node)(visit(v, stacked) for v in node)
+        return None
+
+    return {k: visit(v, k == "blocks") for k, v in cache.items()}
+
+
+def cache_restore_pages(cache, pages, data):
+    """Scatter previously fetched pages back into EVERY layer's paged pool:
+    pool page `pages[i]` := `data` page i — the inverse of
+    `cache_fetch_pages` (same tree structure; None data leaves leave the
+    cache leaf untouched).  Restoring into freshly allocated physical pages
+    plus a rewritten page-table row reproduces the spilled slot's KV
+    bit-identically across the whole stack in one device dispatch.
+    """
+    from repro.core.attention import PagedKVCache, restore_pages
+
+    def visit(node, d, stacked):
+        if isinstance(node, PagedKVCache):
+            return restore_pages(node, pages, d, page_axis=1 if stacked else 0)
+        if isinstance(node, dict):
+            return {k: visit(v, d[k], stacked) for k, v in node.items()}
+        if isinstance(node, (tuple, list)) and not hasattr(node, "shape"):
+            return type(node)(visit(v, dv, stacked) for v, dv in zip(node, d))
+        return node
+
+    return {k: visit(v, data[k], k == "blocks") for k, v in cache.items()}
+
+
 def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
                   cfg: ModelConfig, enc_out: Optional[jax.Array] = None,
                   seq_lens: Optional[jax.Array] = None,

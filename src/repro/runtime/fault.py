@@ -27,6 +27,91 @@ import jax
 import numpy as np
 
 
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Deterministic, seed-driven fault injection for the serving scheduler.
+
+    A plan names WHICH failure modes fire and WHEN; the scheduler queries
+    it at well-defined hook points, so every injected fault exercises a
+    real recovery path (spill/restore, stall, recompute continuation,
+    audit detection) instead of an artificial mock:
+
+      * force-evict   — evict the scheduler's normal victim at step s, as
+        if the pool were starved (exercises spill + restore / recompute).
+      * alloc-fail    — report a page allocation as failed even though the
+        pool could satisfy it (exercises stall, eviction and admission
+        back-off paths under synthetic fragmentation).
+      * restore-delay — defer a queued victim-pool restore by a step
+        (exercises FCFS head-of-line behavior of spilled continuations).
+      * refcount-corrupt — flip a live page's refcount and require
+        `Scheduler.audit()` to DETECT it (the corruption is rolled back
+        after detection; an undetected corruption raises).
+
+    Faults change scheduling, never results: per-request token streams
+    must stay bit-identical to a fault-free run (sampling keys are
+    per-(request id, token index) and spill/restore is bit-exact), which
+    is exactly what the chaos suite asserts.
+
+    `*_steps` fire at exact scheduler step indices (1-based, deterministic
+    across runs); `*_rate` additionally fire stochastically from a
+    `numpy.random.RandomState(seed)` stream — deterministic for a given
+    (seed, request trace) because the scheduler itself is deterministic.
+    `start()` returns the per-run mutable state; a FaultPlan is reusable.
+    """
+
+    seed: int = 0
+    evict_steps: Tuple[int, ...] = ()
+    alloc_fail_steps: Tuple[int, ...] = ()
+    restore_delay_steps: Tuple[int, ...] = ()
+    corrupt_refcount_steps: Tuple[int, ...] = ()
+    evict_rate: float = 0.0
+    alloc_fail_rate: float = 0.0
+    restore_delay_rate: float = 0.0
+    max_faults: int = 1_000_000   # hard cap so rate-driven chaos terminates
+
+    def start(self) -> "FaultState":
+        return FaultState(self)
+
+
+class FaultState:
+    """Per-run mutable half of a `FaultPlan` (rng stream + fired counts)."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self._rng = np.random.RandomState(plan.seed)
+        self.fired: Dict[str, int] = {"evict": 0, "alloc_fail": 0,
+                                      "restore_delay": 0, "corrupt": 0}
+
+    def _fire(self, kind: str, step: int, steps, rate: float) -> bool:
+        hit = step in steps
+        if rate > 0.0 and not hit:
+            # the draw happens on every query so the stream position is a
+            # pure function of the scheduler's (deterministic) call sequence
+            hit = bool(self._rng.random_sample() < rate)
+        if hit and sum(self.fired.values()) >= self.plan.max_faults:
+            return False
+        if hit:
+            self.fired[kind] += 1
+        return hit
+
+    def force_evict(self, step: int) -> bool:
+        return self._fire("evict", step, self.plan.evict_steps,
+                          self.plan.evict_rate)
+
+    def fail_alloc(self, step: int) -> bool:
+        return self._fire("alloc_fail", step, self.plan.alloc_fail_steps,
+                          self.plan.alloc_fail_rate)
+
+    def delay_restore(self, step: int) -> bool:
+        return self._fire("restore_delay", step,
+                          self.plan.restore_delay_steps,
+                          self.plan.restore_delay_rate)
+
+    def corrupt_refcount(self, step: int) -> bool:
+        return self._fire("corrupt", step, self.plan.corrupt_refcount_steps,
+                          0.0)
+
+
 @dataclasses.dataclass
 class StepWatchdog:
     """Rolling-median step timer with SLO-based straggler detection."""

@@ -43,7 +43,9 @@ from __future__ import annotations
 
 import collections
 import functools
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +55,43 @@ from repro.configs.base import ModelConfig
 from repro.core.attention import TRASH_PAGE
 from repro.models import transformer as T
 from repro.models.model_zoo import Model
+from repro.runtime.fault import FaultPlan
+
+
+# ---------------------------------------------------------------------------
+# typed admission results
+# ---------------------------------------------------------------------------
+class SubmitError(ValueError):
+    """Base of the typed `Scheduler.submit` rejections: the request can
+    NEVER be served (malformed), as opposed to `Overloaded` (try later)."""
+
+
+class EmptyPrompt(SubmitError):
+    """Rejected: the prompt has no tokens (nothing to condition on)."""
+
+
+class InvalidBudget(SubmitError):
+    """Rejected: `max_new_tokens` <= 0 (the scheduler would otherwise emit
+    one token anyway — every admission samples from the prefill logits)."""
+
+
+class PromptTooLong(SubmitError):
+    """Rejected: the prompt can never fit — it reaches `max_len` (no room
+    for even one generated token) or needs more pages than the pool owns.
+    Without this check such a request would sit at the queue head forever,
+    wedging admission for everyone behind it (FCFS never skips)."""
+
+
+class Overloaded(RuntimeError):
+    """Backpressure: the bounded admission queue (`max_queue`) is full.
+    Transient — the caller should shed load or retry later; the scheduler
+    counts the rejection in `stats['rejections']`."""
+
+
+class AuditError(AssertionError):
+    """`Scheduler.audit()` found a broken invariant: a page refcount that
+    does not match its holders (slot rows + directory entries + victim
+    pool), an orphaned/double-freed page, or an inconsistent page table."""
 
 
 @functools.lru_cache(maxsize=64)
@@ -251,6 +290,34 @@ def make_page_copy_fn(model: Model) -> Callable:
 
 
 @functools.lru_cache(maxsize=64)
+def make_page_fetch_fn(model: Model) -> Callable:
+    """Device half of a page SPILL: gather the named physical pages out of
+    every layer's pool into a compact page-major tree the caller
+    `device_get`s into the host victim pool.  The cache is NOT donated —
+    the pool keeps serving the surviving slots while the bytes drain.
+    Callers pad `pages` to a power-of-two width with `TRASH_PAGE` entries
+    so the gather compiles O(log n) shapes, mirroring `_apply_copies`."""
+    def fetch(cache, pages):
+        return T.cache_fetch_pages(cache, pages)
+
+    return jax.jit(fetch)
+
+
+@functools.lru_cache(maxsize=64)
+def make_page_restore_fn(model: Model) -> Callable:
+    """Device half of a page RESTORE (cache donated): scatter a previously
+    fetched page tree into freshly allocated physical pages — the inverse
+    of `make_page_fetch_fn`, bit-exact because whole pages of already
+    quantized K/V bytes round-trip untouched.  `pages` carries the same
+    power-of-two `TRASH_PAGE` padding as the fetch (padding lanes write
+    into the reserved trash page, a no-op by construction)."""
+    def restore(cache, pages, data):
+        return T.cache_restore_pages(cache, pages, data)
+
+    return jax.jit(restore, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=64)
 def make_ragged_decode_fn(model: Model, chunk: int, temperature: float,
                           top_k: int, eos_id: Optional[int],
                           max_len: int, top_p: float = 1.0) -> Callable:
@@ -367,16 +434,59 @@ prefix-directory entries (distinct from None == pool full)."""
 
 
 class Request:
-    """One generation request tracked by the Scheduler."""
+    """One generation request tracked by the Scheduler.
 
-    __slots__ = ("rid", "prompt", "max_new_tokens", "tokens", "done")
+    `deadline_ms` / `ttl_steps` are optional staleness bounds checked while
+    the request is QUEUED (admitted work is never killed mid-decode): a
+    queued request older than `ttl_steps` scheduler steps — deterministic,
+    what tests use — or `deadline_ms` wall-clock milliseconds (measured
+    with the scheduler's injectable clock) is shed with
+    `status == "deadline_missed"` and its partial tokens kept.
+    `status` is "queued" -> "done" | "deadline_missed".
+    """
 
-    def __init__(self, rid: int, prompt: Sequence[int], max_new_tokens: int):
+    __slots__ = ("rid", "prompt", "max_new_tokens", "tokens", "done",
+                 "deadline_ms", "ttl_steps", "submit_step", "submit_time",
+                 "status")
+
+    def __init__(self, rid: int, prompt: Sequence[int], max_new_tokens: int,
+                 deadline_ms: Optional[float] = None,
+                 ttl_steps: Optional[int] = None):
         self.rid = rid
         self.prompt = list(int(t) for t in prompt)
         self.max_new_tokens = int(max_new_tokens)
         self.tokens: List[int] = []
         self.done = False
+        self.deadline_ms = None if deadline_ms is None else float(deadline_ms)
+        self.ttl_steps = None if ttl_steps is None else int(ttl_steps)
+        self.submit_step = 0
+        self.submit_time = 0.0
+        self.status = "queued"
+
+
+class _SpillRecord:
+    """Host-side victim-pool entry for one evicted slot: everything needed
+    to rebuild the slot's page-table row bit-identically.
+
+    `logical` is the slot's page list in LOGICAL order, each entry either
+    ("host", i) — a formerly private page whose bytes live at index i of
+    the fetched `data` tree (the device page was freed) — or ("ref", p) —
+    a shared page that stayed resident because the prefix directory /
+    other slots still hold it; the record itself keeps one refcount on p
+    so no reclaim can free it before the restore.  `data` is the
+    `device_get` of a `make_page_fetch_fn` gather padded to `width`
+    (power of two) pages; `n_host` of them are real.  `covered` / `cur_tok`
+    snapshot the slot's kv fill and pending decode input."""
+
+    __slots__ = ("logical", "n_host", "width", "data", "covered", "cur_tok")
+
+    def __init__(self, logical, n_host, width, data, covered, cur_tok):
+        self.logical = logical
+        self.n_host = int(n_host)
+        self.width = int(width)
+        self.data = data
+        self.covered = int(covered)
+        self.cur_tok = int(cur_tok)
 
 
 class Scheduler:
@@ -477,7 +587,11 @@ class Scheduler:
                  page_size: int = 0, num_pages: int = 0,
                  prefix_sharing: bool = False, prefix_cache_pages: int = 0,
                  mixed_steps: bool = False, prefill_chunk_budget: int = 0,
-                 mixed_dispatch: str = "fused"):
+                 mixed_dispatch: str = "fused",
+                 victim_pool_pages: int = 0, max_queue: int = 0,
+                 fault_plan: Optional[FaultPlan] = None,
+                 audit_every_step: Optional[bool] = None,
+                 clock: Callable[[], float] = time.monotonic):
         if not scheduler_supported(model.cfg):
             raise NotImplementedError(
                 f"arch {model.cfg.name!r} is not supported by the slot "
@@ -531,7 +645,6 @@ class Scheduler:
             self.free_pages: List[int] = list(range(1, self.num_pages))
             self.page_table = np.full((self.B, self.max_pages), -1, np.int32)
             self.peak_pages_in_use = 0
-            self.n_evictions = 0
             # per-page refcount: holders are slot table rows + directory
             # entries; only pages that drop to 0 return to the free list
             self.page_ref = np.zeros(self.num_pages, np.int32)
@@ -563,17 +676,111 @@ class Scheduler:
         self.queue: "collections.deque[Request]" = collections.deque()
         self._next_rid = 0
 
+        # -- overload control: victim pool, bounded queue, deadlines -------
+        self.victim_pool_pages = int(victim_pool_pages)
+        if self.victim_pool_pages and not self.paged:
+            raise ValueError("victim_pool_pages requires page_size > 0 "
+                             "(only paged KV can spill page-granularly)")
+        self.max_queue = int(max_queue)
+        self._clock = clock
+        self._faults = fault_plan.start() if fault_plan is not None else None
+        if audit_every_step is None:
+            audit_every_step = bool(int(os.environ.get("REPRO_AUDIT", "0")))
+        self._audit_every = bool(audit_every_step)
+        # rid -> _SpillRecord for evicted-but-spilled continuations; the
+        # request itself sits in the queue like any eviction continuation,
+        # and admission restores instead of re-prefilling when a record
+        # exists
+        self._victim: Dict[int, _SpillRecord] = {}
+        self._victim_used = 0                 # host pages currently held
+        if self.paged:
+            cfg = model.cfg
+            hkv = cfg.num_kv_heads
+            self._page_bytes = (cfg.num_layers * self.page_size
+                                * (2 * hkv * cfg.resolved_head_dim
+                                   + 2 * 4 * hkv))
+        else:
+            self._page_bytes = 0
+        self._step_idx = 0
+        self._queue_depths: List[int] = []
+        # dense-mode evictions exist too (forced by fault injection), so the
+        # counter lives here, shared by both storage modes
+        self.n_evictions = 0
+        self.n_spills = 0                     # evictions spilled to host
+        self.n_restores = 0                   # spilled slots re-admitted
+        self.spilled_pages = 0                # device->host pages moved
+        self.spill_bytes = 0                  # analytic bytes spilled
+        self.n_recompute_fallbacks = 0        # spills refused (pool cap)
+        self.n_deadline_misses = 0            # queued requests shed stale
+        self.n_rejections = 0                 # submits bounced (Overloaded)
+        self.n_reclaim_stalls = 0             # reclaim gave up: dir pinned
+        self.refcount_corruptions_detected = 0
+
     # -- request intake -----------------------------------------------------
-    def submit(self, prompt: Sequence[int], max_new_tokens: int) -> int:
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               deadline_ms: Optional[float] = None,
+               ttl_steps: Optional[int] = None) -> int:
+        """Queue a request.  Raises a typed `SubmitError` subclass for
+        requests that can never be served (`EmptyPrompt`, `InvalidBudget`,
+        `PromptTooLong` — an unchecked over-long prompt would wedge FCFS
+        admission forever) and `Overloaded` when the bounded queue
+        (`max_queue`) is full — backpressure, not failure; the caller
+        sheds load or retries."""
+        prompt = list(prompt)
         if len(prompt) == 0:
-            raise ValueError("empty prompt")
+            raise EmptyPrompt("empty prompt: nothing to condition on")
+        if int(max_new_tokens) <= 0:
+            raise InvalidBudget(
+                f"max_new_tokens must be >= 1, got {max_new_tokens}")
         if len(prompt) >= self.max_len:
-            raise ValueError(
-                f"prompt length {len(prompt)} >= max_len {self.max_len}")
-        r = Request(self._next_rid, prompt, max_new_tokens)
+            raise PromptTooLong(
+                f"prompt length {len(prompt)} >= max_len {self.max_len} "
+                "(no room for even one generated token)")
+        if self.paged and self._pages_for(len(prompt) + 1) > self.num_pages - 1:
+            # defense in depth: with the init-time pool floor this cannot
+            # fire today, but a relaxed pool must never wedge admission
+            raise PromptTooLong(
+                f"prompt needs {self._pages_for(len(prompt) + 1)} pages; the "
+                f"pool only has {self.num_pages - 1}")
+        if self.max_queue and len(self.queue) >= self.max_queue:
+            self.n_rejections += 1
+            raise Overloaded(
+                f"admission queue full ({self.max_queue} requests)")
+        r = Request(self._next_rid, prompt, max_new_tokens,
+                    deadline_ms=deadline_ms, ttl_steps=ttl_steps)
+        r.submit_step = self._step_idx
+        r.submit_time = self._clock()
         self._next_rid += 1
         self.queue.append(r)
         return r.rid
+
+    def _is_stale(self, r: Request) -> bool:
+        if (r.ttl_steps is not None
+                and self._step_idx - r.submit_step > r.ttl_steps):
+            return True
+        if (r.deadline_ms is not None
+                and (self._clock() - r.submit_time) * 1e3 > r.deadline_ms):
+            return True
+        return False
+
+    def _shed_stale(self):
+        """Drop queued requests past their deadline/ttl (admitted work is
+        never killed — shedding happens at the queue, where a stale request
+        would only steal capacity from ones that can still make it).  A
+        shed spilled continuation also releases its victim-pool record."""
+        if not self.queue:
+            return
+        kept: "collections.deque[Request]" = collections.deque()
+        while self.queue:
+            r = self.queue.popleft()
+            if self._is_stale(r):
+                r.done = True
+                r.status = "deadline_missed"
+                self.n_deadline_misses += 1
+                self._drop_victim(r.rid)
+            else:
+                kept.append(r)
+        self.queue = kept
 
     # -- scheduling ---------------------------------------------------------
     def _bucket(self, n: int) -> int:
@@ -598,6 +805,11 @@ class Scheduler:
         have = int((row >= 0).sum())
         if need <= have:
             return True
+        # fault injection: report this (real) allocation as failed —
+        # queried only when pages would actually be taken, so no-op calls
+        # never advance the plan's rng stream
+        if self._faults is not None and self._faults.fail_alloc(self._step_idx):
+            return False
         if need - have > len(self.free_pages):
             self._reclaim(need - have)
             if need - have > len(self.free_pages):
@@ -646,8 +858,11 @@ class Scheduler:
                    and self.prefix_dir):
                 self._dir_evict_one()
 
-    def _dir_evict_one(self):
-        _, (pages, _) = self.prefix_dir.popitem(last=False)   # LRU
+    def _dir_evict_one(self, key: Optional[bytes] = None):
+        if key is None:
+            _, (pages, _) = self.prefix_dir.popitem(last=False)   # LRU
+        else:
+            pages, _ = self.prefix_dir.pop(key)
         for p in pages:
             self.page_ref[p] -= 1
             self._dir_ref[p] -= 1
@@ -660,9 +875,23 @@ class Scheduler:
     def _reclaim(self, need: int):
         """LRU-evict directory entries until `need` pages are free (pages a
         live slot still holds survive eviction — only the directory's hold
-        is dropped)."""
-        while len(self.free_pages) < need and self.prefix_dir:
-            self._dir_evict_one()
+        is dropped).  Only entries whose eviction actually FREES a page are
+        considered (a page frees iff the directory hold is its last
+        refcount): under pressure the directory may hold only prefixes
+        whose pages live slots / the victim pool still pin — evicting
+        those frees nothing, so reclaim must break with a stall stat
+        instead of spinning through (and churning) the whole directory."""
+        while len(self.free_pages) < need:
+            victim = None
+            for key, (pages, _) in self.prefix_dir.items():   # LRU order
+                if any(self.page_ref[p] == 1 for p in pages):
+                    victim = key
+                    break
+            if victim is None:
+                if self.prefix_dir:
+                    self.n_reclaim_stalls += 1
+                break
+            self._dir_evict_one(victim)
 
     def clear_prefix_cache(self):
         """Drop every directory entry (refcounts released; pages no slot
@@ -770,14 +999,23 @@ class Scheduler:
                                              self.slot_req[b].rid)))
 
     def _evict(self, slot: int):
-        """Free a starved slot and re-queue its request as a continuation:
-        prompt + tokens generated so far, with the remaining budget — the
-        re-prefill resumes the identical stream (greedy trivially; sampled
-        too, because sampling keys are per-(request, token index), not a
-        serially split stream).  Pages
-        other holders (slots sharing the prefix, directory entries) still
-        reference merely lose this slot's refcount; they are NOT freed."""
+        """Evict a starved slot and re-queue its request as a continuation.
+
+        With a victim pool (`victim_pool_pages > 0`) the slot's KV is
+        SPILLED first — private pages copied device->host, shared pages
+        kept resident under a victim-pool refcount — so re-admission is an
+        O(pages) restore instead of an O(prompt + tokens) re-prefill.
+        Without a pool (or when its cap is hit) the classic recompute
+        continuation runs: pages freed, prompt + tokens re-prefilled on
+        re-admission — identical output either way, because sampling keys
+        are per-(request, token index), not a serially split stream.
+        Pages other holders (slots sharing the prefix, directory entries)
+        still reference merely lose this slot's refcount; never freed."""
         r = self.slot_req[slot]
+        spilled = False
+        if (r is not None and self.victim_pool_pages
+                and not self.prefilling[slot] and self.lengths[slot] > 0):
+            spilled = self._spill(slot, r)
         self.slot_req[slot] = None
         self.active[slot] = False
         self.lengths[slot] = 0
@@ -785,10 +1023,113 @@ class Scheduler:
         self.prefilling[slot] = False
         self._pend[slot] = None
         self._inflight_keys.pop(slot, None)
-        self._free_slot_pages(slot)
+        if self.paged and not spilled:
+            self._free_slot_pages(slot)
         self.n_evictions += 1
         if r is not None:
             self.queue.appendleft(r)
+
+    def _spill(self, slot: int, r: Request) -> bool:
+        """Move `slot`'s KV into the host victim pool (hierarchical spill).
+
+        Private pages (refcount 1 — this slot is the only holder) are
+        fetched device->host in ONE power-of-two-padded gather, then freed
+        on device; shared pages (prefix-directory / other-slot holders)
+        stay resident — the record takes over this slot's refcount on
+        them, so the bytes survive any reclaim until the restore.  Returns
+        False (recompute fallback) when the pool cap cannot take the
+        private pages."""
+        row = self.page_table[slot]
+        alloc = [int(p) for p in row[row >= 0]]
+        private = [p for p in alloc if self.page_ref[p] == 1]
+        n = len(private)
+        if self._victim_used + n > self.victim_pool_pages:
+            self.n_recompute_fallbacks += 1
+            return False
+        width = 1
+        while width < max(n, 1):
+            width *= 2
+        data = None
+        if n:
+            padded = private + [TRASH_PAGE] * (width - n)
+            data = jax.device_get(make_page_fetch_fn(self.model)(
+                self.cache, jnp.asarray(padded, jnp.int32)))
+        host_idx = {p: i for i, p in enumerate(private)}
+        logical: List[Tuple[str, int]] = []
+        for p in alloc:
+            if self.page_ref[p] == 1:
+                logical.append(("host", host_idx[p]))
+                self.page_ref[p] = 0
+                self.free_pages.append(p)
+            else:
+                # the record REPLACES the slot as this page's holder: the
+                # slot's hold is dropped and the victim hold added in one
+                # move, so the net refcount is unchanged
+                logical.append(("ref", p))
+        row[:] = -1
+        self._victim[r.rid] = _SpillRecord(
+            logical, n, width, data,
+            int(self.lengths[slot]), int(self.cur_tok[slot]))
+        self._victim_used += n
+        self.n_spills += 1
+        self.spilled_pages += n
+        self.spill_bytes += n * self._page_bytes
+        return True
+
+    def _restore(self, slot: int, r: Request, rec: _SpillRecord) -> bool:
+        """Re-admit a spilled continuation: scatter its host pages into
+        freshly allocated physical pages (one power-of-two-padded device
+        write mirroring the fetch), re-map the shared entries (the victim
+        hold transfers back to the slot), rebuild the page-table row in
+        logical order and resume DECODING exactly where eviction stopped —
+        no prefill, bit-identical to a never-evicted slot because whole
+        already-quantized pages round-tripped untouched.  Returns False
+        when the pool cannot supply the fresh pages yet (the continuation
+        stays at the queue head — FCFS)."""
+        n = rec.n_host
+        if n > len(self.free_pages):
+            self._reclaim(n)
+            if n > len(self.free_pages):
+                return False
+        fresh = [self.free_pages.pop() for _ in range(n)]
+        for p in fresh:
+            self.page_ref[p] = 1
+        row = self.page_table[slot]
+        for j, (kind, val) in enumerate(rec.logical):
+            row[j] = fresh[val] if kind == "host" else val
+        if n:
+            dst = fresh + [TRASH_PAGE] * (rec.width - n)
+            self.cache = make_page_restore_fn(self.model)(
+                self.cache, jnp.asarray(dst, jnp.int32), rec.data)
+        del self._victim[r.rid]
+        self._victim_used -= n
+        self.slot_req[slot] = r
+        self.lengths[slot] = rec.covered
+        self.cur_tok[slot] = rec.cur_tok
+        self.remaining[slot] = r.max_new_tokens - len(r.tokens)
+        self.active[slot] = True
+        self.prefilling[slot] = False
+        self._admit_counter += 1
+        self._admit_seq[slot] = self._admit_counter
+        self.n_restores += 1
+        self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                     self.pages_in_use())
+        return True
+
+    def _drop_victim(self, rid: int):
+        """Release a victim-pool record without restoring it (the request
+        was shed): host pages are simply forgotten, and the record's holds
+        on still-resident shared pages are dropped (freeing any page
+        nobody else holds)."""
+        rec = self._victim.pop(rid, None)
+        if rec is None:
+            return
+        self._victim_used -= rec.n_host
+        for kind, p in rec.logical:
+            if kind == "ref":
+                self.page_ref[p] -= 1
+                if self.page_ref[p] == 0:
+                    self.free_pages.append(p)
 
     def _retire(self, slot: int):
         r = self.slot_req[slot]
@@ -880,6 +1221,19 @@ class Scheduler:
             if self._inflight_keys else set()
         deferred = False
         while free and self.queue:
+            rec = self._victim.get(self.queue[0].rid)
+            if rec is not None:
+                # spilled continuation at the queue head: RESTORE instead
+                # of re-prefilling — the slot resumes decoding immediately
+                # (no wave membership, no prefill dispatch)
+                if (self._faults is not None
+                        and self._faults.delay_restore(self._step_idx)):
+                    break
+                if not self._restore(free[0], self.queue[0], rec):
+                    break                     # FCFS: wait for pages
+                free.pop(0)
+                self.queue.popleft()
+                continue
             if self.paged:
                 # page-granular admission: the prompt (or eviction
                 # continuation) must fit in free pages — NOT a whole
@@ -1240,12 +1594,21 @@ class Scheduler:
             self._mixed_step_fused(emitted)
 
     def step(self) -> Dict[int, List[int]]:
-        """One scheduling round: admit, then either one mixed
+        """One scheduling round: shed stale queued requests, admit (and
+        restore spilled continuations), then either one mixed
         prefill+decode dispatch (mixed mode with a prefill in flight) or
         one fused decode chunk-scan; retire as slots finish.  Returns the
-        tokens generated this round, keyed by request id."""
+        tokens generated this round, keyed by request id.  Fault-injection
+        hooks and the per-step invariant audit (`REPRO_AUDIT=1` /
+        `audit_every_step=True`) run here."""
         emitted: Dict[int, List[int]] = {}
+        self._step_idx += 1
+        self._shed_stale()
+        self._queue_depths.append(len(self.queue))
         self._admit(emitted)
+        if (self._faults is not None and self.active.any()
+                and self._faults.force_evict(self._step_idx)):
+            self._evict(self._eviction_victim())
         if self.mixed_steps and self.prefilling.any():
             self._mixed_step(emitted)
         else:
@@ -1253,7 +1616,149 @@ class Scheduler:
         if self.paged:
             self.peak_pages_in_use = max(self.peak_pages_in_use,
                                          self.pages_in_use())
+        if (self._faults is not None and self.paged
+                and self._faults.corrupt_refcount(self._step_idx)):
+            self._corrupt_and_detect()
+        if self._audit_every:
+            self.audit()
         return emitted
+
+    # -- invariant audit ----------------------------------------------------
+    def _corrupt_and_detect(self):
+        """Fault hook: bump a live page's refcount by one and require
+        `audit()` to DETECT the corruption (raising otherwise), then roll
+        it back — an end-to-end proof the auditor is live, not a no-op."""
+        held = np.flatnonzero(self.page_ref > 0)
+        if held.size == 0:
+            return
+        p = int(held[0])
+        self.page_ref[p] += 1
+        try:
+            self.audit()
+        except AuditError:
+            self.refcount_corruptions_detected += 1
+        else:
+            raise AssertionError(
+                f"audit() missed an injected refcount corruption on page {p}")
+        finally:
+            self.page_ref[p] -= 1
+
+    def audit(self):
+        """Full scheduler invariant check; raises `AuditError` with every
+        violation found.  Paged mode verifies the page-accounting triangle:
+        every page's refcount equals its holder count (slot page-table
+        rows + prefix-directory entries + victim-pool records), refcount 0
+        iff on the free list (no orphans, no double-frees), page-table
+        rows are contiguous valid prefixes covering their slot's kv fill,
+        and the victim pool's host-page accounting respects its cap.
+        Cheap (host metadata only) — `REPRO_AUDIT=1` runs it after every
+        step; tests call it at end-of-run."""
+        errs: List[str] = []
+        for b in range(self.B):
+            occupied = self.slot_req[b] is not None
+            if not occupied and self.active[b]:
+                errs.append(f"slot {b}: active without a request")
+            if not occupied and self.prefilling[b]:
+                errs.append(f"slot {b}: prefilling without a request")
+            if self.active[b] and self.prefilling[b]:
+                errs.append(f"slot {b}: both active and prefilling")
+            if self.prefilling[b] and self._pend[b] is None:
+                errs.append(f"slot {b}: prefilling with no pending tokens")
+        if self.paged:
+            P = self.num_pages
+            free_set = set(self.free_pages)
+            if len(free_set) != len(self.free_pages):
+                errs.append("free list holds duplicate pages (double-free)")
+            if TRASH_PAGE in free_set:
+                errs.append("reserved trash page is on the free list")
+            for p in free_set:
+                if not 0 < p < P:
+                    errs.append(f"free list holds out-of-range page {p}")
+            expected = np.zeros(P, np.int64)
+            for b in range(self.B):
+                row = self.page_table[b]
+                k = int((row >= 0).sum())
+                if k and not (row[:k] >= 0).all():
+                    errs.append(f"slot {b}: page-table row is not a "
+                                "contiguous allocated prefix")
+                for p in row[row >= 0]:
+                    p = int(p)
+                    if not 0 < p < P:
+                        errs.append(f"slot {b}: invalid page id {p}")
+                    else:
+                        expected[p] += 1
+                if self.slot_req[b] is None and k:
+                    errs.append(f"slot {b}: empty slot still maps {k} pages")
+                if (self.slot_req[b] is not None and self.lengths[b] > 0
+                        and k < self._pages_for(int(self.lengths[b]))):
+                    errs.append(
+                        f"slot {b}: kv fill {int(self.lengths[b])} not "
+                        f"covered by its {k} allocated pages")
+            dir_ref: Dict[int, int] = {}
+            for pages, _ in self.prefix_dir.values():
+                for p in pages:
+                    dir_ref[p] = dir_ref.get(p, 0) + 1
+                    if 0 < p < P:
+                        expected[p] += 1
+                    else:
+                        errs.append(f"directory maps invalid page {p}")
+            if dir_ref != self._dir_ref:
+                errs.append("directory page refcounts (_dir_ref) out of "
+                            "sync with the directory's entries")
+            used = 0
+            for rid, rec in self._victim.items():
+                used += rec.n_host
+                for kind, p in rec.logical:
+                    if kind == "ref":
+                        if 0 < p < P:
+                            expected[p] += 1
+                        else:
+                            errs.append(
+                                f"victim record {rid} holds invalid page {p}")
+            if used != self._victim_used:
+                errs.append(f"victim pool accounting: records hold {used} "
+                            f"host pages, counter says {self._victim_used}")
+            if self.victim_pool_pages and used > self.victim_pool_pages:
+                errs.append(f"victim pool over capacity: {used} > "
+                            f"{self.victim_pool_pages}")
+            for p in range(1, P):
+                ref = int(self.page_ref[p])
+                if ref != int(expected[p]):
+                    errs.append(f"page {p}: refcount {ref} != "
+                                f"{int(expected[p])} holders")
+                if ref == 0 and p not in free_set:
+                    errs.append(f"page {p}: orphaned (refcount 0 but not "
+                                "on the free list)")
+                if ref != 0 and p in free_set:
+                    errs.append(f"page {p}: on the free list with "
+                                f"refcount {ref}")
+            if int(self.page_ref[TRASH_PAGE]) != 0:
+                errs.append("reserved trash page has a nonzero refcount")
+        if errs:
+            raise AuditError("scheduler audit failed:\n  "
+                             + "\n  ".join(errs))
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        """Overload / robustness counters (host-side, O(1) to read)."""
+        depths = np.asarray(self._queue_depths or [0])
+        return {
+            "steps": self._step_idx,
+            "evictions": self.n_evictions,
+            "spills": self.n_spills,
+            "restores": self.n_restores,
+            "spilled_pages": self.spilled_pages,
+            "spill_bytes": self.spill_bytes,
+            "recompute_fallbacks": self.n_recompute_fallbacks,
+            "deadline_misses": self.n_deadline_misses,
+            "rejections": self.n_rejections,
+            "reclaim_stalls": self.n_reclaim_stalls,
+            "refcount_corruptions_detected":
+                self.refcount_corruptions_detected,
+            "victim_pool_pages_used": self._victim_used,
+            "queue_depth_p50": float(np.percentile(depths, 50)),
+            "queue_depth_p95": float(np.percentile(depths, 95)),
+        }
 
     def run(self, on_tokens: Optional[Callable[[int, List[int]], None]] = None
             ) -> Dict[int, List[int]]:
@@ -1284,7 +1789,12 @@ def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
              prefix_cache_pages: int = 0,
              mixed_steps: bool = False,
              prefill_chunk_budget: int = 0,
-             mixed_dispatch: str = "fused") -> jax.Array:
+             mixed_dispatch: str = "fused",
+             victim_pool_pages: int = 0,
+             max_queue: int = 0,
+             deadline_ms: Optional[float] = None,
+             ttl_steps: Optional[int] = None,
+             fault_plan: Optional[FaultPlan] = None) -> jax.Array:
     """Batched generation. Returns (B, max_new_tokens) generated ids.
 
     Default: equal-length prefill + scan-fused decode (the paper's token
@@ -1298,7 +1808,11 @@ def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
     on top (`prefix_cache_pages` caps the retained prefix directory), and
     `mixed_steps=True` chunks admission prefill into mixed prefill+decode
     steps of at most `prefill_chunk_budget` prompt tokens (bit-identical
-    outputs; bounded time between tokens).
+    outputs; bounded time between tokens).  `victim_pool_pages` enables
+    the host-memory spill pool for eviction continuations, `max_queue` /
+    `deadline_ms` / `ttl_steps` the admission-control bounds (rejected
+    rows stay padding), and `fault_plan` the deterministic fault-injection
+    hooks — see `Scheduler`.
 
     temperature=0 reproduces greedy decoding exactly; temperature>0 samples
     (optionally top_k- and/or nucleus-top_p-truncated) with `rng`
@@ -1317,14 +1831,25 @@ def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
                           prefix_cache_pages=prefix_cache_pages,
                           mixed_steps=mixed_steps,
                           prefill_chunk_budget=prefill_chunk_budget,
-                          mixed_dispatch=mixed_dispatch)
+                          mixed_dispatch=mixed_dispatch,
+                          victim_pool_pages=victim_pool_pages,
+                          max_queue=max_queue, fault_plan=fault_plan)
         tokens = np.asarray(prompt_batch["tokens"])
-        rids = [sched.submit(tokens[b].tolist(), max_new_tokens)
-                for b in range(B)]
+        rids = []
+        for b in range(B):
+            try:
+                rids.append(sched.submit(tokens[b].tolist(), max_new_tokens,
+                                         deadline_ms=deadline_ms,
+                                         ttl_steps=ttl_steps))
+            except Overloaded:
+                # bounded-queue backpressure: the row stays padding
+                rids.append(None)
         results = sched.run()
         pad = 0 if eos_id is None else int(eos_id)
         out = np.full((B, max_new_tokens), pad, np.int32)
         for b, rid in enumerate(rids):
+            if rid is None:
+                continue
             got = results.get(rid, [])[:max_new_tokens]
             out[b, : len(got)] = got
         return jnp.asarray(out)

@@ -1,0 +1,370 @@
+"""Hierarchical page spill + admission control (ISSUE 7).
+
+  * `fetch_pages`/`restore_pages` round-trip whole pages bit-exactly at
+    both page axes (single pool and layer-stacked), including TRASH_PAGE
+    padding lanes
+  * spill -> restore resumes the exact stream: a starved pool with a
+    victim pool produces per-request tokens bit-identical to the
+    recompute-only scheduler AND to isolated generation — behavioral and
+    kernel paths, greedy and temperature > 0, classic and mixed steps
+  * prefix sharing composes: shared prefix pages are never spilled (the
+    directory pins them; only private pages move device->host) and the
+    refcount drain stays clean
+  * a too-small victim pool falls back to recompute continuations
+    (`recompute_fallbacks`) with identical outputs
+  * `submit` hardening: typed EmptyPrompt / InvalidBudget / PromptTooLong
+    rejections, Overloaded backpressure on a bounded queue
+  * deadline/ttl shedding: stale QUEUED requests are dropped as deadline
+    misses (admitted work never killed), spilled continuations release
+    their victim records
+  * `_reclaim` under pressure: a directory holding only slot-pinned pages
+    breaks with a stall stat instead of spinning
+  * `audit()` passes after every run; stats counters are exposed
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import attention as attn
+from repro.data import pipeline as data
+from repro.kernels import ops
+from repro.models.model_zoo import build_model
+from repro.runtime import serve_lib
+from repro.runtime.serve_lib import (
+    EmptyPrompt, InvalidBudget, Overloaded, PromptTooLong, Scheduler)
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def kernel_model():
+    cfg = dataclasses.replace(get_config("internlm2-1.8b", smoke=True),
+                              attn_impl="kernel")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _isolated(model, params, prompt, budget, max_len):
+    p = {"tokens": jnp.asarray([prompt])}
+    return np.asarray(serve_lib.greedy_generate(
+        model, params, p, budget, max_len))[0].tolist()
+
+
+def _run(model, params, trace, *, slots=3, max_len=32, ps=8, pages=6,
+         chunk=4, audit=True, **kw):
+    sched = Scheduler(model, params, max_batch_slots=slots, max_len=max_len,
+                      decode_chunk=chunk, page_size=ps, num_pages=pages,
+                      audit_every_step=audit, **kw)
+    rids = [sched.submit(p, t) for p, t in trace]
+    res = sched.run()
+    sched.audit()
+    return [res[r] for r in rids], sched
+
+
+def _starved_trace(cfg, n=5, budget=10):
+    base = np.asarray(data.lm_batch(3, n, 16, cfg.vocab_size))
+    return [(base[i, : 6 + 2 * i].tolist(), budget) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# unit: page fetch/restore round trip
+# ---------------------------------------------------------------------------
+def test_fetch_restore_roundtrip_unit():
+    key = jax.random.PRNGKey(1)
+    P, ps, hkv, dh = 7, 4, 2, 8
+    ks = [jax.random.split(key, 6)[i] for i in range(6)]
+    pool = attn.PagedKVCache(
+        k_q=jax.random.randint(ks[0], (P, ps, hkv, dh), -127, 127, jnp.int8),
+        v_q=jax.random.randint(ks[1], (P, ps, hkv, dh), -127, 127, jnp.int8),
+        k_scale=jax.random.uniform(ks[2], (P, ps, hkv)),
+        v_scale=jax.random.uniform(ks[3], (P, ps, hkv)))
+    # fetch pages 3 and 5 (padded with a trash lane), zero them, restore
+    # into fresh pages 1 and 6 — the restored bytes must be bit-identical
+    pages = jnp.asarray([3, 5, attn.TRASH_PAGE, attn.TRASH_PAGE], jnp.int32)
+    fetched = jax.device_get(ops.paged_fetch_pages(pool, pages))
+    want = {f: np.asarray(getattr(pool, f)) for f in pool._fields}
+    for f in pool._fields:
+        np.testing.assert_array_equal(getattr(fetched, f)[0], want[f][3])
+        np.testing.assert_array_equal(getattr(fetched, f)[1], want[f][5])
+    dst = jnp.asarray([1, 6, attn.TRASH_PAGE, attn.TRASH_PAGE], jnp.int32)
+    restored = ops.paged_restore_pages(pool, dst, attn.PagedKVCache(
+        *[jnp.asarray(getattr(fetched, f)) for f in pool._fields]))
+    for f in pool._fields:
+        got = np.asarray(getattr(restored, f))
+        np.testing.assert_array_equal(got[1], want[f][3])
+        np.testing.assert_array_equal(got[6], want[f][5])
+        np.testing.assert_array_equal(got[2], want[f][2])  # untouched page
+
+
+def test_stacked_fetch_restore_roundtrip():
+    """The layer-stacked ("blocks") pool variant round-trips at page_axis 1."""
+    key = jax.random.PRNGKey(2)
+    L, P, ps, hkv, dh = 3, 5, 4, 2, 8
+    pool = attn.PagedKVCache(
+        k_q=jax.random.randint(key, (L, P, ps, hkv, dh), -127, 127, jnp.int8),
+        v_q=jax.random.randint(key, (L, P, ps, hkv, dh), -127, 127, jnp.int8),
+        k_scale=jax.random.uniform(key, (L, P, ps, hkv)),
+        v_scale=jax.random.uniform(key, (L, P, ps, hkv)))
+    pages = jnp.asarray([2, 4], jnp.int32)
+    fetched = attn.fetch_pages(pool, pages, page_axis=1)
+    assert fetched.k_q.shape == (L, 2, ps, hkv, dh)
+    restored = attn.restore_pages(pool, jnp.asarray([1, 3], jnp.int32),
+                                  fetched, page_axis=1)
+    np.testing.assert_array_equal(np.asarray(restored.k_q)[:, 1],
+                                  np.asarray(pool.k_q)[:, 2])
+    np.testing.assert_array_equal(np.asarray(restored.v_scale)[:, 3],
+                                  np.asarray(pool.v_scale)[:, 4])
+
+
+# ---------------------------------------------------------------------------
+# spill -> restore bit-identity
+# ---------------------------------------------------------------------------
+def test_spill_restore_parity_behavioral(smoke_model):
+    cfg, model, params = smoke_model
+    trace = _starved_trace(cfg)
+    base, s0 = _run(model, params, trace)
+    assert s0.n_evictions > 0, "trace must starve the pool"
+    assert s0.n_spills == 0
+    spill, s1 = _run(model, params, trace, victim_pool_pages=32)
+    assert spill == base
+    assert s1.n_spills > 0 and s1.n_restores == s1.n_spills
+    assert s1.spilled_pages > 0 and s1.spill_bytes > 0
+    assert s1.n_recompute_fallbacks == 0
+    for (p, t), got in zip(trace, spill):
+        assert got == _isolated(model, params, p, t, 32)
+    # end state drained: every page back in the pool, victim pool empty
+    assert len(s1.free_pages) == s1.num_pages - 1
+    assert int(s1.page_ref.sum()) == 0
+    assert s1._victim_used == 0 and not s1._victim
+
+
+def test_spill_restore_parity_kernel_path(kernel_model):
+    cfg, model, params = kernel_model
+    trace = _starved_trace(cfg, n=4)
+    base, s0 = _run(model, params, trace)
+    spill, s1 = _run(model, params, trace, victim_pool_pages=32)
+    assert s0.n_evictions > 0 and s1.n_restores > 0
+    assert spill == base
+
+
+def test_spill_restore_parity_sampled(smoke_model):
+    """temperature > 0: per-(rid, token-index) sampling keys make the
+    restored continuation draw the SAME tokens it would have drawn."""
+    cfg, model, params = smoke_model
+    trace = _starved_trace(cfg)
+    kw = dict(temperature=0.8, top_k=20, rng=jax.random.PRNGKey(7))
+    base, s0 = _run(model, params, trace, **kw)
+    spill, s1 = _run(model, params, trace, victim_pool_pages=32, **kw)
+    assert s1.n_restores > 0
+    assert spill == base
+
+
+def test_spill_restore_parity_mixed_steps(smoke_model):
+    cfg, model, params = smoke_model
+    trace = _starved_trace(cfg)
+    base, _ = _run(model, params, trace)
+    spill, s1 = _run(model, params, trace, victim_pool_pages=32,
+                     mixed_steps=True, prefill_chunk_budget=8)
+    assert s1.n_restores > 0
+    assert spill == base
+
+
+def test_spill_with_prefix_sharing_keeps_shared_pages(smoke_model):
+    """Shared prefix pages are pinned by the directory and must NOT move
+    device->host: only private pages count toward spilled_pages."""
+    cfg, model, params = smoke_model
+    base_toks = np.asarray(data.lm_batch(5, 6, 40, cfg.vocab_size))
+    prefix = base_toks[5, :16].tolist()          # 2 shared pages at ps=8
+    trace = [(prefix + base_toks[i, : 3 + i].tolist(), 16) for i in range(4)]
+    off, s_off = _run(model, params, trace, slots=2, max_len=48, pages=7,
+                      prefix_sharing=True)
+    on, s_on = _run(model, params, trace, slots=2, max_len=48, pages=7,
+                    prefix_sharing=True, victim_pool_pages=32)
+    assert on == off
+    assert s_on.n_spills > 0 and s_on.n_restores == s_on.n_spills
+    # every spill moved only the victim's PRIVATE pages: with a 16-token
+    # directory-pinned prefix, at least the 2 prefix pages stayed resident
+    # per spill, so strictly fewer pages moved than the victims mapped
+    assert s_on.spilled_pages <= s_on.n_spills * (
+        s_on._pages_for(max(len(p) for p, _ in trace) + 16) - 2)
+    s_on.clear_prefix_cache()
+    s_on.audit()
+    assert len(s_on.free_pages) == s_on.num_pages - 1
+    assert int(s_on.page_ref.sum()) == 0
+
+
+def test_victim_pool_cap_falls_back_to_recompute(smoke_model):
+    cfg, model, params = smoke_model
+    trace = _starved_trace(cfg)
+    base, _ = _run(model, params, trace)
+    out, s = _run(model, params, trace, victim_pool_pages=1)
+    assert out == base
+    assert s.n_recompute_fallbacks > 0
+    assert s._victim_used == 0
+
+
+def test_victim_pool_requires_paged(smoke_model):
+    cfg, model, params = smoke_model
+    with pytest.raises(ValueError, match="victim_pool_pages"):
+        Scheduler(model, params, max_batch_slots=2, max_len=32,
+                  victim_pool_pages=8)
+
+
+# ---------------------------------------------------------------------------
+# submit hardening + backpressure
+# ---------------------------------------------------------------------------
+def test_submit_typed_rejections(smoke_model):
+    cfg, model, params = smoke_model
+    s = Scheduler(model, params, max_batch_slots=2, max_len=32,
+                  page_size=8, num_pages=9)
+    with pytest.raises(EmptyPrompt):
+        s.submit([], 4)
+    with pytest.raises(InvalidBudget):
+        s.submit([1, 2, 3], 0)
+    with pytest.raises(InvalidBudget):
+        s.submit([1, 2, 3], -2)
+    with pytest.raises(PromptTooLong):
+        s.submit(list(range(32)), 4)          # == max_len: no decode room
+    # typed errors are ValueErrors, so pre-existing callers keep working
+    assert issubclass(PromptTooLong, ValueError)
+    assert not s.queue
+
+
+def test_submit_overloaded_backpressure(smoke_model):
+    cfg, model, params = smoke_model
+    s = Scheduler(model, params, max_batch_slots=2, max_len=32,
+                  page_size=8, num_pages=9, max_queue=2)
+    s.submit([1, 2], 2)
+    s.submit([3, 4], 2)
+    with pytest.raises(Overloaded):
+        s.submit([5, 6], 2)
+    assert s.n_rejections == 1
+    assert s.stats["rejections"] == 1
+    res = s.run()                              # queued work still completes
+    assert len(res) == 2
+
+
+# ---------------------------------------------------------------------------
+# deadline / ttl shedding
+# ---------------------------------------------------------------------------
+def test_ttl_shedding_deterministic(smoke_model):
+    """A queued request older than ttl_steps is shed (deadline miss); its
+    rid never appears in the results and admitted work is untouched."""
+    cfg, model, params = smoke_model
+    s = Scheduler(model, params, max_batch_slots=1, max_len=32,
+                  page_size=8, num_pages=9, decode_chunk=2,
+                  audit_every_step=True)
+    keep = s.submit(list(range(10, 16)), 8)
+    shed = s.submit(list(range(30, 36)), 8, ttl_steps=0)
+    res = s.run()
+    assert keep in res and len(res[keep]) == 8
+    assert shed not in res
+    assert s.n_deadline_misses == 1
+    assert s.stats["deadline_misses"] == 1
+
+
+def test_deadline_ms_shedding_with_injected_clock(smoke_model):
+    cfg, model, params = smoke_model
+    now = [0.0]
+    s = Scheduler(model, params, max_batch_slots=1, max_len=32,
+                  page_size=8, num_pages=9, decode_chunk=2,
+                  clock=lambda: now[0])
+    keep = s.submit(list(range(10, 16)), 4)
+    shed = s.submit(list(range(30, 36)), 4, deadline_ms=50.0)
+    now[0] = 0.2                               # 200ms > 50ms deadline
+    res = s.run()
+    assert keep in res and shed not in res
+    assert s.n_deadline_misses == 1
+
+
+def test_shed_spilled_continuation_releases_victim_record(smoke_model):
+    """A spilled continuation shed at its ttl must release its host pages
+    and its refcount holds on still-resident shared pages."""
+    cfg, model, params = smoke_model
+    s = Scheduler(model, params, max_batch_slots=2, max_len=32,
+                  page_size=8, num_pages=6, decode_chunk=4,
+                  victim_pool_pages=32, audit_every_step=True)
+    trace = _starved_trace(cfg)
+    rids = [s.submit(p, t, ttl_steps=2) for p, t in trace]
+    res = s.run()
+    assert s.n_deadline_misses > 0            # the starved tail got shed
+    assert s._victim_used == 0 and not s._victim
+    assert len(s.free_pages) == s.num_pages - 1
+    done = [r for r in rids if r in res]
+    assert done                                # the head still completed
+
+
+# ---------------------------------------------------------------------------
+# reclaim stall (satellite: no spin when the directory is slot-pinned)
+# ---------------------------------------------------------------------------
+def test_reclaim_stalls_on_slot_pinned_directory(smoke_model):
+    """When every directory entry's pages are also held by live slots,
+    evicting them frees nothing — reclaim must break with a stall stat,
+    not churn the whole directory."""
+    cfg, model, params = smoke_model
+    s = Scheduler(model, params, max_batch_slots=2, max_len=32,
+                  page_size=8, num_pages=9, prefix_sharing=True)
+    # slot 0 holds pages for a 16-token prompt; register its prefixes so
+    # the directory's holds overlap the slot's (ref == 2 everywhere)
+    prompt = list(range(50, 66))
+    assert s._alloc_slot(0, len(prompt))
+    s.slot_req[0] = serve_lib.Request(0, prompt, 4)
+    s.lengths[0] = len(prompt)
+    s._register_prefixes(0, prompt, exact=False)
+    n_dir = len(s.prefix_dir)
+    assert n_dir > 0
+    free_before = len(s.free_pages)
+    s._reclaim(free_before + 1)                # unmeetable demand
+    assert s.n_reclaim_stalls == 1
+    assert len(s.prefix_dir) == n_dir          # nothing churned
+    assert len(s.free_pages) == free_before
+    s.audit()
+
+
+def test_reclaim_still_evicts_freeable_entries(smoke_model):
+    """Entries whose pages only the directory holds are still reclaimed."""
+    cfg, model, params = smoke_model
+    s = Scheduler(model, params, max_batch_slots=2, max_len=32,
+                  page_size=8, num_pages=9, prefix_sharing=True)
+    assert s._alloc_slot(0, 16)
+    s.slot_req[0] = serve_lib.Request(0, list(range(50, 66)), 4)
+    s.lengths[0] = 16
+    s._register_prefixes(0, list(range(50, 66)), exact=False)
+    s._free_slot_pages(0)                      # directory-only holds now
+    s.slot_req[0] = None
+    s.lengths[0] = 0
+    free_before = len(s.free_pages)
+    s._reclaim(free_before + 2)
+    assert len(s.free_pages) >= free_before + 2
+    assert s.n_reclaim_stalls == 0
+    s.audit()
+
+
+# ---------------------------------------------------------------------------
+# stats surface
+# ---------------------------------------------------------------------------
+def test_stats_keys_and_queue_depth(smoke_model):
+    cfg, model, params = smoke_model
+    out, s = _run(model, params, _starved_trace(cfg), victim_pool_pages=32)
+    st = s.stats
+    for k in ("steps", "evictions", "spills", "restores", "spilled_pages",
+              "spill_bytes", "recompute_fallbacks", "deadline_misses",
+              "rejections", "reclaim_stalls", "queue_depth_p50",
+              "queue_depth_p95", "victim_pool_pages_used",
+              "refcount_corruptions_detected"):
+        assert k in st
+    assert st["steps"] > 0
+    assert st["queue_depth_p95"] >= st["queue_depth_p50"] >= 0.0
+    # spill_bytes is the analytic page footprint
+    assert st["spill_bytes"] == st["spilled_pages"] * s._page_bytes
