@@ -9,26 +9,30 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 echo "== tier-1 test suite (includes interpret-mode kernel parity) =="
 python -m pytest -x -q
 
-echo "== scheduler fault suite under per-step invariant audit =="
-# re-runs the spill + fault-injection suites with the refcount/page-leak/
-# page-table auditor forced on after EVERY scheduler step (REPRO_AUDIT=1) —
-# chaos sweeps, forced evictions, alloc failures, restore delays and
-# corrupt-then-detect must all pass with zero leaked pages
-REPRO_AUDIT=1 python -m pytest -x -q tests/test_spill.py tests/test_faults.py
+echo "== scheduler fault + speculation suites under per-step invariant audit =="
+# re-runs the spill + fault-injection + speculative-decoding suites with
+# the refcount/page-leak/page-table auditor forced on after EVERY scheduler
+# step (REPRO_AUDIT=1) — chaos sweeps, forced evictions, alloc failures,
+# restore delays, corrupt-then-detect and draft-token page allocation with
+# mid-verify retirement must all pass with zero leaked pages
+REPRO_AUDIT=1 python -m pytest -x -q tests/test_spill.py tests/test_faults.py \
+    tests/test_speculative.py
 
 echo "== kernel + decode benches (parity + pruning probes) =="
 python -m benchmarks.run --only kernel_bench,decode_bench --json BENCH_kernels.json
 
 echo "== serving bench: ragged vs padded + paged-pool vs slot-cache "
 echo "   + prefix-sharing vs unshared + mixed-steps vs stall "
-echo "   + page-spill vs recompute overload (smoke) =="
+echo "   + page-spill vs recompute overload + speculative decoding (smoke) =="
 # leg 2 is the paged-serving smoke (long-tail trace, BENCH_serving.json#
 # longtail); leg 3 is the prefix-sharing smoke (shared-system-prompt trace,
 # BENCH_serving.json#prefix); leg 4 is the chunked-prefill smoke (stall
 # trace, BENCH_serving.json#mixed: p95 TBT + tokens/sec ratio); leg 5 is
 # the overload smoke (hierarchical page spill vs recompute-only eviction
 # recovery + the bounded-queue/deadline admission probe,
-# BENCH_serving.json#overload) — all must not regress vs their baselines
+# BENCH_serving.json#overload); leg 6 is the speculative-decoding smoke
+# (agent trace, BENCH_serving.json#speculative: tokens per model step +
+# p50 TBT delta) — all must not regress vs their baselines
 python -m benchmarks.serving_bench --smoke
 
 echo "== bench-regression gate: recorded speedups vs floors =="

@@ -440,7 +440,18 @@ def expected_kv_block_iters(
 
     `q_valid_len` (default `q_len`) mirrors the ragged-Q early-out: q blocks
     at or past it are skipped outright, and the causal reach of a partially
-    valid q block ends at its last VALID query row."""
+    valid q block ends at its last VALID query row.
+
+    Speculative VERIFY rows (the multi-query decode kernel) are the
+    `block_q == q_len` case: the decode grid has no q-block axis — all
+    `q_len` verify positions ride one sublane-packed block whose causal
+    reach per KV partition is the UNION over its valid rows, i.e. exactly
+    one q block here ending at row `q_valid_len - 1`.  The decode kernel's
+    per-partition `needed` gate therefore counts
+    `expected_kv_block_iters(Sq, k_len, q_offset, block_q=Sq,
+    block_k=partition, kv_valid_len=kv_len, q_valid_len=q_len_b)`
+    iterations per KV head — the probe tests in `test_decode_kernel.py`
+    hold the kernels to this."""
     kv_valid_len = k_len if kv_valid_len is None else kv_valid_len
     q_valid_len = q_len if q_valid_len is None else q_valid_len
     n_q = -(-q_len // block_q)

@@ -139,12 +139,18 @@ def pim_flash_attention(
     decode_kernel: bool = True,
     decode_block_k: int = 256,
     q_len=None,
+    force_decode_kernel: bool = False,
 ) -> jax.Array:
     """Fused flash-style PIM attention over the int8 KV cache.
 
     Single-token steps (Sq == 1) auto-dispatch to the split-K flash-decode
     kernel when `decode_kernel` is set — full grid occupancy across KV
     partitions instead of one padded q block serializing over the cache.
+    `force_decode_kernel` extends that dispatch to Sq > 1: speculative
+    VERIFY launches score each row's q_len drafted positions through the
+    split-K grid, keeping every position bit-identical to the Sq == 1
+    decode step it replaces (the auto-rule would pick the prefill kernel,
+    whose numerics only match to rounding).
 
     `q_len` is the optional (B,) ragged-Q vector: row b's valid query count
     in this launch (rows past it early-out — see the kernels' docstrings).
@@ -155,7 +161,7 @@ def pim_flash_attention(
         q, cache, pim_cfg.input_bits)
     if q_len is not None:
         q_len = jnp.asarray(q_len, jnp.int32)
-    if Sq == 1 and decode_kernel:
+    if decode_kernel and (Sq == 1 or force_decode_kernel):
         o = _dec_k.pim_decode_pallas(
             q_q, qs, k_q, ks, v_q, vs,
             jnp.asarray(q_offset, jnp.int32), cache.length,
@@ -184,6 +190,7 @@ def pim_paged_flash_attention(
     out_dtype=jnp.bfloat16,
     decode_kernel: bool = True,
     q_len=None,
+    force_decode_kernel: bool = False,
 ) -> jax.Array:
     """Fused PIM attention over the paged KV pool: both kernels walk the
     slot's page-table row instead of a contiguous cache (pages are the
@@ -193,6 +200,8 @@ def pim_paged_flash_attention(
 
     `q_len` is the optional (B,) ragged-Q vector (valid query rows per slot;
     0 = the row contributes nothing to this launch and costs zero compute).
+    `force_decode_kernel` routes Sq > 1 speculative-verify launches through
+    the split-K decode grid (see `pim_flash_attention`).
 
     Sliding-window layers are not paged (the scheduler gates them out), so
     there is no `window` parameter here.
@@ -202,7 +211,7 @@ def pim_paged_flash_attention(
     k_q, ks, v_q, vs = paged_kernel_layout(pool)
     if q_len is not None:
         q_len = jnp.asarray(q_len, jnp.int32)
-    if Sq == 1 and decode_kernel:
+    if decode_kernel and (Sq == 1 or force_decode_kernel):
         o = _dec_k.pim_decode_pallas(
             q_q, qs, k_q, ks, v_q, vs,
             jnp.asarray(q_offset, jnp.int32), jnp.asarray(kv_len, jnp.int32),

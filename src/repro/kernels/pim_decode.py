@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: split-K flash decode for Sq == 1 PIM attention.
+"""Pallas TPU kernel: split-K flash decode for short-Sq PIM attention.
 
 The prefill kernel (`pim_attention.py`) serializes over the KV axis per
 (head, q-block) grid cell — fine for prefill where the q axis supplies
@@ -12,6 +12,13 @@ paper's integer dataflow:
     sublane dimension of a single (G, Dh) q tile, so the Score matmul per KV
     block is one (G, Dh) x (Dh, bk) MXU call against the *raw* int8 cache
     (no head-expanded KV reads — decode streams Hkv, not H, caches).
+    Speculative VERIFY rows (Sq == k+1 drafted positions) pack the extra
+    queries into the same sublane dimension — row r = l*G + g is query
+    position l of q head g, each with its own causal bound q_pos + l — so
+    a multi-token verification is still one split-K launch per KV head,
+    and row l's arithmetic is bit-identical to the Sq == 1 launch that a
+    plain decode step at position q_pos + l would run (same per-row mask,
+    same exact-zero contribution from masked lanes).
   * **Split-K grid** — grid (B*Hkv, ceil(Sk/block_k)): every KV partition is
     an independent grid cell emitting partial (m, denom, acc) in the LUT
     domain.  Partitions beyond `kv_len` (or outside causal/window reach of
@@ -52,34 +59,38 @@ def _decode_kernel(
     pt_ref,                            # SMEM (nb, n_k_blocks) page table
     q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, table_ref,
     m_ref, den_ref, acc_ref, iters_ref,
-    *, block_k: int, g_pad: int, causal: bool, window: int,
+    *, block_k: int, r_pad: int, g: int, sq: int, causal: bool, window: int,
     sm_scale: float, score_scale: float, input_bits: int, hkv_per_b: int,
 ):
     ki = pl.program_id(1)
     # per-sequence scalars: each (b, hkv) grid row early-outs against ITS OWN
     # [q_pos, kv_len] — finished/empty slots (kv_len == 0) cost zero compute
     b = pl.program_id(0) // hkv_per_b
-    q_pos = scalars_ref[0, b]          # absolute position of the single query
+    q_pos = scalars_ref[0, b]       # absolute position of query row 0
     kv_len = scalars_ref[1, b]
+    q_len = scalars_ref[2, b]       # valid query rows (<= sq) in this launch
     # unallocated pages (id < 0) can never contribute: their tokens are
     # beyond kv_len by the allocator invariant, and their VMEM block is a
     # clamped placeholder fetch — skip before any compute (dense callers
     # pass an all-zero dummy table, so this is a no-op there).  q_len_b == 0
     # marks a row that contributes no decode token to this launch (e.g. a
     # prefill-chunk row of a mixed batch, served by the ragged-Q prefill
-    # kernel instead): zero partitions, exact-zero combine.
-    needed = (pt_ref[b, ki] >= 0) & (scalars_ref[2, b] > 0) & _block_needed(
-        ki * block_k, block_k, q_pos, q_pos, kv_len, causal, window)
+    # kernel instead): zero partitions, exact-zero combine.  The partition
+    # gate uses the LAST valid query's causal reach (q_pos + q_len - 1) —
+    # the union of the per-row reaches below.
+    q_hi = q_pos + jnp.minimum(q_len, sq) - 1
+    needed = (pt_ref[b, ki] >= 0) & (q_len > 0) & _block_needed(
+        ki * block_k, block_k, q_pos, q_hi, kv_len, causal, window)
 
     @pl.when(needed)
     def _body():
         iters_ref[0, 0] = 1
-        q = q_ref[...].reshape(g_pad, q_ref.shape[-1])    # (G, Dh) int8
+        q = q_ref[...].reshape(r_pad, q_ref.shape[-1])    # (R, Dh) int8
         k = k_ref[...].reshape(block_k, k_ref.shape[-1])  # (bk, Dh) int8
-        s_int = jax.lax.dot_general(   # (G, bk) int32 — the PIM Score engine
+        s_int = jax.lax.dot_general(   # (R, bk) int32 — the PIM Score engine
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
         )
-        qs = qs_ref[...].reshape(g_pad)                   # (G,) f32
+        qs = qs_ref[...].reshape(r_pad)                   # (R,) f32
         ks = ks_ref[...].reshape(block_k)                 # (bk,) f32
         s_real = s_int.astype(jnp.float32) * qs[:, None] * ks[None, :] * sm_scale
 
@@ -87,23 +98,29 @@ def _decode_kernel(
         codes = jnp.clip(jnp.round(s_real / score_scale), -qmax - 1.0, qmax)
 
         k_pos = ki * block_k + jax.lax.broadcasted_iota(
-            jnp.int32, (g_pad, block_k), 1
+            jnp.int32, (r_pad, block_k), 1
         )
-        mask = k_pos < kv_len
+        # packed row r = l*G + g is query position q_pos + l of q head g:
+        # each row masks against its OWN causal bound, so a verify row's
+        # arithmetic is exactly the Sq == 1 launch at that position (rows
+        # past q_len — including the sublane padding — are fully masked
+        # and contribute exact zeros)
+        l = jax.lax.broadcasted_iota(jnp.int32, (r_pad, block_k), 0) // g
+        mask = (k_pos < kv_len) & (l < jnp.minimum(q_len, sq))
         if causal:
-            mask &= k_pos <= q_pos
+            mask &= k_pos <= q_pos + l
         if window:
-            mask &= k_pos > q_pos - window
+            mask &= k_pos > q_pos + l - window
         codes = jnp.where(mask, codes, _NEG)
 
         table_f = table_ref[...].astype(jnp.float32)
-        m = jnp.max(codes, axis=-1, keepdims=True)           # (G, 1)
+        m = jnp.max(codes, axis=-1, keepdims=True)           # (R, 1)
         d = jnp.clip(m - codes, 0, 255).astype(jnp.int32)
-        e = jnp.where(mask, _lut_gather(d, table_f), 0.0)    # (G, bk)
+        e = jnp.where(mask, _lut_gather(d, table_f), 0.0)    # (R, bk)
         v = v_ref[...].reshape(block_k, v_ref.shape[-1])     # (bk, Dh) int8
         vs = vs_ref[...].reshape(block_k)                    # (bk,) f32
         v_deq = v.astype(jnp.float32) * vs[:, None]
-        acc = jax.lax.dot_general(     # (G, Dh)
+        acc = jax.lax.dot_general(     # (R, Dh)
             e, v_deq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
         )
         m_ref[...] = m[:, 0][None, None]
@@ -126,8 +143,8 @@ def _decode_kernel(
     ),
 )
 def pim_decode_pallas(
-    q_q: jax.Array,        # (BH, 1, Dh) int8
-    q_scale: jax.Array,    # (BH, 1) f32
+    q_q: jax.Array,        # (BH, Sq, Dh) int8 (Sq == 1, or k+1 verify rows)
+    q_scale: jax.Array,    # (BH, Sq) f32
     k_q: jax.Array,        # (BHkv, Sk, Dh) int8, or (Hkv, P, ps, Dh) paged
     k_scale: jax.Array,    # (BHkv, Sk) f32, or (Hkv, P, ps) paged
     v_q: jax.Array,        # like k_q
@@ -144,19 +161,28 @@ def pim_decode_pallas(
     page_table: jax.Array | None = None,   # (B, max_pages) int32, -1 = free
     q_len: jax.Array | None = None,        # () or (B,) int32, 0 = skip row
 ):
-    """Split-K decode attention. Returns (BH, 1, Dh) f32.
+    """Split-K decode attention. Returns (BH, Sq, Dh) f32.
 
     `q_offset` / `kv_len` may be () scalars or (B,) per-slot vectors (ragged
     continuous batching): every (slot, kv-head, k-partition) grid cell
     early-outs against its own sequence length, so a retired/empty slot
     (kv_len == 0) executes zero KV partitions.
 
-    `q_len` (default 1 everywhere) marks which rows contribute a decode
-    token to this launch: a row with q_len == 0 runs zero partitions and
-    returns exact zeros — in a mixed prefill+decode step the prefill-chunk
-    rows are masked out here and served by the ragged-Q prefill kernel in
-    the same device program, while rows with q_len > 0 stay bit-identical
-    to an unmasked launch.
+    `q_len` (default 1 everywhere) marks how many of a row's Sq query
+    positions contribute to this launch: a row with q_len == 0 runs zero
+    partitions and returns exact zeros — in a mixed prefill+decode step the
+    prefill-chunk rows are masked out here and served by the ragged-Q
+    prefill kernel in the same device program, while rows with q_len > 0
+    stay bit-identical to an unmasked launch.
+
+    Sq > 1 is the speculative-verify shape: slot b's queries sit at
+    absolute positions q_offset_b .. q_offset_b + q_len_b - 1 (drafted
+    continuation of its sequence), packed into the sublane dimension next
+    to the GQA heads — so one launch scores all k+1 positions against the
+    slot's full (possibly paged) KV, and each position's output is
+    bit-identical to the Sq == 1 decode launch a non-speculative step
+    would have run at that position.  Query rows past q_len_b are fully
+    masked (exact-zero contribution, garbage output — callers slice).
 
     With `page_table` set, K/V operands are a page POOL in head-major layout
     (`(Hkv, num_pages, page_size, Dh)`, see `ops.paged_kernel_layout`) and
@@ -169,10 +195,9 @@ def pim_decode_pallas(
     KV partitions that actually ran (sum == blocks touched this token).
     """
     BH, Sq, Dh = q_q.shape
-    assert Sq == 1, "pim_decode_pallas is specialized to single-token decode"
     q_off = jnp.reshape(jnp.asarray(q_offset, jnp.int32), (-1,))
     kvl = jnp.reshape(jnp.asarray(kv_len, jnp.int32), (-1,))
-    ql = jnp.reshape(jnp.asarray(1 if q_len is None else q_len, jnp.int32),
+    ql = jnp.reshape(jnp.asarray(Sq if q_len is None else q_len, jnp.int32),
                      (-1,))
     nb = max(q_off.shape[0], kvl.shape[0], ql.shape[0])
 
@@ -196,22 +221,26 @@ def pim_decode_pallas(
         pt = jnp.zeros((nb, n_k_blocks), jnp.int32)
     assert BH % BHkv == 0
     G = BH // BHkv
-    g_pad = max(8, ((G + 7) // 8) * 8)
+    R = Sq * G
+    r_pad = max(8, ((R + 7) // 8) * 8)
     assert BHkv % nb == 0, (BHkv, nb)
     hkv_per_b = BHkv // nb
 
-    # pack the q heads of each KV group into the sublane dimension
-    qg = q_q[:, 0].reshape(BHkv, G, Dh)
-    qsg = q_scale[:, 0].reshape(BHkv, G)
-    if g_pad != G:
-        qg = jnp.pad(qg, ((0, 0), (0, g_pad - G), (0, 0)))
-        qsg = jnp.pad(qsg, ((0, 0), (0, g_pad - G)))
+    # pack the q heads of each KV group — and, for verify launches, every
+    # query position — into the sublane dimension: row r = l*G + g
+    qg = (q_q.reshape(BHkv, G, Sq, Dh).transpose(0, 2, 1, 3)
+          .reshape(BHkv, R, Dh))
+    qsg = q_scale.reshape(BHkv, G, Sq).transpose(0, 2, 1).reshape(BHkv, R)
+    if r_pad != R:
+        qg = jnp.pad(qg, ((0, 0), (0, r_pad - R), (0, 0)))
+        qsg = jnp.pad(qsg, ((0, 0), (0, r_pad - R)))
     grid = (BHkv, n_k_blocks)
     table, frac = build_exp_table(lut_cfg)
 
     kernel = functools.partial(
         _decode_kernel,
-        block_k=block_k, g_pad=g_pad, causal=causal, window=window,
+        block_k=block_k, r_pad=r_pad, g=G, sq=Sq, causal=causal,
+        window=window,
         sm_scale=1.0 / (Dh ** 0.5), score_scale=lut_cfg.score_scale,
         input_bits=lut_cfg.input_bits, hkv_per_b=hkv_per_b,
     )
@@ -242,8 +271,8 @@ def pim_decode_pallas(
             num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, g_pad, Dh), lambda b, k, s, t: (b, 0, 0)),
-                pl.BlockSpec((1, g_pad), lambda b, k, s, t: (b, 0)),
+                pl.BlockSpec((1, r_pad, Dh), lambda b, k, s, t: (b, 0, 0)),
+                pl.BlockSpec((1, r_pad), lambda b, k, s, t: (b, 0)),
                 kv_spec,
                 kvs_spec,
                 kv_spec,
@@ -251,16 +280,16 @@ def pim_decode_pallas(
                 pl.BlockSpec((256,), lambda b, k, s, t: (0,)),
             ],
             out_specs=[
-                pl.BlockSpec((1, 1, g_pad), lambda b, k, s, t: (b, k, 0)),
-                pl.BlockSpec((1, 1, g_pad), lambda b, k, s, t: (b, k, 0)),
-                pl.BlockSpec((1, 1, g_pad, Dh), lambda b, k, s, t: (b, k, 0, 0)),
+                pl.BlockSpec((1, 1, r_pad), lambda b, k, s, t: (b, k, 0)),
+                pl.BlockSpec((1, 1, r_pad), lambda b, k, s, t: (b, k, 0)),
+                pl.BlockSpec((1, 1, r_pad, Dh), lambda b, k, s, t: (b, k, 0, 0)),
                 pl.BlockSpec((1, 1), lambda b, k, s, t: (b, k)),
             ],
         ),
         out_shape=[
-            jax.ShapeDtypeStruct((BHkv, n_k_blocks, g_pad), jnp.float32),
-            jax.ShapeDtypeStruct((BHkv, n_k_blocks, g_pad), jnp.float32),
-            jax.ShapeDtypeStruct((BHkv, n_k_blocks, g_pad, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((BHkv, n_k_blocks, r_pad), jnp.float32),
+            jax.ShapeDtypeStruct((BHkv, n_k_blocks, r_pad), jnp.float32),
+            jax.ShapeDtypeStruct((BHkv, n_k_blocks, r_pad, Dh), jnp.float32),
             jax.ShapeDtypeStruct((BHkv, n_k_blocks), jnp.int32),
         ],
         interpret=interpret,
@@ -273,14 +302,15 @@ def pim_decode_pallas(
     # partials never changes the f32 sums, which is what keeps paged (table-
     # width partitions) bit-identical to dense (ceil(Sk/bk) partitions).
     table_f = table.astype(jnp.float32)
-    m_glob = jnp.max(part_m, axis=1, keepdims=True)          # (BHkv, 1, G)
+    m_glob = jnp.max(part_m, axis=1, keepdims=True)          # (BHkv, 1, R)
     d = jnp.clip(m_glob - part_m, 0, 255).astype(jnp.int32)
-    resc = jnp.take(table_f, d) / float(1 << frac)           # (BHkv, nb, G)
+    resc = jnp.take(table_f, d) / float(1 << frac)           # (BHkv, nb, R)
     resc = jnp.where(part_m <= _NEG / 2, 0.0, resc)
-    den = jnp.sum(part_den * resc, axis=1)                   # (BHkv, G)
-    acc = jnp.sum(part_acc * resc[..., None], axis=1)        # (BHkv, G, Dh)
+    den = jnp.sum(part_den * resc, axis=1)                   # (BHkv, R)
+    acc = jnp.sum(part_acc * resc[..., None], axis=1)        # (BHkv, R, Dh)
     out = acc / jnp.maximum(den, 1.0)[..., None]
-    out = out[:, :G].reshape(BH, 1, Dh)
+    out = (out[:, :R].reshape(BHkv, Sq, G, Dh).transpose(0, 2, 1, 3)
+           .reshape(BH, Sq, Dh))
     if return_iters:
         return out, iters
     return out

@@ -19,7 +19,10 @@ stalls the decoding slots.  --top-p enables nucleus sampling on any path.
 (evictions move private KV pages device->host and restore them on
 re-admission instead of recomputing the prompt), and --deadline-ms /
 --max-queue bound the admission queue (stale queued requests are shed,
-over-depth submits rejected with backpressure).
+over-depth submits rejected with backpressure).  --speculate drafts up to
+--draft-len tokens per slot by prompt lookup (--draft-mode ngram) and
+verifies them in one ragged multi-token launch per step — greedy outputs
+stay bit-identical and sampling stays distribution-preserving.
 """
 from __future__ import annotations
 
@@ -108,6 +111,18 @@ def main(argv=None):
                     help="bounded admission queue: submits beyond this "
                          "depth are rejected with backpressure (0 = "
                          "unbounded)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="speculative decoding: draft tokens by prompt "
+                         "lookup and verify them in one ragged multi-token "
+                         "launch per step (requires --continuous-batching; "
+                         "greedy outputs bit-identical, sampling "
+                         "distribution-preserving)")
+    ap.add_argument("--draft-len", type=int, default=4,
+                    help="max drafted tokens per speculative step (the "
+                         "per-slot depth adapts between 1 and this cap)")
+    ap.add_argument("--draft-mode", default="ngram", choices=["ngram"],
+                    help="draft proposer: 'ngram' = self-speculative "
+                         "prompt lookup (no draft model)")
     args = ap.parse_args(argv)
     if args.page_size and not args.continuous_batching:
         ap.error("--page-size requires --continuous-batching")
@@ -133,6 +148,10 @@ def main(argv=None):
         ap.error("--max-queue must be >= 0")
     if (args.deadline_ms or args.max_queue) and not args.continuous_batching:
         ap.error("--deadline-ms/--max-queue require --continuous-batching")
+    if args.speculate and not args.continuous_batching:
+        ap.error("--speculate requires --continuous-batching")
+    if args.draft_len < 1:
+        ap.error("--draft-len must be >= 1")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     import dataclasses
@@ -174,7 +193,9 @@ def main(argv=None):
         mixed_dispatch=args.mixed_dispatch,
         victim_pool_pages=args.victim_pool_pages,
         max_queue=args.max_queue,
-        deadline_ms=args.deadline_ms or None)
+        deadline_ms=args.deadline_ms or None,
+        speculate=args.speculate, draft_len=args.draft_len,
+        draft_mode=args.draft_mode)
     jax.block_until_ready(out)
     dt = time.time() - t0
     if args.continuous_batching and eos is not None:
@@ -199,6 +220,8 @@ def main(argv=None):
         mode = "scan-fused"
     if args.mixed_steps:
         mode += "+mixed-steps"
+    if args.speculate:
+        mode += f"+speculative({args.draft_mode},k={args.draft_len})"
     print(f"[serve] arch={cfg.name} attn={cfg.attn_impl} mode={mode} "
           f"temp={args.temperature} top_k={args.top_k} top_p={args.top_p} "
           f"generated {out.shape} in {dt:.2f}s "

@@ -125,17 +125,20 @@ def attn_block_init_state(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def _serve_attend(q, cache, offset, cfg: ModelConfig, window: int, causal: bool,
-                  q_len=None):
+                  q_len=None, force_decode_kernel: bool = False):
     if cfg.attn_impl == "kernel":
         from repro.kernels import ops
         # Sq == 1 steps dispatch to the split-K flash-decode kernel (full
         # KV-partition grid occupancy) unless cfg.decode_kernel opts out.
+        # `force_decode_kernel` keeps that dispatch for Sq > 1 speculative
+        # VERIFY rows (bit-identity with the per-token decode launches).
         return ops.pim_flash_attention(
             q, cache, offset, cfg.pim, cfg.lut, causal=causal, window=window,
             out_dtype=jnp.dtype(cfg.compute_dtype),
             decode_kernel=cfg.decode_kernel,
             decode_block_k=cfg.decode_block_k,
             q_len=q_len,
+            force_decode_kernel=force_decode_kernel,
         )
     # behavioral path: per-row two-pass arithmetic — rows past a caller's
     # q_len are garbage the caller already ignores, so no masking is needed
@@ -146,7 +149,8 @@ def _serve_attend(q, cache, offset, cfg: ModelConfig, window: int, causal: bool,
 
 
 def _serve_attend_paged(q, pool, pages, kv_len, offset, cfg: ModelConfig,
-                        causal: bool, q_len=None):
+                        causal: bool, q_len=None,
+                        force_decode_kernel: bool = False):
     """Attend over the paged pool: the kernel path walks the page table in
     both Pallas kernels; the behavioral path runs the exact two-pass pipeline
     over a gathered slot-dense view (the bit-exact paged reference)."""
@@ -157,6 +161,7 @@ def _serve_attend_paged(q, pool, pages, kv_len, offset, cfg: ModelConfig,
             out_dtype=jnp.dtype(cfg.compute_dtype),
             decode_kernel=cfg.decode_kernel,
             q_len=q_len,
+            force_decode_kernel=force_decode_kernel,
         )
     dense = A.paged_gather(pool, pages, kv_len)
     return A.pim_attention(
@@ -167,41 +172,50 @@ def _serve_attend_paged(q, pool, pages, kv_len, offset, cfg: ModelConfig,
 
 def _mixed_attend(q, cache, offset, kv_len, seq_lens, decode_rows,
                   cfg: ModelConfig, causal: bool, window: int = 0,
-                  pages=None):
+                  pages=None, verify_len: int = 1):
     """Mixed prefill+decode attention (kernel path): ONE device program, two
     early-out-complementary launches.
 
     The ragged-Q prefill launch serves the prefill-chunk rows (decode rows
-    are masked to q_len 0 — zero KV iterations); the Sq == 1 launch serves
+    are masked to q_len 0 — zero KV iterations); the decode launch serves
     the decode rows through EXACTLY the dispatch an unchunked decode step
-    uses (split-K decode kernel, or the prefill kernel at Sq == 1 when
+    uses (split-K decode kernel, or the prefill kernel when
     cfg.decode_kernel is off) with prefill rows masked to kv_len 0 — also
     zero compute.  Each row therefore pays only its own KV blocks AND
     produces the same bits it would produce in a separate unchunked
     prefill/decode dispatch, which is what keeps mixed scheduler steps
     bit-identical to the admit-then-decode baseline on the kernel path.
+
+    `verify_len` (static, default 1) is the speculative-verify width: a
+    decode row carries seq_lens[b] in [1, verify_len] query tokens (its
+    current token plus drafted continuations) whose columns [0, seq_lens)
+    all route through the decode launch — each position bit-identical to
+    the Sq == 1 decode step a non-speculative scheduler would have run.
     """
     sl = jnp.asarray(seq_lens, jnp.int32)
+    Lv = min(int(verify_len), q.shape[1])
     ql_prefill = jnp.where(decode_rows, 0, sl)
-    ql_decode = decode_rows.astype(jnp.int32)
+    ql_decode = jnp.where(decode_rows, jnp.minimum(sl, Lv), 0)
     kv_decode = jnp.where(decode_rows, kv_len, 0)
     if pages is not None:
         o = _serve_attend_paged(q, cache, pages, kv_len, offset, cfg, causal,
                                 q_len=ql_prefill)
-        od = _serve_attend_paged(q[:, :1], cache, pages, kv_decode, offset,
-                                 cfg, causal, q_len=ql_decode)
+        od = _serve_attend_paged(q[:, :Lv], cache, pages, kv_decode, offset,
+                                 cfg, causal, q_len=ql_decode,
+                                 force_decode_kernel=True)
     else:
         o = _serve_attend(q, cache, offset, cfg, window, causal,
                           q_len=ql_prefill)
-        od = _serve_attend(q[:, :1], cache._replace(length=kv_decode), offset,
-                           cfg, window, causal, q_len=ql_decode)
-    o0 = jnp.where(decode_rows[:, None, None], od[:, 0], o[:, 0])
-    return jnp.concatenate([o0[:, None], o[:, 1:]], axis=1)
+        od = _serve_attend(q[:, :Lv], cache._replace(length=kv_decode), offset,
+                           cfg, window, causal, q_len=ql_decode,
+                           force_decode_kernel=True)
+    head = jnp.where(decode_rows[:, None, None, None], od, o[:, :Lv])
+    return jnp.concatenate([head, o[:, Lv:]], axis=1)
 
 
 def attn_block_fwd_serve(params, x, cache: A.KVCache, offset, cfg: ModelConfig,
                          window: int = 0, causal: bool = True, seq_lens=None,
-                         pages=None, decode_rows=None):
+                         pages=None, decode_rows=None, verify_len: int = 1):
     """Prefill (S>1, offset=0) or decode (S=1, offset=cache fill).
 
     Ragged slot mode: `offset` may be a (B,) vector of per-slot write
@@ -228,6 +242,12 @@ def attn_block_fwd_serve(params, x, cache: A.KVCache, offset, cfg: ModelConfig,
     unchunked kernels inside one program (`_mixed_attend`); the behavioral
     path needs no routing — its per-row arithmetic is already identical for
     any batch composition.
+
+    Speculative verify mode: `verify_len` (static int > 1) widens the
+    decode class — a decode row's seq_lens may be up to `verify_len`
+    (current token + drafted continuations), all verified through the
+    split-K decode launch in one step.  The behavioral path again needs
+    no routing (ragged per-row positions already cover it).
     """
     B, S, _ = x.shape
     ragged = getattr(offset, "ndim", 0) >= 1
@@ -249,7 +269,7 @@ def attn_block_fwd_serve(params, x, cache: A.KVCache, offset, cfg: ModelConfig,
                            else jnp.asarray(seq_lens, jnp.int32))
         if decode_rows is not None and cfg.attn_impl == "kernel":
             o = _mixed_attend(q, cache, offset, kv_len, seq_lens, decode_rows,
-                              cfg, causal, pages=pages)
+                              cfg, causal, pages=pages, verify_len=verify_len)
         else:
             o = _serve_attend_paged(q, cache, pages, kv_len, offset, cfg,
                                     causal, q_len=seq_lens)
@@ -260,7 +280,8 @@ def attn_block_fwd_serve(params, x, cache: A.KVCache, offset, cfg: ModelConfig,
         cache = A.cache_write_ragged(cache, k, v, offset, cfg.pim, seq_lens)
         if decode_rows is not None and cfg.attn_impl == "kernel":
             o = _mixed_attend(q, cache, offset, cache.length, seq_lens,
-                              decode_rows, cfg, causal, window=window)
+                              decode_rows, cfg, causal, window=window,
+                              verify_len=verify_len)
         else:
             o = _serve_attend(q, cache, offset, cfg, window, causal,
                               q_len=seq_lens)

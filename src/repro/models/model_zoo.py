@@ -120,9 +120,12 @@ def build_model(cfg: ModelConfig) -> Model:
                             page_size=page_size, num_pages=num_pages)
 
     def forward_serve(params, batch, cache, offset, enc_out=None,
-                      seq_lens=None, pages=None, decode_rows=None):
+                      seq_lens=None, pages=None, decode_rows=None,
+                      logit_positions=None, verify_len=1):
         return T.forward_serve(params, batch, cache, offset, cfg,
                                enc_out=enc_out, seq_lens=seq_lens,
-                               pages=pages, decode_rows=decode_rows)
+                               pages=pages, decode_rows=decode_rows,
+                               logit_positions=logit_positions,
+                               verify_len=verify_len)
 
     return Model(cfg, init, forward_train, loss, init_cache, forward_serve)

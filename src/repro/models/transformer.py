@@ -90,17 +90,19 @@ def _block_init_state(kind: str, cfg: ModelConfig, batch: int, max_len: int,
 
 def _block_fwd_serve(kind: str, params, x, state, offset, cfg: ModelConfig,
                      enc_out=None, seq_lens=None, pages=None,
-                     decode_rows=None):
+                     decode_rows=None, verify_len: int = 1):
     if kind in ("attn", "moe"):
         return B.attn_block_fwd_serve(params, x, state, offset, cfg,
                                       window=0, causal=cfg.causal,
                                       seq_lens=seq_lens, pages=pages,
-                                      decode_rows=decode_rows)
+                                      decode_rows=decode_rows,
+                                      verify_len=verify_len)
     if kind == "attn_local":
         return B.attn_block_fwd_serve(params, x, state, offset, cfg,
                                       window=cfg.window, causal=True,
                                       seq_lens=seq_lens, pages=pages,
-                                      decode_rows=decode_rows)
+                                      decode_rows=decode_rows,
+                                      verify_len=verify_len)
     if kind == "xattn":
         return B.xattn_block_fwd_serve(params, x, state, offset, cfg,
                                        enc_out=enc_out)
@@ -441,7 +443,9 @@ def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
                   cfg: ModelConfig, enc_out: Optional[jax.Array] = None,
                   seq_lens: Optional[jax.Array] = None,
                   pages: Optional[jax.Array] = None,
-                  decode_rows: Optional[jax.Array] = None):
+                  decode_rows: Optional[jax.Array] = None,
+                  logit_positions: Optional[jax.Array] = None,
+                  verify_len: int = 1):
     """One serve step (prefill chunk, single-token decode, or a MIXED batch
     of both).
 
@@ -464,8 +468,18 @@ def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
     prefill and decode steps (see `blocks._mixed_attend`).  Only attention
     stacks support it (the same gate as the slot scheduler).
 
-    Returns (logits_last (B,V), new_cache, enc_out) — enc_out is computed on
-    the first (offset==0) call for encoder-decoder archs and threaded back.
+    Speculative verify mode: `verify_len` (static int) widens the decode
+    row class to up to `verify_len` query tokens per row (current token +
+    drafted continuations), and `logit_positions` — a (B, P) int32 matrix
+    of in-step column indices — requests logits at ALL of a row's verify
+    positions instead of only its last valid one; the return's logits leaf
+    is then (B, P, V).  Per-column hidden states are position-wise
+    identical to the single-token decode steps they replace, which is what
+    makes draft acceptance exact.
+
+    Returns (logits (B,V), new_cache, enc_out) — logits are (B, P, V) when
+    `logit_positions` is given; enc_out is computed on the first
+    (offset==0) call for encoder-decoder archs and threaded back.
     """
     pat, R, tail = pattern_layout(cfg)
     x = _embed_inputs(params, batch, cfg, offset=offset)
@@ -478,7 +492,8 @@ def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
         for p, st in zip(params["dense_prefix"], cache["dense_prefix"]):
             x, st = _block_fwd_serve("attn", p, x, st, offset, cfg,
                                      seq_lens=seq_lens, pages=pages,
-                                     decode_rows=decode_rows)
+                                     decode_rows=decode_rows,
+                                     verify_len=verify_len)
             dp.append(st)
         new_cache["dense_prefix"] = tuple(dp)
 
@@ -489,7 +504,8 @@ def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
             x, st = _block_fwd_serve(kind, group_params[j], x, group_state[j],
                                      offset, cfg, enc_out=enc_out,
                                      seq_lens=seq_lens, pages=pages,
-                                     decode_rows=decode_rows)
+                                     decode_rows=decode_rows,
+                                     verify_len=verify_len)
             new_states.append(st)
         return x, tuple(new_states)
 
@@ -502,9 +518,19 @@ def forward_serve(params, batch: Dict[str, jax.Array], cache, offset,
             _moe_kind_for_layer(cfg, kind, R * len(pat) + i),
             params["tail"][i], x, cache["tail"][i], offset, cfg,
             enc_out=enc_out, seq_lens=seq_lens, pages=pages,
-            decode_rows=decode_rows)
+            decode_rows=decode_rows, verify_len=verify_len)
         new_tail.append(st)
     new_cache["tail"] = tuple(new_tail)
+    if logit_positions is not None:
+        # verify mode: logits at EVERY requested column — (B, P, V).
+        # Per-position hidden states are position-wise, so column j equals
+        # the single-position gather a plain decode step would have taken.
+        idx = jnp.clip(jnp.asarray(logit_positions, jnp.int32),
+                       0, x.shape[1] - 1)
+        x = jnp.take_along_axis(x, idx[:, :, None], axis=1)
+        x = L.norm_apply(params["final_norm"], x, cfg.norm)
+        head = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        return L.unembed_apply(head, x), new_cache, enc_out
     if seq_lens is not None:
         # per-row last valid position (rows with seq_len == 0 read index 0;
         # their logits are garbage and the caller masks them out)

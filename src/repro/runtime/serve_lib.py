@@ -132,20 +132,32 @@ def sample_logits(logits: jax.Array, key: Optional[jax.Array],
     """
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1)
-    l = logits.astype(jnp.float32) / temperature
+    l = _truncate_logits(logits.astype(jnp.float32) / temperature,
+                         top_k, top_p)
+    return jax.random.categorical(key, l, axis=-1)
+
+
+def _truncate_logits(l: jax.Array, top_k: int, top_p: float) -> jax.Array:
+    """top_k / nucleus truncation over temperature-scaled f32 logits
+    (masked entries -> -inf); last axis is the vocabulary, any leading
+    batch shape.  Shared by `sample_logits` and the speculative verifier
+    so accept probabilities and residual resamples are computed against
+    the EXACT truncated distribution ancestral sampling draws from.
+
+    Nucleus rule: keep the shortest descending-probability prefix whose
+    exclusive cumulative mass is below top_p (the boundary token is
+    included, so the set is never empty — top_p -> 0 keeps exactly one
+    max token, and f32 cumsum rounding can never collapse the set to
+    greedy).  Masking happens in SORTED space and is scattered back
+    through the inverse permutation, so probability ties at the boundary
+    never drag extra mass in.
+    """
     if top_k:
-        k = min(int(top_k), logits.shape[-1])
-        if k < logits.shape[-1]:
+        k = min(int(top_k), l.shape[-1])
+        if k < l.shape[-1]:
             kth = jax.lax.top_k(l, k)[0][..., -1:]
             l = jnp.where(l < kth, -jnp.inf, l)
     if top_p < 1.0:
-        # nucleus: keep the shortest descending-probability prefix whose
-        # exclusive cumulative mass is below top_p (the boundary token is
-        # included, so the set is never empty — top_p -> 0 keeps exactly
-        # one max token, and f32 cumsum rounding can never collapse the
-        # set to greedy).  Masking happens in SORTED space and is scattered
-        # back through the inverse permutation, so probability ties at the
-        # boundary never drag extra mass in.
         probs = jax.nn.softmax(l, axis=-1)
         order = jnp.argsort(-probs, axis=-1)               # descending
         sp = jnp.take_along_axis(probs, order, axis=-1)
@@ -154,7 +166,7 @@ def sample_logits(logits: jax.Array, key: Optional[jax.Array],
         keep = jnp.take_along_axis(keep_sorted, jnp.argsort(order, axis=-1),
                                    axis=-1)
         l = jnp.where(keep, l, -jnp.inf)
-    return jax.random.categorical(key, l, axis=-1)
+    return l
 
 
 @functools.lru_cache(maxsize=64)
@@ -406,6 +418,165 @@ def make_mixed_step_fn(model: Model, n: int, pad_len: int,
     return jax.jit(step, donate_argnums=(2,))
 
 
+# ===========================================================================
+# speculative decoding: self-speculative drafts + batched verification
+# ===========================================================================
+def propose_draft_tokens(context: Sequence[int], k: int, *,
+                         max_ngram: int = 3,
+                         eos_id: Optional[int] = None) -> List[int]:
+    """Self-speculative n-gram (prompt-lookup) draft proposer.
+
+    Finds the RIGHTMOST earlier occurrence of the longest suffix n-gram
+    (down from `max_ngram` to 1 token) of `context` (the slot's own
+    prompt + generated tokens — nothing else is ever consulted) and
+    proposes the tokens that followed it.  When the match sits near the
+    end of the context — a tight cycle, where only a token or two follow
+    it — the lookup is re-run on context + draft-so-far, extending the
+    draft autoregressively (the lookup IS the draft model) until `k`
+    tokens are proposed or no suffix repeats.  Returns [] when the
+    context repeats nothing — the slot then runs a plain 1-token decode
+    step.  Proposals are cut at the first EOS INCLUSIVE (an accepted EOS
+    retires the request; drafting past it would waste verify columns),
+    and the function is a pure deterministic lookup: a fixed context
+    always yields the same proposal.
+    """
+    ctx = [int(t) for t in context]
+    if k <= 0 or len(ctx) < 2:
+        return []
+    out: List[int] = []
+    while len(out) < k:
+        ext = ctx + out
+        n = len(ext)
+        chunk: List[int] = []
+        for g in range(min(int(max_ngram), n - 1), 0, -1):
+            suffix = ext[n - g:]
+            for i in range(n - g - 1, -1, -1):
+                if ext[i:i + g] == suffix:
+                    chunk = ext[i + g: i + g + (k - len(out))]
+                    break
+            if chunk:
+                break
+        if not chunk:
+            break
+        if eos_id is not None and int(eos_id) in chunk:
+            out += chunk[: chunk.index(int(eos_id)) + 1]
+            break
+        out += chunk
+    return out
+
+
+def _row_key_grid(base_key, rids, gens, P: int):
+    """(B, P) sampling-key grid: column j of row b is EXACTLY the
+    `_row_keys` key for generated-token index gens[b] + j.  The
+    speculative verifier's column-j accept coin / resample therefore
+    consumes the same per-(request, token-index) key stream the
+    non-speculative scheduler uses, which is what makes temperature > 0
+    speculative runs seed-deterministic."""
+    col = jnp.arange(P, dtype=jnp.int32)
+
+    def row(r, g):
+        kr = jax.random.fold_in(base_key, r)
+        return jax.vmap(lambda j: jax.random.fold_in(kr, j))(g + col)
+
+    return jax.vmap(row)(jnp.maximum(jnp.asarray(rids, jnp.int32), 0),
+                         jnp.asarray(gens, jnp.int32))
+
+
+@functools.lru_cache(maxsize=64)
+def make_spec_step_fn(model: Model, n: int, pad_len: int, verify_len: int,
+                      temperature: float = 0.0, top_k: int = 0,
+                      top_p: float = 1.0) -> Callable:
+    """One SPECULATIVE scheduler step: decode rows carry their current
+    token plus up to `verify_len - 1` drafted tokens (seq_lens[b] = 1 +
+    k_b), prefill-chunk rows their chunk, idle rows nothing.  One forward
+    verifies every drafted position — attention routes decode rows
+    through the multi-row split-K decode launch (`force_decode_kernel`),
+    so each drafted position is scored bit-identically to the 1-token
+    decode step it replaces — and the model returns logits at ALL
+    `verify_len` columns (`logit_positions`).
+
+    Per-row accept rule over the draft columns (column j scores the token
+    drafted at input column j + 1):
+
+      * temperature == 0 — longest prefix of drafts matching the exact
+        argmax chain; the emitted tokens are argmax[0..acc], so greedy
+        streams are bit-identical to the non-speculative scheduler.
+      * temperature > 0 — rejection sampling against the truncated
+        (top_k/top_p) distribution p~: the point-mass draft d_j is
+        accepted with probability p~_j(d_j) (coin = uniform under
+        fold_in(key_j, 1)); the first rejection resamples from the
+        residual p~_j with d_j masked out (fold_in(key_j, 2)), which
+        preserves the output distribution exactly.  All-accepted rows
+        sample a BONUS token from the last column with the UNMODIFIED
+        key_j — so rows with zero drafts (and prefill-chunk rows, whose
+        columns all point at their last valid position) reduce to the
+        plain mixed-step sampler bit-for-bit.
+
+    Every row emits acc + 1 tokens.  KV for rejected drafts was written
+    but is never advertised (the host re-advertises only the accepted
+    length — the same ragged-length contract that makes mixed-step
+    padding writes harmless), so later writes overwrite it.
+
+    Returns step(params, toks, cache, offs, seq_lens, decode_rows, rids,
+    gens, base_key[, pages]) -> (cache, out (n, verify_len), n_emit (n,))
+    where row b's emitted tokens are out[b, :n_emit[b]].
+    """
+    P = int(verify_len)
+
+    def step(params, toks, cache, offs, seq_lens, decode_rows, rids, gens,
+             base_key, pages=None):
+        sl = jnp.asarray(seq_lens, jnp.int32)
+        col = jnp.arange(P, dtype=jnp.int32)
+        last = jnp.maximum(sl, 1) - 1
+        pos = jnp.where(decode_rows[:, None],
+                        jnp.minimum(col[None, :], last[:, None]),
+                        jnp.broadcast_to(last[:, None], (n, P)))
+        logits, cache, _ = model.forward_serve(
+            params, {"tokens": toks}, cache, jnp.asarray(offs, jnp.int32),
+            seq_lens=sl, pages=pages, decode_rows=decode_rows,
+            logit_positions=pos, verify_len=P)          # (n, P, V)
+        drafts = toks[:, 1:P]                           # (n, P-1)
+        valid = decode_rows[:, None] & (col[None, 1:] < sl[:, None])
+        if temperature <= 0.0:
+            out = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (n, P)
+            match = (drafts == out[:, : P - 1]) & valid
+            acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=-1),
+                          axis=-1)
+            return cache, out, acc + 1
+        keys = _row_key_grid(base_key, rids, gens, P)   # (n, P) keys
+        lt = _truncate_logits(logits.astype(jnp.float32) / temperature,
+                              top_k, top_p)             # (n, P, V)
+        p = jax.nn.softmax(lt, axis=-1)
+        p_draft = jnp.take_along_axis(p[:, : P - 1], drafts[..., None],
+                                      axis=-1)[..., 0]  # (n, P-1)
+        u = jax.vmap(jax.vmap(
+            lambda kk: jax.random.uniform(jax.random.fold_in(kk, 1))
+        ))(keys[:, : P - 1])
+        accept = valid & (u < p_draft)
+        acc = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=-1),
+                      axis=-1)                          # (n,) in [0, P-1]
+        # the emission column: first rejected draft (resample from the
+        # residual) or, when every draft survived, the bonus column
+        l_acc = jnp.take_along_axis(lt, acc[:, None, None], axis=1)[:, 0]
+        k_acc = jnp.take_along_axis(keys, acc[:, None, None], axis=1)[:, 0]
+        d_acc = jnp.take_along_axis(
+            toks[:, :P], jnp.minimum(acc + 1, P - 1)[:, None], axis=1)[:, 0]
+        rejected = decode_rows & (acc < sl - 1)
+        l_res = jnp.where(
+            jax.nn.one_hot(d_acc, lt.shape[-1], dtype=bool), -jnp.inf, l_acc)
+        t_rej = jax.vmap(
+            lambda kk, ll: jax.random.categorical(jax.random.fold_in(kk, 2),
+                                                  ll))(k_acc, l_res)
+        t_bonus = jax.vmap(jax.random.categorical)(k_acc, l_acc)
+        t = jnp.where(rejected, t_rej, t_bonus).astype(jnp.int32)
+        shifted = jnp.concatenate(
+            [drafts, jnp.zeros((n, 1), toks.dtype)], axis=1)  # (n, P)
+        out = jnp.where(col[None, :] < acc[:, None], shifted, t[:, None])
+        return cache, out.astype(jnp.int32), acc + 1
+
+    return jax.jit(step, donate_argnums=(2,))
+
+
 def plan_prefill_chunk(start: int, prompt_len: int, budget: int,
                        page_size: int = 0) -> int:
     """The end of the next admission-prefill chunk for a prompt at progress
@@ -447,7 +618,7 @@ class Request:
 
     __slots__ = ("rid", "prompt", "max_new_tokens", "tokens", "done",
                  "deadline_ms", "ttl_steps", "submit_step", "submit_time",
-                 "status")
+                 "status", "spec_k")
 
     def __init__(self, rid: int, prompt: Sequence[int], max_new_tokens: int,
                  deadline_ms: Optional[float] = None,
@@ -462,6 +633,10 @@ class Request:
         self.submit_step = 0
         self.submit_time = 0.0
         self.status = "queued"
+        # adaptive speculative draft length; lives on the REQUEST (not the
+        # slot) so it survives eviction + re-admission.  None until the
+        # speculative scheduler lazily seeds it with its draft_len.
+        self.spec_k: Optional[int] = None
 
 
 class _SpillRecord:
@@ -576,6 +751,27 @@ class Scheduler:
     bit-identical to `mixed_steps=False`: chunked prefill writes the same
     per-token quantized KV, every row runs its unchunked kernel dispatch,
     and sampling keys are per-(request, token index).
+
+    **Speculative decoding** (`speculate=True`): each step, every decoding
+    slot's context (prompt + generated tokens) is scanned by the
+    self-speculative n-gram proposer (`propose_draft_tokens`;
+    `draft_mode="ngram"` — the seam where a small zoo draft model plugs in
+    later) for up to `draft_len` draft tokens, and the decode row carries
+    [current token, drafts...] as a q_len = 1 + k ragged verify row — ONE
+    model pass scores every drafted position (multi-row split-K decode
+    launch, bit-identical per position to the 1-token steps it replaces).
+    The longest accepted prefix plus a bonus/correction token is emitted:
+    up to `draft_len + 1` tokens per step per slot.  Greedy streams are
+    bit-identical to the non-speculative scheduler; temperature > 0 uses
+    distribution-preserving rejection sampling on the per-(request,
+    token-index) key stream, so runs stay seed-deterministic.  Rejected
+    drafts' KV is written but never advertised (the ragged-length
+    contract IS the rollback); the page allocator pre-extends each row
+    for its k + 1 writes (CoW/prefix/spill-aware), shrinking a starved
+    row's draft to 0 before falling back to eviction.  A per-request
+    adaptive k (`Request.spec_k`) grows on fully-accepted steps and
+    halves on fully-rejected ones, so slots that stop repeating
+    themselves degrade gracefully to ~plain decode.
     """
 
     def __init__(self, model: Model, params, *, max_batch_slots: int = 8,
@@ -589,6 +785,8 @@ class Scheduler:
                  mixed_steps: bool = False, prefill_chunk_budget: int = 0,
                  mixed_dispatch: str = "fused",
                  victim_pool_pages: int = 0, max_queue: int = 0,
+                 speculate: bool = False, draft_len: int = 4,
+                 draft_mode: str = "ngram",
                  fault_plan: Optional[FaultPlan] = None,
                  audit_every_step: Optional[bool] = None,
                  clock: Callable[[], float] = time.monotonic):
@@ -609,6 +807,18 @@ class Scheduler:
         self.prefill_bucket = int(prefill_bucket)
         self.key = jax.random.PRNGKey(0) if rng is None else rng
 
+        self.speculate = bool(speculate)
+        self.draft_len = int(draft_len)
+        self.draft_mode = str(draft_mode)
+        if self.speculate:
+            if self.draft_len < 1:
+                raise ValueError(
+                    f"draft_len must be >= 1, got {draft_len}")
+            if self.draft_mode != "ngram":
+                raise ValueError(
+                    f"unknown draft_mode {draft_mode!r} (only the "
+                    "self-speculative 'ngram' proposer exists today; a "
+                    "zoo draft model plugs in here later)")
         self.mixed_steps = bool(mixed_steps)
         self.prefill_chunk_budget = int(prefill_chunk_budget) or 32
         if self.mixed_steps and self.prefill_chunk_budget < 1:
@@ -715,6 +925,14 @@ class Scheduler:
         self.n_rejections = 0                 # submits bounced (Overloaded)
         self.n_reclaim_stalls = 0             # reclaim gave up: dir pinned
         self.refcount_corruptions_detected = 0
+        # speculation accounting + the tokens-per-model-step denominator
+        # (one unit per device forward: a decode chunk-scan counts its
+        # chunk length, every other dispatch counts 1)
+        self.model_steps = 0
+        self.n_spec_steps = 0                 # speculative dispatches run
+        self.spec_proposed = 0                # draft tokens sent to verify
+        self.spec_accepted = 0                # draft tokens accepted
+        self.spec_rejected = 0                # draft tokens rejected
 
     # -- request intake -----------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
@@ -1295,6 +1513,7 @@ class Scheduler:
         rids = np.array([r.rid for _, r in wave], np.int32)
         gens = np.array([len(r.tokens) for _, r in wave], np.int32)
         self.prefill_tokens_computed += int(lens.sum())
+        self.model_steps += 1
         if self.paged:
             # CoW copies land before the prefill that reads the private
             # pages; sample the peak while the wave's prompt pages are
@@ -1347,29 +1566,37 @@ class Scheduler:
                 self.active[s] = True
         return deferred
 
-    def _plan_decode_run(self, ahead: int) -> np.ndarray:
+    def _plan_decode_run(self, ahead,
+                         evict_on_starve: bool = True) -> np.ndarray:
         """The set of active slots that can append `ahead` more tokens this
         step (paged mode: lazy allocation to cover them — capped at max_len,
         the capacity retirement bound — plus copy-on-write for any still-
         shared page the write range touches; normally none — decode writes
         start past a slot's registered prefix pages, this is the safety net
-        for exact-prompt hits).  Starved slots stall (excluded from the
-        returned mask, state untouched); if NOTHING can run the youngest
-        active slot is evicted until something can.  Dense mode: every
-        active slot runs."""
+        for exact-prompt hits).  `ahead` is a scalar or a per-slot (B,)
+        array (speculative steps ask for 1 + k_b tokens per slot).
+        Starved slots stall (excluded from the returned mask, state
+        untouched); if NOTHING can run the youngest active slot is evicted
+        until something can — unless `evict_on_starve=False`, which
+        reports the all-stalled plan instead so the caller can retry with
+        a cheaper ask (the speculative two-pass shrinks starved slots'
+        drafts to 0 before any eviction).  Dense mode: every active slot
+        runs."""
         run = self.active.copy()
         if not self.paged:
             return run
+        ahead_arr = np.broadcast_to(np.asarray(ahead, np.int32), (self.B,))
         cow_pairs: List[Tuple[int, int]] = []
         while True:
             run = self.active.copy()
             for b in np.flatnonzero(self.active):
-                upto = min(int(self.lengths[b]) + ahead, self.max_len)
+                upto = min(int(self.lengths[b]) + int(ahead_arr[b]),
+                           self.max_len)
                 if not (self._alloc_slot(int(b), upto)
                         and self._cow_range(int(b), int(self.lengths[b]),
                                             upto, cow_pairs)):
                     run[b] = False
-            if run.any() or not self.active.any():
+            if run.any() or not self.active.any() or not evict_on_starve:
                 break
             self._evict(self._eviction_victim())
             # pruning: copies whose fresh destination the eviction just
@@ -1405,6 +1632,7 @@ class Scheduler:
         # trash-routed, attention runs zero KV partitions — genuinely free,
         # not just discarded) and have ALL their state restored host-side
         rids, gens = self._slot_rids_gens()
+        self.model_steps += self.decode_chunk
         args = (self.params, jnp.asarray(self.cur_tok), self.cache,
                 jnp.asarray(self.lengths * run), jnp.asarray(run),
                 jnp.asarray(self.remaining), jnp.asarray(rids),
@@ -1524,6 +1752,7 @@ class Scheduler:
         gens = np.array([len(self.slot_req[b].tokens)
                          for b, _, _ in chunks], np.int32)
         self.prefill_tokens_computed += int(lens.sum())
+        self.model_steps += 1
         fn = make_paged_prefill_fn(self.model, n, L, self.temperature,
                                    self.top_k, self.top_p)
         self.cache, tok0 = fn(self.params, jnp.asarray(toks),
@@ -1562,6 +1791,7 @@ class Scheduler:
             seq[b] = 1
             dec[b] = True
         self.prefill_tokens_computed += sum(e - s for _, s, e in chunks)
+        self.model_steps += 1
         rids, gens = self._slot_rids_gens()
         fn = make_mixed_step_fn(self.model, self.B, L, self.temperature,
                                 self.top_k, self.top_p)
@@ -1593,6 +1823,111 @@ class Scheduler:
         else:
             self._mixed_step_fused(emitted)
 
+    # -- speculative decoding -----------------------------------------------
+    def _propose(self, slot: int) -> List[int]:
+        """Draft tokens for `slot`, clamped so an all-accepted step can
+        never overrun the token budget (k <= remaining - 1: the step emits
+        k + 1 tokens) or the cache capacity (k + 1 KV writes starting at
+        the slot's fill)."""
+        r = self.slot_req[slot]
+        if r.spec_k is None:
+            r.spec_k = self.draft_len
+        cap = min(r.spec_k, int(self.remaining[slot]) - 1,
+                  self.max_len - int(self.lengths[slot]) - 1)
+        if cap < 1:
+            return []
+        return propose_draft_tokens(r.prompt + r.tokens, cap,
+                                    eos_id=self.eos_id)
+
+    def _spec_step(self, emitted: Dict[int, List[int]],
+                   with_chunks: bool = False):
+        """One speculative step: propose drafts per decoding slot, verify
+        them (plus any mixed-mode prefill chunks when `with_chunks`) in ONE
+        dispatch, then emit each row's accepted prefix + bonus/correction
+        token through the standard per-token retirement bookkeeping.
+
+        Paged allocation is two-pass: pass 1 asks for each slot's full
+        1 + k_b writes WITHOUT evicting on starvation; slots the pool
+        cannot stretch to simply drop their drafts (k_b = 0 — a plain
+        1-token step needs no new page in the common case), and only if
+        even that starves does pass 2 fall back to the regular
+        evict-youngest path.  Speculation therefore never evicts a
+        neighbor just to chase draft tokens."""
+        chunks = self._plan_chunks() if with_chunks else []
+        drafts: List[List[int]] = [[] for _ in range(self.B)]
+        karr = np.zeros(self.B, np.int32)
+        for b in np.flatnonzero(self.active):
+            drafts[b] = self._propose(int(b))
+            karr[b] = len(drafts[b])
+        run = self._plan_decode_run(1 + karr, evict_on_starve=False)
+        starved = self.active & ~run
+        if starved.any():
+            karr[starved] = 0
+            for b in np.flatnonzero(starved):
+                drafts[b] = []
+            run = self._plan_decode_run(1 + karr)
+        if not chunks and not run.any():
+            return
+        P = self.draft_len + 1
+        # rectangle width: P covers every verify row; only widen (to the
+        # prefill bucket) when a mixed-mode chunk actually rides along —
+        # _bucket(1) is the full prefill_bucket, which would make every
+        # chunkless spec step pay for 16 columns of masked padding
+        L = (max(P, self._bucket(max(e - s for _, s, e in chunks)))
+             if chunks else P)
+        toks = np.zeros((self.B, L), np.int32)
+        offs = np.zeros(self.B, np.int32)
+        seq = np.zeros(self.B, np.int32)
+        dec = np.zeros(self.B, bool)
+        for b, s, e in chunks:
+            toks[b, : e - s] = self._pend[b][s:e]
+            offs[b] = s
+            seq[b] = e - s
+        for b in np.flatnonzero(run):
+            k = int(karr[b])
+            toks[b, 0] = self.cur_tok[b]
+            if k:
+                toks[b, 1: 1 + k] = drafts[b]
+            offs[b] = self.lengths[b]
+            seq[b] = 1 + k
+            dec[b] = True
+        self.prefill_tokens_computed += sum(e - s for _, s, e in chunks)
+        self.model_steps += 1
+        self.n_spec_steps += 1
+        rids, gens = self._slot_rids_gens()
+        fn = make_spec_step_fn(self.model, self.B, L, P, self.temperature,
+                               self.top_k, self.top_p)
+        args = (self.params, jnp.asarray(toks), self.cache,
+                jnp.asarray(offs), jnp.asarray(seq), jnp.asarray(dec),
+                jnp.asarray(rids), jnp.asarray(gens), self.key)
+        if self.paged:
+            self.cache, out, n_emit = fn(*args, jnp.asarray(self.page_table))
+        else:
+            self.cache, out, n_emit = fn(*args)
+        out = np.asarray(out)
+        n_emit = np.asarray(n_emit)
+        for b, s, e in chunks:
+            self.lengths[b] = e
+            if e == len(self._pend[b]):
+                self._finish_prefill(b, int(out[b, 0]), emitted)
+        for b in np.flatnonzero(dec):
+            r = self.slot_req[b]
+            k = int(karr[b])
+            m = int(n_emit[b])
+            if k:
+                a = m - 1
+                self.spec_proposed += k
+                self.spec_accepted += a
+                self.spec_rejected += k - a
+                if a == k:
+                    r.spec_k = min(self.draft_len, r.spec_k + 1)
+                elif a == 0:
+                    r.spec_k = max(1, r.spec_k // 2)
+            for j in range(m):
+                self._post_decode_token(b, int(out[b, j]), emitted)
+                if self.slot_req[b] is None:
+                    break      # retired mid-prefix: later tokens discarded
+
     def step(self) -> Dict[int, List[int]]:
         """One scheduling round: shed stale queued requests, admit (and
         restore spilled continuations), then either one mixed
@@ -1609,7 +1944,16 @@ class Scheduler:
         if (self._faults is not None and self.active.any()
                 and self._faults.force_evict(self._step_idx)):
             self._evict(self._eviction_victim())
-        if self.mixed_steps and self.prefilling.any():
+        if self.speculate:
+            if (self.mixed_steps and self.prefilling.any()
+                    and self.mixed_dispatch == "paired"):
+                self._chunk_prefill_wave(emitted)
+                self._spec_step(emitted)
+            else:
+                self._spec_step(
+                    emitted,
+                    with_chunks=self.mixed_steps and self.prefilling.any())
+        elif self.mixed_steps and self.prefilling.any():
             self._mixed_step(emitted)
         else:
             self._decode(emitted)
@@ -1744,6 +2088,13 @@ class Scheduler:
         depths = np.asarray(self._queue_depths or [0])
         return {
             "steps": self._step_idx,
+            "model_steps": self.model_steps,
+            "spec_steps": self.n_spec_steps,
+            "spec_proposed": self.spec_proposed,
+            "spec_accepted": self.spec_accepted,
+            "spec_rejected": self.spec_rejected,
+            "spec_accept_rate": (self.spec_accepted
+                                 / max(self.spec_proposed, 1)),
             "evictions": self.n_evictions,
             "spills": self.n_spills,
             "restores": self.n_restores,
@@ -1792,6 +2143,9 @@ def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
              mixed_dispatch: str = "fused",
              victim_pool_pages: int = 0,
              max_queue: int = 0,
+             speculate: bool = False,
+             draft_len: int = 4,
+             draft_mode: str = "ngram",
              deadline_ms: Optional[float] = None,
              ttl_steps: Optional[int] = None,
              fault_plan: Optional[FaultPlan] = None) -> jax.Array:
@@ -1811,8 +2165,11 @@ def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
     outputs; bounded time between tokens).  `victim_pool_pages` enables
     the host-memory spill pool for eviction continuations, `max_queue` /
     `deadline_ms` / `ttl_steps` the admission-control bounds (rejected
-    rows stay padding), and `fault_plan` the deterministic fault-injection
-    hooks — see `Scheduler`.
+    rows stay padding), `speculate=True` self-speculative multi-token
+    decode steps (`draft_len` drafts per slot per step, `draft_mode`
+    selects the proposer; greedy outputs stay bit-identical), and
+    `fault_plan` the deterministic fault-injection hooks — see
+    `Scheduler`.
 
     temperature=0 reproduces greedy decoding exactly; temperature>0 samples
     (optionally top_k- and/or nucleus-top_p-truncated) with `rng`
@@ -1820,6 +2177,10 @@ def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
     """
     B, S = prompt_batch["tokens"].shape
     rng = jax.random.PRNGKey(0) if rng is None else rng
+    if speculate and not continuous_batching:
+        raise ValueError("speculate requires continuous_batching=True "
+                         "(drafts are verified by the scheduler's ragged "
+                         "decode rows)")
     if continuous_batching:
         sched = Scheduler(model, params,
                           max_batch_slots=max_batch_slots or B,
@@ -1833,7 +2194,9 @@ def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
                           prefill_chunk_budget=prefill_chunk_budget,
                           mixed_dispatch=mixed_dispatch,
                           victim_pool_pages=victim_pool_pages,
-                          max_queue=max_queue, fault_plan=fault_plan)
+                          max_queue=max_queue, speculate=speculate,
+                          draft_len=draft_len, draft_mode=draft_mode,
+                          fault_plan=fault_plan)
         tokens = np.asarray(prompt_batch["tokens"])
         rids = []
         for b in range(B):

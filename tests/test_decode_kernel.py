@@ -179,6 +179,97 @@ def test_window_pruning_bit_equal_and_correct():
     assert float(rel) < 0.06
 
 
+# ---------------------------------------------------------------------------
+# speculative verify rows (multi-query decode launches)
+# ---------------------------------------------------------------------------
+def test_verify_rows_bit_identical_to_single_steps():
+    """A q_len = k+1 verify launch through the decode kernel must produce,
+    per position, EXACTLY the bits of the k+1 individual Sq == 1 decode
+    steps it replaces — the kernel half of greedy speculative streams
+    being bit-identical to non-speculative ones."""
+    B, max_len, kv_len, Sq, H, Hkv, Dh = 2, 128, 90, 3, 4, 2, 32
+    q, _, _, cache = _setup(jax.random.PRNGKey(11), B, Sq, max_len, kv_len,
+                            H, Hkv, Dh)
+    off = kv_len - Sq
+    o_multi = ops.pim_flash_attention(q, cache, off, out_dtype=jnp.float32,
+                                      force_decode_kernel=True)
+    for l in range(Sq):
+        o_one = ops.pim_flash_attention(q[:, l: l + 1], cache, off + l,
+                                        out_dtype=jnp.float32)
+        np.testing.assert_array_equal(np.asarray(o_multi[:, l]),
+                                      np.asarray(o_one[:, 0]))
+
+
+def test_verify_rows_ragged_q_len():
+    """Per-row ragged verify lengths: row b's first q_len[b] positions are
+    bit-identical to its single-step launches (positions past q_len[b] are
+    padding the caller slices away)."""
+    B, max_len, kv_len, Sq, H, Hkv, Dh = 2, 128, 80, 4, 4, 2, 32
+    q, _, _, cache = _setup(jax.random.PRNGKey(12), B, Sq, max_len, kv_len,
+                            H, Hkv, Dh)
+    ql = jnp.asarray([2, 4], jnp.int32)
+    off = jnp.asarray([kv_len - 2, kv_len - 4], jnp.int32)
+    o_multi = ops.pim_flash_attention(q, cache, off, out_dtype=jnp.float32,
+                                      force_decode_kernel=True, q_len=ql)
+    for b in range(B):
+        for l in range(int(ql[b])):
+            o_one = ops.pim_flash_attention(
+                q[b: b + 1, l: l + 1], _slice_cache(cache, b),
+                off[b: b + 1] + l, out_dtype=jnp.float32)
+            np.testing.assert_array_equal(np.asarray(o_multi[b, l]),
+                                          np.asarray(o_one[0, 0]))
+
+
+def _slice_cache(cache, b):
+    length = jnp.broadcast_to(jnp.reshape(cache.length, (-1,)),
+                              (cache.k_q.shape[0],))
+    return cache._replace(k_q=cache.k_q[b: b + 1], v_q=cache.v_q[b: b + 1],
+                          k_scale=cache.k_scale[b: b + 1],
+                          v_scale=cache.v_scale[b: b + 1],
+                          length=length[b: b + 1])
+
+
+def test_verify_row_iter_probe_matches_analytic():
+    """Multi-query verify launches run exactly the analytic mirror's count
+    with block_q == Sq (one sublane-packed q block per slot; per-partition
+    reach is the union over valid rows)."""
+    B, max_len, kv_len, Sq, H, Hkv, Dh, bk = 1, 256, 100, 4, 2, 1, 32, 32
+    q, _, _, cache = _setup(jax.random.PRNGKey(13), B, Sq, max_len, kv_len,
+                            H, Hkv, Dh)
+    qq = _layout(q, cache)
+    for ql in (1, 2, 4):
+        off = jnp.int32(kv_len - ql)
+        _, iters = pim_decode_pallas(*qq, off, cache.length, block_k=bk,
+                                     interpret=True, return_iters=True,
+                                     q_len=jnp.full((B,), ql, jnp.int32))
+        exp = expected_kv_block_iters(Sq, max_len, kv_len - ql, Sq, bk,
+                                      causal=True, kv_valid_len=kv_len,
+                                      q_valid_len=ql)
+        np.testing.assert_array_equal(np.asarray(iters.sum(axis=1)), exp)
+    # q_len == 0 rows cost zero partitions
+    _, iters0 = pim_decode_pallas(*qq, jnp.int32(0), cache.length,
+                                  block_k=bk, interpret=True,
+                                  return_iters=True,
+                                  q_len=jnp.zeros((B,), jnp.int32))
+    assert int(iters0.sum()) == 0
+
+
+def test_verify_single_row_bit_identical_to_plain_decode():
+    """Sq > 1 padding must not perturb the Sq == 1 fast path: a verify
+    launch with q_len == 1 equals the plain decode launch bit-for-bit."""
+    B, max_len, kv_len, H, Hkv, Dh = 2, 128, 77, 4, 2, 32
+    q, _, _, cache = _setup(jax.random.PRNGKey(14), B, 3, max_len, kv_len,
+                            H, Hkv, Dh)
+    off = jnp.int32(kv_len - 1)
+    o_multi = ops.pim_flash_attention(q, cache, off, out_dtype=jnp.float32,
+                                      force_decode_kernel=True,
+                                      q_len=jnp.ones((B,), jnp.int32))
+    o_one = ops.pim_flash_attention(q[:, :1], cache, off,
+                                    out_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(o_multi[:, :1]),
+                                  np.asarray(o_one))
+
+
 def test_decode_window_parity():
     B, max_len, kv_len, H, Hkv, Dh, W = 1, 256, 150, 2, 1, 32, 40
     q, k, v, cache = _setup(jax.random.PRNGKey(3), B, 1, max_len, kv_len, H,

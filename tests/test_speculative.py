@@ -1,0 +1,300 @@
+"""Speculative decoding on the ragged-Q verifier (ISSUE 8).
+
+  * n-gram proposer properties: own-context only, deterministic, budget- and
+    EOS-bounded, rightmost-match (hypothesis-driven when available, plus
+    deterministic unit cases)
+  * greedy speculative streams are BIT-IDENTICAL to the non-speculative
+    scheduler: dense + paged, prefix sharing on/off, behavioral + kernel
+    attention, under forced eviction and page spill, with mixed
+    prefill+decode steps (fused and paired dispatch)
+  * temperature > 0 speculative runs are seed-deterministic and keep
+    accept/reject counters consistent in `Scheduler.stats`
+  * adaptive per-request draft length stays within [1, draft_len]
+  * proposals never cross slot boundaries and never overrun the token
+    budget or cache capacity
+  * constructor/CLI validation: draft_len < 1, unknown draft_mode,
+    speculation without continuous batching
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model_zoo import build_model
+from repro.runtime import serve_lib
+from repro.runtime.fault import FaultPlan
+from repro.runtime.serve_lib import Scheduler, propose_draft_tokens
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def kernel_model():
+    cfg = dataclasses.replace(get_config("internlm2-1.8b", smoke=True),
+                              attn_impl="kernel")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _repetitive_trace(n=3, budget=12, lo=5, hi=40):
+    """Agent-style prompts: a small repeated unit per request, so the
+    n-gram proposer has material from step one."""
+    rng = np.random.default_rng(0)
+    out = []
+    for i in range(n):
+        unit = rng.integers(lo, hi, size=4 + i).tolist()
+        out.append((unit * 3, budget))
+    return out
+
+
+def _run(model, params, trace, *, slots=3, max_len=64, chunk=2, **kw):
+    sched = Scheduler(model, params, max_batch_slots=slots, max_len=max_len,
+                      decode_chunk=chunk, audit_every_step=True, **kw)
+    rids = [sched.submit(p, t) for p, t in trace]
+    res = sched.run()
+    sched.audit()
+    return [res[r] for r in rids], sched
+
+
+# ---------------------------------------------------------------------------
+# proposer properties
+# ---------------------------------------------------------------------------
+def test_proposer_basic_lookup():
+    # suffix 3-gram [5,6,7] recurs at the start; the continuation follows
+    assert propose_draft_tokens([5, 6, 7, 8, 5, 6, 7], 4) == [8, 5, 6, 7]
+    assert propose_draft_tokens([5, 6, 7, 8, 5, 6, 7], 2) == [8, 5]
+
+
+def test_proposer_prefers_rightmost_match():
+    # [1,2] occurs at 0 (-> 9) and at 3 (-> 8): the RIGHTMOST wins
+    assert propose_draft_tokens([1, 2, 9, 1, 2, 8, 1, 2], 1) == [8]
+
+
+def test_proposer_falls_back_to_shorter_ngrams():
+    # no 2-gram recurs, but the final token does
+    assert propose_draft_tokens([7, 1, 2, 3, 7], 2, max_ngram=3) == [1, 2]
+
+
+def test_proposer_empty_cases():
+    assert propose_draft_tokens([], 4) == []
+    assert propose_draft_tokens([3], 4) == []
+    assert propose_draft_tokens([1, 2, 3, 4], 0) == []
+    assert propose_draft_tokens([1, 2, 3, 4, 5], 4) == []  # nothing repeats
+
+
+def test_proposer_cuts_at_eos_inclusive():
+    out = propose_draft_tokens([1, 2, 0, 3, 1, 2], 4, eos_id=0)
+    assert out == [0]
+    out = propose_draft_tokens([1, 2, 5, 3, 1, 2], 4, eos_id=0)
+    assert out == [5, 3, 1, 2]
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_proposer_properties_hypothesis():
+    @given(st.lists(st.integers(0, 30), min_size=0, max_size=60),
+           st.integers(0, 8),
+           st.one_of(st.none(), st.integers(0, 30)))
+    @settings(max_examples=200, deadline=None)
+    def check(ctx, k, eos):
+        out = propose_draft_tokens(ctx, k, eos_id=eos)
+        # deterministic for a fixed context
+        assert out == propose_draft_tokens(ctx, k, eos_id=eos)
+        # never longer than the budget
+        assert len(out) <= k
+        # drawn from the slot's OWN context only
+        assert set(out) <= set(ctx)
+        # never extends past EOS (EOS may only be the final proposal)
+        if eos is not None and eos in out:
+            assert out.index(eos) == len(out) - 1
+
+    check()
+
+
+def test_proposals_never_cross_slot_boundaries(smoke_model):
+    """Two slots with DISJOINT token alphabets: every proposal must come
+    from its own slot's context, and respect budget/capacity clamps."""
+    cfg, model, params = smoke_model
+    sched = Scheduler(model, params, max_batch_slots=2, max_len=48,
+                      speculate=True, draft_len=4)
+    a = [5, 6, 7, 5, 6, 7, 5, 6]        # alphabet {5,6,7}
+    b = [20, 21, 22, 20, 21, 22, 20]    # alphabet {20,21,22}
+    sched.submit(a, 8)
+    sched.submit(b, 8)
+    sched.step()                        # admission prefill
+    for slot in np.flatnonzero(sched.active):
+        r = sched.slot_req[slot]
+        d = sched._propose(int(slot))
+        assert set(d) <= set(r.prompt + r.tokens)
+        assert len(d) <= int(sched.remaining[slot]) - 1
+        assert len(d) <= sched.max_len - int(sched.lengths[slot]) - 1
+
+
+# ---------------------------------------------------------------------------
+# greedy bit-identity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["dense", "paged", "shared"])
+def test_greedy_spec_bit_identical(smoke_model, mode):
+    cfg, model, params = smoke_model
+    trace = _repetitive_trace()
+    kw = {}
+    if mode != "dense":
+        kw.update(page_size=8, num_pages=0)
+    if mode == "shared":
+        kw.update(prefix_sharing=True)
+    ref, _ = _run(model, params, trace, **kw)
+    spec, s = _run(model, params, trace, speculate=True, draft_len=4, **kw)
+    assert ref == spec
+    assert s.stats["spec_steps"] > 0
+    assert s.stats["spec_proposed"] > 0
+
+
+@pytest.mark.parametrize("mode", ["dense", "shared"])
+def test_greedy_spec_bit_identical_kernel_path(kernel_model, mode):
+    cfg, model, params = kernel_model
+    trace = _repetitive_trace(n=2, budget=8)
+    kw = {} if mode == "dense" else dict(page_size=8, num_pages=0,
+                                         prefix_sharing=True)
+    ref, _ = _run(model, params, trace, slots=2, **kw)
+    spec, s = _run(model, params, trace, slots=2, speculate=True,
+                   draft_len=3, **kw)
+    assert ref == spec
+    assert s.stats["spec_steps"] > 0
+
+
+def test_greedy_spec_bit_identical_under_eviction_and_spill(smoke_model):
+    """Forced evictions (fault plan) and page spill to the victim pool do
+    not perturb greedy speculative streams: faults change scheduling,
+    never results — and speculation must keep that contract."""
+    cfg, model, params = smoke_model
+    trace = _repetitive_trace(n=4, budget=10)
+    ref, _ = _run(model, params, trace, page_size=8, num_pages=0)
+    fp = dict(page_size=8, num_pages=14, victim_pool_pages=12,
+              fault_plan=FaultPlan(evict_steps=(2, 5)))
+    spec, s = _run(model, params, trace, speculate=True, draft_len=4, **fp)
+    assert ref == spec
+    assert s.stats["evictions"] >= 2
+    # and on a genuinely starved pool (organic evictions + stalls)
+    spec2, s2 = _run(model, params, trace, speculate=True, draft_len=4,
+                     page_size=8, num_pages=10)
+    assert ref == spec2
+
+
+@pytest.mark.parametrize("dispatch", ["fused", "paired"])
+def test_greedy_spec_bit_identical_mixed_steps(smoke_model, dispatch):
+    """Speculation composes with chunked prefill: decode rows keep
+    verifying drafts while other slots' prompts stream through chunks."""
+    cfg, model, params = smoke_model
+    trace = _repetitive_trace(n=3, budget=10)
+    kw = dict(mixed_steps=True, prefill_chunk_budget=4,
+              mixed_dispatch=dispatch)
+    if dispatch == "paired":
+        kw.update(page_size=8, num_pages=0)
+    ref, _ = _run(model, params, trace, **kw)
+    spec, s = _run(model, params, trace, speculate=True, draft_len=4, **kw)
+    assert ref == spec
+    assert s.stats["spec_steps"] > 0
+
+
+def test_spec_emits_multiple_tokens_per_model_step(smoke_model):
+    """On a repetitive greedy trace the speculative scheduler emits
+    strictly more tokens per model step than the non-speculative one."""
+    cfg, model, params = smoke_model
+    trace = [(([7, 8, 9, 10] * 5), 24)]
+    ref, s0 = _run(model, params, trace, slots=1, max_len=96, chunk=1)
+    spec, s1 = _run(model, params, trace, slots=1, max_len=96, chunk=1,
+                    speculate=True, draft_len=4)
+    assert ref == spec
+    n_tok = len(ref[0])
+    assert n_tok / s1.stats["model_steps"] > n_tok / s0.stats["model_steps"]
+    assert s1.stats["spec_accepted"] > 0
+
+
+# ---------------------------------------------------------------------------
+# temperature > 0: determinism + counters
+# ---------------------------------------------------------------------------
+def test_temp_spec_seed_deterministic_and_counters(smoke_model):
+    cfg, model, params = smoke_model
+    trace = _repetitive_trace(n=3, budget=10)
+    kw = dict(temperature=0.8, top_k=40, top_p=0.95,
+              rng=jax.random.PRNGKey(11), speculate=True, draft_len=4)
+    a, sa = _run(model, params, trace, **kw)
+    b, sb = _run(model, params, trace, **kw)
+    assert a == b
+    st_ = sa.stats
+    assert st_ == sb.stats
+    assert st_["spec_proposed"] == st_["spec_accepted"] + st_["spec_rejected"]
+    assert 0.0 <= st_["spec_accept_rate"] <= 1.0
+    assert st_["spec_steps"] > 0
+
+
+def test_temp_spec_zero_draft_rows_match_nonspec(smoke_model):
+    """A speculative scheduler whose proposer never finds a draft (fresh
+    high-entropy prompts over a wide alphabet, draft capped by budget=2 ->
+    k <= 1 and no repeats early) samples the SAME stream as the
+    non-speculative scheduler on the first token: zero-draft rows reduce
+    to the plain mixed-step sampler bit-for-bit."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(3)
+    # budget 1: cap = remaining - 1 = 0 -> every step is a zero-draft step
+    trace = [(rng.integers(5, 250, size=9).tolist(), 1) for _ in range(3)]
+    kw = dict(temperature=0.7, top_k=0, top_p=1.0,
+              rng=jax.random.PRNGKey(5))
+    ref, _ = _run(model, params, trace, **kw)
+    spec, s = _run(model, params, trace, speculate=True, draft_len=4, **kw)
+    assert ref == spec
+    assert s.stats["spec_proposed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# adaptive draft length
+# ---------------------------------------------------------------------------
+def test_adaptive_k_stays_bounded(smoke_model):
+    """Drive one request step by step and watch its adaptive draft length:
+    always within [1, draft_len], seeded lazily on the first speculative
+    step."""
+    cfg, model, params = smoke_model
+    sched = Scheduler(model, params, max_batch_slots=1, max_len=96,
+                      speculate=True, draft_len=4, audit_every_step=True)
+    sched.submit(([7, 8, 9, 10] * 5), 24)
+    sched.step()                    # admission prefill
+    r = next(q for q in sched.slot_req if q is not None)
+    ks = []
+    while any(q is not None for q in sched.slot_req):
+        sched.step()
+        if r.spec_k is not None:
+            ks.append(r.spec_k)
+            assert 1 <= r.spec_k <= 4
+    assert ks, "no speculative steps ran"
+    sched.audit()
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+def test_validation_errors(smoke_model):
+    cfg, model, params = smoke_model
+    with pytest.raises(ValueError, match="draft_len"):
+        Scheduler(model, params, speculate=True, draft_len=0)
+    with pytest.raises(ValueError, match="draft_mode"):
+        Scheduler(model, params, speculate=True, draft_mode="magic")
+    batch = {"tokens": jnp.asarray([[1, 2, 3]])}
+    with pytest.raises(ValueError, match="continuous_batching"):
+        serve_lib.generate(model, params, batch, 4, 32, speculate=True)
+    # draft args are inert without speculate=True
+    Scheduler(model, params, draft_len=0)
