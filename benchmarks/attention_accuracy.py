@@ -1,8 +1,16 @@
 """End-to-end PIM attention fidelity vs fp32 attention (the paper's deferred
 quantitative analysis): behavioral two-pass vs fused kernel vs fp, across
-ADC modes and ADC range calibration.
+ADC modes, ADC range calibration, and KV-cache storage precision
+(kv_bits 8 vs 4).
+
+Writes BENCH_accuracy.json so scripts/check_bench.py can ceiling-gate the
+4-bit error delta in CI: packing the KV cache to 4-bit dynamic-map codes
+must cost a bounded amount of fidelity on every attention path.
 """
 from __future__ import annotations
+
+import argparse
+import json
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +26,7 @@ def _rel(a, b):
     return float(jnp.linalg.norm(a - b) / (jnp.linalg.norm(b) + 1e-9))
 
 
-def run():
+def run(json_path: str = "BENCH_accuracy.json"):
     print("\n== PIM attention fidelity vs fp32 (B=2,Sq=64,Sk=128,H=8,kv=2,"
           "Dh=64) ==")
     key = jax.random.PRNGKey(0)
@@ -48,16 +56,64 @@ def run():
                             out_dtype=jnp.float32)
         out[label] = _rel(o, ref)
         print(f"{label:34s} {out[label]:9.4f}")
-    cache = A.cache_write(A.init_kv_cache(B, Sk, Hkv, Dh), k, v, 0,
-                          PIMConfig())
-    o = ops.pim_flash_attention(q, cache, off, out_dtype=jnp.float32)
-    out["fused kernel (flash, ideal)"] = _rel(o, ref)
-    print(f"{'fused kernel (flash, ideal)':34s} "
-          f"{out['fused kernel (flash, ideal)']:9.4f}")
+
+    # ---- KV storage precision sweep: kv_bits 8 vs 4, every serve path ----
+    # same fp oracle, ideal ADC — the sweep isolates what packing the KV
+    # cache into 16-level dynamic-map codes costs on top of int8
+    pim_cfg = PIMConfig()
+    q1 = jax.random.normal(jax.random.fold_in(key, 4), (B, 1, H, Dh)) * 0.5
+    ref1 = A.fp_attention(q1, k, v, Sk - 1)
+    sweep = {}
+    for bits in (8, 4):
+        cache = A.cache_write(
+            A.init_kv_cache(B, Sk, Hkv, Dh, kv_bits=bits), k, v, 0, pim_cfg)
+        beh = A.pim_attention(q, cache, pim_cfg, lut, q_offset=off,
+                              out_dtype=jnp.float32)
+        pre = ops.pim_flash_attention(q, cache, off, decode_kernel=False,
+                                      out_dtype=jnp.float32)
+        dec = ops.pim_flash_attention(q1, cache, Sk - 1,
+                                      out_dtype=jnp.float32)
+        sweep[f"kv{bits}"] = {
+            "behavioral": _rel(beh, ref),
+            "prefill_kernel": _rel(pre, ref),
+            "decode_kernel": _rel(dec, ref1),
+        }
+    delta = {path: round(sweep["kv4"][path] - sweep["kv8"][path], 6)
+             for path in sweep["kv8"]}
+    for bits in (8, 4):
+        for path, err in sweep[f"kv{bits}"].items():
+            label = f"{path}, kv_bits={bits}"
+            out[label] = err
+            print(f"{label:34s} {err:9.4f}")
+    print(f"4-bit error delta (over int8): "
+          + "  ".join(f"{p}={d:+.4f}" for p, d in delta.items()))
     print("(ADC range calibration matters: too-wide full-scale wastes codes; "
           "~1/8 of theoretical max suits zero-mean int8 activations)")
+
+    metrics = {
+        "bench": "accuracy",
+        "shape": {"B": B, "Sq": Sq, "Sk": Sk, "H": H, "Hkv": Hkv, "Dh": Dh},
+        "rel_err": {k_: round(v_, 6) for k_, v_ in out.items()},
+        "kv_bits_sweep": {
+            b: {p: round(e, 6) for p, e in errs.items()}
+            for b, errs in sweep.items()},
+        "kv4_delta": delta,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+        print(f"[attention_accuracy] wrote {json_path}")
     return out
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_accuracy.json",
+                    help="metrics output path ('' = don't write)")
+    args = ap.parse_args(argv)
+    run(json_path=args.json)
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

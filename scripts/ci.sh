@@ -21,9 +21,17 @@ REPRO_AUDIT=1 python -m pytest -x -q tests/test_spill.py tests/test_faults.py \
 echo "== kernel + decode benches (parity + pruning probes) =="
 python -m benchmarks.run --only kernel_bench,decode_bench --json BENCH_kernels.json
 
+echo "== attention fidelity bench: PIM paths vs fp32, kv_bits 8 vs 4 =="
+# sweeps KV storage precision on the behavioral + both kernel paths and
+# records the 4-bit error delta (BENCH_accuracy.json) — ceiling-gated by
+# check_bench.py below: packing the KV cache must cost a bounded amount
+# of fidelity, and the int8 baselines must not drift either
+python -m benchmarks.attention_accuracy --json BENCH_accuracy.json
+
 echo "== serving bench: ragged vs padded + paged-pool vs slot-cache "
 echo "   + prefix-sharing vs unshared + mixed-steps vs stall "
-echo "   + page-spill vs recompute overload + speculative decoding (smoke) =="
+echo "   + page-spill vs recompute overload + speculative decoding "
+echo "   + 4-bit KV capacity at fixed HBM (smoke) =="
 # leg 2 is the paged-serving smoke (long-tail trace, BENCH_serving.json#
 # longtail); leg 3 is the prefix-sharing smoke (shared-system-prompt trace,
 # BENCH_serving.json#prefix); leg 4 is the chunked-prefill smoke (stall
@@ -32,8 +40,10 @@ echo "   + page-spill vs recompute overload + speculative decoding (smoke) =="
 # recovery + the bounded-queue/deadline admission probe,
 # BENCH_serving.json#overload); leg 6 is the speculative-decoding smoke
 # (agent trace, BENCH_serving.json#speculative: tokens per model step +
-# p50 TBT delta) — all must not regress vs their baselines
+# p50 TBT delta); leg 7 is the KV-capacity smoke (fixed HBM byte budget,
+# kv_bits 4 vs 8, BENCH_serving.json#capacity: resident-KV-token ratio +
+# tokens/sec ratio) — all must not regress vs their baselines
 python -m benchmarks.serving_bench --smoke
 
-echo "== bench-regression gate: recorded speedups vs floors =="
-python scripts/check_bench.py BENCH_serving.json
+echo "== bench-regression gate: recorded speedups vs floors/ceilings =="
+python scripts/check_bench.py BENCH_serving.json BENCH_accuracy.json

@@ -124,6 +124,11 @@ class ModelConfig:
     # flash-decode kernel when a serve step has Sq == 1
     decode_kernel: bool = True
     decode_block_k: int = 256      # KV partition size of the split-K grid
+    # KV-cache storage precision: 8 = int8 values (default, the paper's
+    # layout), 4 = blockwise dynamic-map codes packed two per byte (halves
+    # KV bytes/token; scale planes are the same absmax/127 grid either way).
+    # Ring (sliding-window) caches always store int8 regardless.
+    kv_bits: int = 8
     remat: str = "block"           # none|block — activation checkpointing
     # PIM integration
     pim: PIMConfig = PIMConfig()

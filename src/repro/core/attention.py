@@ -38,19 +38,36 @@ class KVCache(NamedTuple):
     as a zero-size placeholder.
     """
 
-    k_q: jax.Array        # (B, S, Hkv, Dh) int8
-    v_q: jax.Array        # (B, S, Hkv, Dh) int8
+    k_q: jax.Array        # (B, S, Hkv, Dh * kv_bits // 8) int8 (packed at 4)
+    v_q: jax.Array        # (B, S, Hkv, Dh * kv_bits // 8) int8 (packed at 4)
     k_scale: jax.Array    # (B, S, Hkv) f32
     v_scale: jax.Array    # (B, S, Hkv) f32
     length: jax.Array     # () int32 tokens written, or (B,) per-slot lengths
     positions: jax.Array  # (S,) int32 ring slot positions, or (0,) placeholder
 
 
+def packed_head_dim(head_dim: int, kv_bits: int) -> int:
+    """Stored last-dim width of the K/V planes: `head_dim` int8 bytes at
+    kv_bits=8, `head_dim // 2` bytes (two 4-bit codes per byte) at 4."""
+    assert kv_bits in (4, 8), kv_bits
+    assert kv_bits == 8 or head_dim % 2 == 0, head_dim
+    return head_dim * kv_bits // 8
+
+
+def cache_kv_bits(stored_dim: int, head_dim: int) -> int:
+    """Infer the stored KV precision from the packed vs logical head_dim —
+    the storage layout is the single source of truth, so every writer and
+    reader agrees without threading a flag through the call chain."""
+    return 4 if stored_dim * 2 == head_dim else 8
+
+
 def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
-                  ring: bool = False, ragged: bool = False) -> KVCache:
+                  ring: bool = False, ragged: bool = False,
+                  kv_bits: int = 8) -> KVCache:
+    dhp = packed_head_dim(head_dim, kv_bits)
     return KVCache(
-        k_q=jnp.zeros((batch, max_len, n_kv, head_dim), jnp.int8),
-        v_q=jnp.zeros((batch, max_len, n_kv, head_dim), jnp.int8),
+        k_q=jnp.zeros((batch, max_len, n_kv, dhp), jnp.int8),
+        v_q=jnp.zeros((batch, max_len, n_kv, dhp), jnp.int8),
         k_scale=jnp.zeros((batch, max_len, n_kv), jnp.float32),
         v_scale=jnp.zeros((batch, max_len, n_kv), jnp.float32),
         length=jnp.zeros((batch,) if ragged else (), jnp.int32),
@@ -104,12 +121,13 @@ class PagedKVCache(NamedTuple):
 
 
 def init_paged_kv_cache(num_pages: int, page_size: int, n_kv: int,
-                        head_dim: int) -> PagedKVCache:
+                        head_dim: int, kv_bits: int = 8) -> PagedKVCache:
     """Pool of `num_pages` pages (page 0 reserved as the trash page), each
     holding `page_size` tokens for all `n_kv` heads."""
+    dhp = packed_head_dim(head_dim, kv_bits)
     return PagedKVCache(
-        k_q=jnp.zeros((num_pages, page_size, n_kv, head_dim), jnp.int8),
-        v_q=jnp.zeros((num_pages, page_size, n_kv, head_dim), jnp.int8),
+        k_q=jnp.zeros((num_pages, page_size, n_kv, dhp), jnp.int8),
+        v_q=jnp.zeros((num_pages, page_size, n_kv, dhp), jnp.int8),
         k_scale=jnp.zeros((num_pages, page_size, n_kv), jnp.float32),
         v_scale=jnp.zeros((num_pages, page_size, n_kv), jnp.float32),
     )
@@ -132,7 +150,8 @@ def paged_cache_write(pool: PagedKVCache, k: jax.Array, v: jax.Array, pos,
     B, S = k.shape[:2]
     ps = pool.page_size
     n_tables = page_table.shape[1]
-    k_q, v_q, ks, vs = quantize_kv(k, v, cfg)
+    kv_bits = cache_kv_bits(pool.k_q.shape[-1], k.shape[-1])
+    k_q, v_q, ks, vs = quantize_kv(k, v, cfg, kv_bits)
     pos = jnp.asarray(pos, jnp.int32)
     logical = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]  # (B, S)
     valid = logical < n_tables * ps
@@ -239,12 +258,21 @@ def restore_pages(pool: PagedKVCache, pages: jax.Array, data: PagedKVCache,
                           for f in pool._fields])
 
 
-def quantize_kv(k: jax.Array, v: jax.Array, cfg: PIMConfig):
-    """Quantize-on-write (per token, per kv head)."""
+def quantize_kv(k: jax.Array, v: jax.Array, cfg: PIMConfig,
+                kv_bits: int = 8):
+    """Quantize-on-write (per token, per kv head).
+
+    The scale planes are the SAME per-(token, head) absmax/127 grid at every
+    precision; `kv_bits=4` stores 16-level dynamic-map codes on that grid
+    (two per int8 byte) instead of full int8 values."""
     k_scale = quant.symmetric_max_scale(k, cfg.input_bits, axis=-1)
     v_scale = quant.symmetric_max_scale(v, cfg.input_bits, axis=-1)
-    k_q = quant.quantize(k, k_scale, cfg.input_bits)
-    v_q = quant.quantize(v, v_scale, cfg.input_bits)
+    if kv_bits == 4:
+        k_q = quant.kv4_encode(k, k_scale)
+        v_q = quant.kv4_encode(v, v_scale)
+    else:
+        k_q = quant.quantize(k, k_scale, cfg.input_bits)
+        v_q = quant.quantize(v, v_scale, cfg.input_bits)
     return (k_q, v_q,
             k_scale[..., 0].astype(jnp.float32),
             v_scale[..., 0].astype(jnp.float32))
@@ -252,7 +280,8 @@ def quantize_kv(k: jax.Array, v: jax.Array, cfg: PIMConfig):
 
 def cache_write(cache: KVCache, k: jax.Array, v: jax.Array, pos, cfg: PIMConfig) -> KVCache:
     """Write new K/V at position `pos` (scalar) — the paper's K-write dataflow."""
-    k_q, v_q, ks, vs = quantize_kv(k, v, cfg)
+    kv_bits = cache_kv_bits(cache.k_q.shape[-1], k.shape[-1])
+    k_q, v_q, ks, vs = quantize_kv(k, v, cfg, kv_bits)
     idx = (0, pos, 0, 0)
     return KVCache(
         k_q=jax.lax.dynamic_update_slice(cache.k_q, k_q, idx),
@@ -308,7 +337,8 @@ def cache_write_ragged(cache: KVCache, k: jax.Array, v: jax.Array, pos,
     """
     B, S = k.shape[:2]
     max_len = cache.k_q.shape[1]
-    k_q, v_q, ks, vs = quantize_kv(k, v, cfg)
+    kv_bits = cache_kv_bits(cache.k_q.shape[-1], k.shape[-1])
+    k_q, v_q, ks, vs = quantize_kv(k, v, cfg, kv_bits)
     pos = jnp.asarray(pos, jnp.int32)
     rows = jnp.arange(B)[:, None]
     cols = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
@@ -590,6 +620,12 @@ def pim_attention(
     length prefill and continuous-batching decode never cross-contaminate.
     """
     B, Sq, H, Dh = q.shape
+    if cache_kv_bits(cache.k_q.shape[-1], Dh) == 4:
+        # blockwise 4-bit storage: decode the packed codes to their exact
+        # int8 dynamic-map levels — the scale planes are the unchanged
+        # absmax/127 grid, so everything downstream is the int8 pipeline
+        cache = cache._replace(k_q=quant.kv4_decode_int8(cache.k_q),
+                               v_q=quant.kv4_decode_int8(cache.v_q))
     Sk, Hkv = cache.k_q.shape[1], cache.k_q.shape[2]
     q_per_kv = H // Hkv
     # canonicalize to per-sequence vectors: q_off (B,), kv_len (B,)

@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def symmetric_max_scale(x: jax.Array, bits: int, axis=None, eps: float = 1e-8):
@@ -67,3 +68,89 @@ def from_fixed_point(code: jax.Array, frac_bits: int):
 def ste(exact: jax.Array, quantized: jax.Array) -> jax.Array:
     """Straight-through estimator: forward=quantized, backward=exact."""
     return exact + jax.lax.stop_gradient(quantized - exact)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise 4-bit KV codec (signed dynamic-map codebook)
+# ---------------------------------------------------------------------------
+
+def create_dynamic_map(signed: bool = True, max_exponent_bits: int = 2,
+                       total_bits: int = 4) -> np.ndarray:
+    """Signed dynamic data-type map (bitsandbytes `create_dynamic_map`).
+
+    The map spends `max_exponent_bits` on a base-10 dynamic exponent and the
+    rest on a linear fraction in [0.1, 1): for exponent slot i the codebook
+    holds the midpoints of ``linspace(0.1, 1, fraction_items)`` scaled by
+    ``10**(-(max_exponent_bits-1) + i)``, mirrored for the sign; any leftover
+    code space becomes one extra midpoint row at the largest exponent, and 0
+    and 1.0 are always exact codewords.  Returns the sorted codebook in
+    [-1, 1] with exactly ``2**total_bits`` entries.
+    """
+    data = []
+    non_sign_bits = total_bits - 1
+    additional_items = 2 ** (non_sign_bits - max_exponent_bits) - 1
+    for i in range(max_exponent_bits):
+        fraction_items = int(
+            2 ** (i + non_sign_bits - max_exponent_bits) + 1 if signed
+            else 2 ** (i + non_sign_bits - max_exponent_bits + 1) + 1)
+        boundaries = np.linspace(0.1, 1, fraction_items)
+        means = (boundaries[:-1] + boundaries[1:]) / 2.0
+        data += ((10 ** (-(max_exponent_bits - 1) + i)) * means).tolist()
+        if signed:
+            data += (-(10 ** (-(max_exponent_bits - 1) + i)) * means).tolist()
+    if additional_items > 0:
+        boundaries = np.linspace(0.1, 1, additional_items + 1)
+        means = (boundaries[:-1] + boundaries[1:]) / 2.0
+        data += means.tolist()
+        if signed:
+            data += (-means).tolist()
+    data.append(0.0)
+    if signed:
+        data.append(1.0)
+    assert len(data) == 2 ** total_bits, len(data)
+    return np.sort(np.asarray(data, np.float64))
+
+
+# The 16-entry signed dynamic map snapped to the int8 grid (x127, rounded):
+# dequantized 4-bit KV lands on EXACT int8 levels, so it reuses the existing
+# absmax/127 scale planes unchanged, the behavioral int32 einsum stays exact,
+# and the kernels' f32 dot over the same integer values is bit-identical.
+KV4_LEVELS = np.rint(create_dynamic_map() * 127.0).astype(np.int8)
+assert KV4_LEVELS.size == 16 and np.unique(KV4_LEVELS).size == 16
+# nearest-level decision boundaries: code = searchsorted(midpoints, x/scale)
+_KV4_MIDPOINTS = (KV4_LEVELS[:-1].astype(np.float32)
+                  + KV4_LEVELS[1:].astype(np.float32)) / 2.0
+
+
+def pack_codes4(codes: jax.Array) -> jax.Array:
+    """Pack 4-bit codes two-per-byte along the last axis, half-split: byte j
+    holds code j in its low nibble and code j + D/2 in its high nibble (a
+    lane-contiguous split, cheaper on TPU than an interleave)."""
+    d = codes.shape[-1]
+    assert d % 2 == 0, d
+    lo = codes[..., : d // 2].astype(jnp.int32)
+    hi = codes[..., d // 2 :].astype(jnp.int32)
+    return ((lo & 0xF) | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_codes4(packed: jax.Array) -> jax.Array:
+    """Inverse of `pack_codes4`: (..., D/2) int8 bytes -> (..., D) int32
+    codes in [0, 15]."""
+    p = packed.astype(jnp.int32) & 0xFF
+    return jnp.concatenate([p & 0xF, (p >> 4) & 0xF], axis=-1)
+
+
+def kv4_encode(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Blockwise 4-bit encode: map x/scale (the [-127, 127] int8 grid, with
+    `scale` the SAME per-block absmax/127 plane the int8 path uses) to the
+    nearest dynamic-map level and pack two codes per int8 byte."""
+    val = x / scale
+    codes = jnp.searchsorted(jnp.asarray(_KV4_MIDPOINTS), val)
+    return pack_codes4(codes)
+
+
+def kv4_decode_int8(packed: jax.Array) -> jax.Array:
+    """Packed 4-bit codes -> int8 values on the dynamic-map level grid
+    (the per-block scale is NOT applied — consumers multiply by the same
+    absmax/127 scale plane the int8 path uses)."""
+    return jnp.take(jnp.asarray(KV4_LEVELS), unpack_codes4(packed), axis=0)

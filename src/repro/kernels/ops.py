@@ -69,12 +69,16 @@ def kernel_attention_layout(q: jax.Array, cache: KVCache,
     """(B, Sq, H, Dh) float q + KVCache -> the flat head-major int8 operand
     layout the Pallas attention kernels take: (q_q, q_scale, k_q, k_scale,
     v_q, v_scale) with q rows (B*H, Sq, ...) and KV rows (B*Hkv, Sk, ...)
-    ordered so that q row bh maps to KV row bh // q_per_kv."""
+    ordered so that q row bh maps to KV row bh // q_per_kv.
+
+    The KV last dim follows the cache's STORED width — `Dh` int8 bytes at
+    kv_bits=8, `Dh/2` packed code bytes at 4 — which is how the kernels
+    learn the precision (they infer kv_bits from the q/KV width ratio)."""
     B, Sq, H, Dh = q.shape
-    _, Sk, Hkv, _ = cache.k_q.shape
+    _, Sk, Hkv, Dhk = cache.k_q.shape
     q_q, qs = _q_kernel_layout(q, input_bits)
-    k_q = cache.k_q.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, Dh)
-    v_q = cache.v_q.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, Dh)
+    k_q = cache.k_q.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, Dhk)
+    v_q = cache.v_q.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, Dhk)
     ks = cache.k_scale.transpose(0, 2, 1).reshape(B * Hkv, Sk)
     vs = cache.v_scale.transpose(0, 2, 1).reshape(B * Hkv, Sk)
     return q_q, qs, k_q, ks, v_q, vs

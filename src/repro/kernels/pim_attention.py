@@ -46,6 +46,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.configs.base import LUTSoftmaxConfig, PIMConfig
 from repro.core.lut_softmax import build_exp_table
+from repro.core.quant import KV4_LEVELS
 
 _NEG = float(-(1 << 24))
 
@@ -57,6 +58,26 @@ def _lut_gather(d: jax.Array, table_f: jax.Array) -> jax.Array:
         onehot.reshape(-1, 256), table_f.reshape(256, 1),
         (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
     ).reshape(d.shape)
+
+
+def _kv4_dequant(packed: jax.Array, levels_f: jax.Array) -> jax.Array:
+    """(r, Dh/2) int8 packed 4-bit KV codes -> (r, Dh) f32 codebook values.
+
+    Nibble unpack (low half of the head dim in the low nibbles, high half in
+    the high — `quant.pack_codes4`) followed by a 16-entry one-hot x table
+    matmul: the same LUT-as-crossbar idiom the exp table uses, fused at the
+    KV block load so no f32 (or even int8) KV plane is ever materialized in
+    HBM.  The levels are int8-exact integers, so the f32 Score dot against
+    an int8 q reproduces the behavioral int32 einsum exactly (|sum| <=
+    256*128*127 < 2^24)."""
+    p = packed.astype(jnp.int32) & 0xFF
+    codes = jnp.concatenate([p & 0xF, (p >> 4) & 0xF], axis=-1)
+    onehot = (codes[..., None] == jnp.arange(16, dtype=jnp.int32)
+              ).astype(jnp.float32)
+    return jax.lax.dot_general(
+        onehot.reshape(-1, 16), levels_f.reshape(16, 1),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    ).reshape(codes.shape)
 
 
 def _block_needed(k_start, block_k, q_lo, q_hi, kv_len, causal: bool,
@@ -74,12 +95,13 @@ def _block_needed(k_start, block_k, q_lo, q_hi, kv_len, causal: bool,
 def _attn_kernel(
     scalars_ref,                  # SMEM (3, nb): [q_offset_b, kv_len_b, q_len_b]
     pt_ref,                            # SMEM (nb, n_k_blocks) page table
-    q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, table_ref,
+    q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, table_ref, lv_ref,
     out_ref, iters_ref,
     m_ref, denom_ref, acc_ref,
     *, block_q: int, block_k: int, n_k_blocks: int, causal: bool,
     window: int, sm_scale: float, score_scale: float, input_bits: int,
     table_frac_bits: int, gather_chunk: int, prune: bool, h_per_b: int,
+    kv_bits: int,
 ):
     ki = pl.program_id(2)
 
@@ -121,10 +143,18 @@ def _attn_kernel(
     def _body():
         iters_ref[0, 0] += 1
         q = q_ref[...][0]                  # (bq, Dh) int8
-        k = k_ref[...].reshape(block_k, k_ref.shape[-1])   # (bk, Dh) int8
-        s_int = jax.lax.dot_general(       # (bq, bk) int32 — the PIM Score engine
-            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
-        )
+        k = k_ref[...].reshape(block_k, k_ref.shape[-1])   # (bk, Dh[/2]) int8
+        if kv_bits == 4:
+            # LUT-fused dequant at the block load: exact int8-valued f32
+            # levels, so this f32 dot == the behavioral int32 einsum
+            k = _kv4_dequant(k, lv_ref[...].astype(jnp.float32))
+            s_int = jax.lax.dot_general(   # (bq, bk) exact-integer f32
+                q.astype(jnp.float32), k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        else:
+            s_int = jax.lax.dot_general(   # (bq, bk) int32 — the PIM Score engine
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32)
         qs = qs_ref[...][0]                # (bq,) f32
         ks = ks_ref[...].reshape(block_k)  # (bk,) f32
         s_real = s_int.astype(jnp.float32) * qs[:, None] * ks[None, :] * sm_scale
@@ -166,9 +196,12 @@ def _attn_kernel(
             e = jax.lax.dynamic_update_slice(e, e_c, (0, lo))
 
         denom_ref[...] = denom_ref[...] * resc + jnp.sum(e, axis=-1, keepdims=True)
-        v = v_ref[...].reshape(block_k, v_ref.shape[-1])   # (bk, Dh) int8
+        v = v_ref[...].reshape(block_k, v_ref.shape[-1])   # (bk, Dh[/2]) int8
         vs = vs_ref[...].reshape(block_k)  # (bk,) f32
-        v_deq = v.astype(jnp.float32) * vs[:, None]
+        if kv_bits == 4:
+            v_deq = _kv4_dequant(v, lv_ref[...].astype(jnp.float32)) * vs[:, None]
+        else:
+            v_deq = v.astype(jnp.float32) * vs[:, None]
         pv = jax.lax.dot_general(
             e, v_deq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
         )
@@ -191,7 +224,8 @@ def _attn_kernel(
 def pim_attention_pallas(
     q_q: jax.Array,        # (BH, Sq, Dh) int8
     q_scale: jax.Array,    # (BH, Sq) f32
-    k_q: jax.Array,        # (BHkv, Sk, Dh) int8, or (Hkv, P, ps, Dh) paged
+    k_q: jax.Array,        # (BHkv, Sk, Dh) int8, or (Hkv, P, ps, Dh) paged;
+                           #   last dim Dh/2 when packed 4-bit (kv_bits=4)
     k_scale: jax.Array,    # (BHkv, Sk) f32, or (Hkv, P, ps) paged
     v_q: jax.Array,        # like k_q
     v_scale: jax.Array,    # like k_scale
@@ -239,8 +273,18 @@ def pim_attention_pallas(
     With `return_iters=True` also returns the (BH, n_q_blocks) int32 count of
     KV-block iterations each q-block actually executed (the grid-pruning
     probe: causal prefill ~halves it, decode sees ceil(kv_len/block_k)).
+
+    Blockwise 4-bit KV is signalled by the storage layout (K/V last dim ==
+    Dh/2): the kernel unpacks nibbles and dequantizes through the 16-entry
+    dynamic-map codebook at the block load (`_kv4_dequant`) — no f32 or
+    int8 KV plane is materialized, and since the codebook levels are exact
+    int8 integers the f32 Score dot matches the behavioral int32 einsum.
     """
     BH, Sq, Dh = q_q.shape
+    # stored KV width: Dh int8 bytes at kv_bits=8, Dh/2 packed bytes at 4 —
+    # the storage layout is the kv_bits signal (static under jit)
+    Dhk = k_q.shape[-1]
+    kv_bits = 4 if Dhk * 2 == Dh else 8
     q_off = jnp.reshape(jnp.asarray(q_offset, jnp.int32), (-1,))
     kvl = jnp.reshape(jnp.asarray(kv_len, jnp.int32), (-1,))
     ql = jnp.reshape(jnp.asarray(Sq if q_len is None else q_len, jnp.int32),
@@ -283,8 +327,9 @@ def pim_attention_pallas(
         sm_scale=1.0 / (Dh ** 0.5), score_scale=lut_cfg.score_scale,
         input_bits=lut_cfg.input_bits, table_frac_bits=frac,
         gather_chunk=min(gather_chunk, block_k),
-        prune=prune, h_per_b=h_per_b,
+        prune=prune, h_per_b=h_per_b, kv_bits=kv_bits,
     )
+    levels = jnp.asarray(KV4_LEVELS, jnp.float32)            # (16,) codebook
     scalars = jnp.stack(
         [jnp.broadcast_to(q_off, (nb,)), jnp.broadcast_to(kvl, (nb,)),
          jnp.broadcast_to(ql, (nb,))]
@@ -295,7 +340,7 @@ def pim_attention_pallas(
         # scalar-prefetched table (clamped to the trash page when -1 — the
         # guarded body never reads the placeholder)
         kv_spec = pl.BlockSpec(
-            (1, 1, block_k, Dh),
+            (1, 1, block_k, Dhk),
             lambda b, i, k, s, t, qpk=q_per_kv, hk=Hkv, hb=h_per_b: (
                 jax.lax.rem(b // qpk, hk),
                 jnp.maximum(t[b // hb, k], 0), 0, 0),
@@ -308,7 +353,7 @@ def pim_attention_pallas(
         )
     else:
         kv_spec = pl.BlockSpec(
-            (1, block_k, Dh),
+            (1, block_k, Dhk),
             lambda b, i, k, s, t, qpk=q_per_kv: (b // qpk, k, 0),
         )
         kvs_spec = pl.BlockSpec(
@@ -327,6 +372,7 @@ def pim_attention_pallas(
                 kv_spec,
                 kvs_spec,
                 pl.BlockSpec((256,), lambda b, i, k, s, t: (0,)),
+                pl.BlockSpec((16,), lambda b, i, k, s, t: (0,)),
             ],
             out_specs=[
                 pl.BlockSpec((1, block_q, Dh), lambda b, i, k, s, t: (b, i, 0)),
@@ -343,7 +389,7 @@ def pim_attention_pallas(
             jax.ShapeDtypeStruct((BH, Sqp // block_q), jnp.int32),
         ],
         interpret=interpret,
-    )(scalars, pt, q_q, q_scale, k_q, k_scale, v_q, v_scale, table)
+    )(scalars, pt, q_q, q_scale, k_q, k_scale, v_q, v_scale, table, levels)
     out = out[:, :Sq]
     if return_iters:
         return out, iters

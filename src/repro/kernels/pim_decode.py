@@ -51,16 +51,19 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.configs.base import LUTSoftmaxConfig, PIMConfig
 from repro.core.lut_softmax import build_exp_table
-from repro.kernels.pim_attention import _NEG, _block_needed, _lut_gather
+from repro.core.quant import KV4_LEVELS
+from repro.kernels.pim_attention import (_NEG, _block_needed, _kv4_dequant,
+                                         _lut_gather)
 
 
 def _decode_kernel(
     scalars_ref,                  # SMEM (3, nb): [q_pos_b, kv_len_b, q_len_b]
     pt_ref,                            # SMEM (nb, n_k_blocks) page table
-    q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, table_ref,
+    q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref, table_ref, lv_ref,
     m_ref, den_ref, acc_ref, iters_ref,
     *, block_k: int, r_pad: int, g: int, sq: int, causal: bool, window: int,
     sm_scale: float, score_scale: float, input_bits: int, hkv_per_b: int,
+    kv_bits: int,
 ):
     ki = pl.program_id(1)
     # per-sequence scalars: each (b, hkv) grid row early-outs against ITS OWN
@@ -86,10 +89,18 @@ def _decode_kernel(
     def _body():
         iters_ref[0, 0] = 1
         q = q_ref[...].reshape(r_pad, q_ref.shape[-1])    # (R, Dh) int8
-        k = k_ref[...].reshape(block_k, k_ref.shape[-1])  # (bk, Dh) int8
-        s_int = jax.lax.dot_general(   # (R, bk) int32 — the PIM Score engine
-            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
-        )
+        k = k_ref[...].reshape(block_k, k_ref.shape[-1])  # (bk, Dh[/2]) int8
+        if kv_bits == 4:
+            # LUT-fused codebook dequant at the page load: exact int8-valued
+            # f32 levels, so this f32 dot == the behavioral int32 einsum
+            k = _kv4_dequant(k, lv_ref[...].astype(jnp.float32))
+            s_int = jax.lax.dot_general(   # (R, bk) exact-integer f32
+                q.astype(jnp.float32), k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        else:
+            s_int = jax.lax.dot_general(   # (R, bk) int32 — the PIM Score engine
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32)
         qs = qs_ref[...].reshape(r_pad)                   # (R,) f32
         ks = ks_ref[...].reshape(block_k)                 # (bk,) f32
         s_real = s_int.astype(jnp.float32) * qs[:, None] * ks[None, :] * sm_scale
@@ -117,9 +128,13 @@ def _decode_kernel(
         m = jnp.max(codes, axis=-1, keepdims=True)           # (R, 1)
         d = jnp.clip(m - codes, 0, 255).astype(jnp.int32)
         e = jnp.where(mask, _lut_gather(d, table_f), 0.0)    # (R, bk)
-        v = v_ref[...].reshape(block_k, v_ref.shape[-1])     # (bk, Dh) int8
+        v = v_ref[...].reshape(block_k, v_ref.shape[-1])     # (bk, Dh[/2]) int8
         vs = vs_ref[...].reshape(block_k)                    # (bk,) f32
-        v_deq = v.astype(jnp.float32) * vs[:, None]
+        if kv_bits == 4:
+            v_deq = (_kv4_dequant(v, lv_ref[...].astype(jnp.float32))
+                     * vs[:, None])
+        else:
+            v_deq = v.astype(jnp.float32) * vs[:, None]
         acc = jax.lax.dot_general(     # (R, Dh)
             e, v_deq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
         )
@@ -195,6 +210,10 @@ def pim_decode_pallas(
     KV partitions that actually ran (sum == blocks touched this token).
     """
     BH, Sq, Dh = q_q.shape
+    # stored KV width: Dh int8 bytes at kv_bits=8, Dh/2 packed bytes at 4 —
+    # the storage layout is the kv_bits signal (static under jit)
+    Dhk = k_q.shape[-1]
+    kv_bits = 4 if Dhk * 2 == Dh else 8
     q_off = jnp.reshape(jnp.asarray(q_offset, jnp.int32), (-1,))
     kvl = jnp.reshape(jnp.asarray(kv_len, jnp.int32), (-1,))
     ql = jnp.reshape(jnp.asarray(Sq if q_len is None else q_len, jnp.int32),
@@ -242,8 +261,9 @@ def pim_decode_pallas(
         block_k=block_k, r_pad=r_pad, g=G, sq=Sq, causal=causal,
         window=window,
         sm_scale=1.0 / (Dh ** 0.5), score_scale=lut_cfg.score_scale,
-        input_bits=lut_cfg.input_bits, hkv_per_b=hkv_per_b,
+        input_bits=lut_cfg.input_bits, hkv_per_b=hkv_per_b, kv_bits=kv_bits,
     )
+    levels = jnp.asarray(KV4_LEVELS, jnp.float32)            # (16,) codebook
     scalars = jnp.stack(
         [jnp.broadcast_to(q_off, (nb,)), jnp.broadcast_to(kvl, (nb,)),
          jnp.broadcast_to(ql, (nb,))]
@@ -253,7 +273,7 @@ def pim_decode_pallas(
         # clamped to the trash page for unallocated entries (the guarded
         # kernel body never reads the placeholder block)
         kv_spec = pl.BlockSpec(
-            (1, 1, block_k, Dh),
+            (1, 1, block_k, Dhk),
             lambda b, k, s, t, h=hkv_per_b: (
                 jax.lax.rem(b, h), jnp.maximum(t[b // h, k], 0), 0, 0),
         )
@@ -263,7 +283,7 @@ def pim_decode_pallas(
                 jax.lax.rem(b, h), jnp.maximum(t[b // h, k], 0), 0),
         )
     else:
-        kv_spec = pl.BlockSpec((1, block_k, Dh), lambda b, k, s, t: (b, k, 0))
+        kv_spec = pl.BlockSpec((1, block_k, Dhk), lambda b, k, s, t: (b, k, 0))
         kvs_spec = pl.BlockSpec((1, block_k), lambda b, k, s, t: (b, k))
     part_m, part_den, part_acc, iters = pl.pallas_call(
         kernel,
@@ -278,6 +298,7 @@ def pim_decode_pallas(
                 kv_spec,
                 kvs_spec,
                 pl.BlockSpec((256,), lambda b, k, s, t: (0,)),
+                pl.BlockSpec((16,), lambda b, k, s, t: (0,)),
             ],
             out_specs=[
                 pl.BlockSpec((1, 1, r_pad), lambda b, k, s, t: (b, k, 0)),
@@ -293,7 +314,7 @@ def pim_decode_pallas(
             jax.ShapeDtypeStruct((BHkv, n_k_blocks), jnp.int32),
         ],
         interpret=interpret,
-    )(scalars, pt, qg, qsg, k_q, k_scale, v_q, v_scale, table)
+    )(scalars, pt, qg, qsg, k_q, k_scale, v_q, v_scale, table, levels)
 
     # ---- stage 2: combine partitions in the LUT domain ---------------------
     # Rescale each partition to the global max with exp(-d*s) = table[d]/2^frac

@@ -54,6 +54,11 @@ def main(argv=None):
                          "kernel path (force the prefill kernel for Sq==1)")
     ap.add_argument("--decode-block-k", type=int, default=0,
                     help="KV partition size of the split-K decode grid")
+    ap.add_argument("--kv-bits", type=int, default=0, choices=[0, 4, 8],
+                    help="KV-cache storage precision: 8 = int8 values "
+                         "(default), 4 = blockwise dynamic-map codes packed "
+                         "two per byte — halves KV bytes/token (0 = keep "
+                         "the arch config)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 samples with temperature softmax")
     ap.add_argument("--top-k", type=int, default=0,
@@ -161,6 +166,8 @@ def main(argv=None):
         cfg = dataclasses.replace(cfg, decode_kernel=False)
     if args.decode_block_k:
         cfg = dataclasses.replace(cfg, decode_block_k=args.decode_block_k)
+    if args.kv_bits:
+        cfg = dataclasses.replace(cfg, kv_bits=args.kv_bits)
     model = build_model(cfg)
     mesh = None
     if args.mesh:
@@ -220,6 +227,8 @@ def main(argv=None):
         mode = "scan-fused"
     if args.mixed_steps:
         mode += "+mixed-steps"
+    if cfg.kv_bits != 8:
+        mode += f"+kv{cfg.kv_bits}"
     if args.speculate:
         mode += f"+speculative({args.draft_mode},k={args.draft_len})"
     print(f"[serve] arch={cfg.name} attn={cfg.attn_impl} mode={mode} "

@@ -117,11 +117,16 @@ def attn_block_init_state(cfg: ModelConfig, batch: int, max_len: int,
             raise NotImplementedError(
                 "paged KV does not support sliding-window (ring) layers")
         return A.init_paged_kv_cache(num_pages, page_size, cfg.num_kv_heads,
-                                     cfg.resolved_head_dim)
+                                     cfg.resolved_head_dim,
+                                     kv_bits=cfg.kv_bits)
     ring = bool(window) and max_len > window
     cache_len = min(max_len, window) if ring else max_len
+    # ring caches stay int8 — `pim_attention_ring` reads raw int8 slots and
+    # sliding windows cap the resident KV anyway, so sub-int8 buys little
+    kv_bits = 8 if ring else cfg.kv_bits
     return A.init_kv_cache(batch, cache_len, cfg.num_kv_heads,
-                           cfg.resolved_head_dim, ring=ring, ragged=ragged)
+                           cfg.resolved_head_dim, ring=ring, ragged=ragged,
+                           kv_bits=kv_bits)
 
 
 def _serve_attend(q, cache, offset, cfg: ModelConfig, window: int, causal: bool,

@@ -51,11 +51,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import dataclasses
+
 from repro.configs.base import ModelConfig
 from repro.core.attention import TRASH_PAGE
 from repro.models import transformer as T
-from repro.models.model_zoo import Model
+from repro.models.model_zoo import Model, build_model
 from repro.runtime.fault import FaultPlan
+
+
+def kv_bytes_per_token(cfg: ModelConfig) -> int:
+    """Device bytes one cached token costs across all layers: K + V values
+    at `cfg.kv_bits` precision (packed two-per-byte at 4) plus the two f32
+    absmax scale planes, which exist at every precision."""
+    hkv = cfg.num_kv_heads
+    value_bytes = 2 * hkv * (cfg.resolved_head_dim * cfg.kv_bits // 8)
+    scale_bytes = 2 * 4 * hkv
+    return cfg.num_layers * (value_bytes + scale_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -789,7 +801,14 @@ class Scheduler:
                  draft_mode: str = "ngram",
                  fault_plan: Optional[FaultPlan] = None,
                  audit_every_step: Optional[bool] = None,
+                 kv_bits: int = 0,
                  clock: Callable[[], float] = time.monotonic):
+        if kv_bits and kv_bits != model.cfg.kv_bits:
+            # rebuild the step closures around the requested KV precision —
+            # cache layout is baked into every jitted step, so a config
+            # override (not a runtime flag) is the only correct seam
+            model = build_model(
+                dataclasses.replace(model.cfg, kv_bits=int(kv_bits)))
         if not scheduler_supported(model.cfg):
             raise NotImplementedError(
                 f"arch {model.cfg.name!r} is not supported by the slot "
@@ -904,11 +923,10 @@ class Scheduler:
         self._victim: Dict[int, _SpillRecord] = {}
         self._victim_used = 0                 # host pages currently held
         if self.paged:
-            cfg = model.cfg
-            hkv = cfg.num_kv_heads
-            self._page_bytes = (cfg.num_layers * self.page_size
-                                * (2 * hkv * cfg.resolved_head_dim
-                                   + 2 * 4 * hkv))
+            # per-token byte width follows the cache's STORED precision
+            # (kv_bits=4 packs two codes per byte), so spill accounting and
+            # capacity planning both halve with the cache
+            self._page_bytes = self.page_size * kv_bytes_per_token(model.cfg)
         else:
             self._page_bytes = 0
         self._step_idx = 0
@@ -2100,6 +2118,7 @@ class Scheduler:
             "restores": self.n_restores,
             "spilled_pages": self.spilled_pages,
             "spill_bytes": self.spill_bytes,
+            "kv_bytes_per_token": kv_bytes_per_token(self.model.cfg),
             "recompute_fallbacks": self.n_recompute_fallbacks,
             "deadline_misses": self.n_deadline_misses,
             "rejections": self.n_rejections,
@@ -2148,7 +2167,8 @@ def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
              draft_mode: str = "ngram",
              deadline_ms: Optional[float] = None,
              ttl_steps: Optional[int] = None,
-             fault_plan: Optional[FaultPlan] = None) -> jax.Array:
+             fault_plan: Optional[FaultPlan] = None,
+             kv_bits: int = 0) -> jax.Array:
     """Batched generation. Returns (B, max_new_tokens) generated ids.
 
     Default: equal-length prefill + scan-fused decode (the paper's token
@@ -2174,7 +2194,14 @@ def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
     temperature=0 reproduces greedy decoding exactly; temperature>0 samples
     (optionally top_k- and/or nucleus-top_p-truncated) with `rng`
     (default PRNGKey(0)).
+
+    `kv_bits` (0 = keep the model's config) overrides KV-cache storage
+    precision for this run — 4 packs two dynamic-map codes per byte,
+    halving cache bytes/token.
     """
+    if kv_bits and kv_bits != model.cfg.kv_bits:
+        model = build_model(dataclasses.replace(model.cfg,
+                                                kv_bits=int(kv_bits)))
     B, S = prompt_batch["tokens"].shape
     rng = jax.random.PRNGKey(0) if rng is None else rng
     if speculate and not continuous_batching:
