@@ -99,6 +99,8 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import shutil
+import tempfile
 import time
 
 import jax
@@ -113,6 +115,7 @@ from repro.kernels.ops import kernel_attention_layout
 from repro.kernels.pim_decode import pim_decode_pallas
 from repro.models.model_zoo import build_model
 from repro.runtime import serve_lib
+from repro.runtime.fault import CrashInjected, FaultPlan
 
 
 def _base_tokens(seed: int, n: int, length: int, vocab: int) -> np.ndarray:
@@ -196,9 +199,15 @@ def _serve_ragged(model, params, trace, slots, max_len, chunk,
                                 speculate=speculate, draft_len=draft_len,
                                 kv_bits=kv_bits)
     rids, submit_t = [], {}
-    for p, t in trace:
+    for i, (p, t) in enumerate(trace):
+        # ttl_steps may be a scalar (same deadline for everyone) or a
+        # per-request list — admitted-deadline enforcement counts a
+        # request's ttl from submit whether it is queued OR running, so
+        # overload probes give residents headroom and waiters a short fuse
+        ttl = (ttl_steps[i] if isinstance(ttl_steps, (list, tuple))
+               else ttl_steps)
         try:
-            rid = sched.submit(p, t, ttl_steps=ttl_steps)
+            rid = sched.submit(p, t, ttl_steps=ttl)
             submit_t[rid] = time.time()
             rids.append(rid)
         except serve_lib.Overloaded:
@@ -655,17 +664,22 @@ def run(smoke: bool = False):
     # untimed admission-control probe: same overload plus one extra submit
     # against a queue bounded at ov_req (the burst itself fills it, so the
     # extra submit must bounce with Overloaded) and a ttl measured from
-    # submit that the starved requests cannot survive — the queue waiters
-    # shed before a slot ever frees, and the first thrashed-out resident
-    # sheds from the requeue (exercising victim-record cleanup on a
-    # SPILLED continuation).  Backpressure and shedding change WHO gets
-    # served and how far, never the bytes of what was streamed: every
-    # result must be a bit-exact prefix of the unconstrained run.
+    # submit that the starved requests cannot survive.  Deadlines now bind
+    # ADMITTED requests too (a running slot past its ttl retires with
+    # partial tokens kept and pages freed), so the probe hands them out
+    # per-request: the two requests that will hold the slots get no
+    # deadline — a shared scalar ttl would shed them mid-thrash and
+    # nothing would ever complete — while every queue waiter keeps the
+    # short fuse and sheds before a slot frees.  Backpressure and
+    # shedding change WHO gets served and how far, never the bytes of
+    # what was streamed: every result must be a bit-exact prefix of the
+    # unconstrained run.
     ov_probe = ov_trace + [ov_trace[-1]]
+    ov_ttls = [None] * ov_slots + [ov_ttl] * (len(ov_probe) - ov_slots)
     _, pb_sched, res_pb, _ = _serve_ragged(
         model, params, ov_probe, ov_slots, ov_max_len, chunk,
         page_size=ov_ps, num_pages=ov_pool + 1,
-        victim_pool_pages=ov_victim, max_queue=ov_req, ttl_steps=ov_ttl)
+        victim_pool_pages=ov_victim, max_queue=ov_req, ttl_steps=ov_ttls)
     pb_stats = pb_sched.stats
     assert pb_stats["rejections"] == 1, pb_stats
     assert res_pb[-1] == [], "rejected submit must serve zero tokens"
@@ -802,6 +816,73 @@ def run(smoke: bool = False):
     it_r, it_p = _decode_blocks_probe(probe_lens, probe_max, blk)
     print(f"decode KV partitions/token (block_k={blk}, slot lens "
           f"{probe_lens}, cache {probe_max}): ragged {it_r} vs padded {it_p}")
+
+    # ---- leg 8: recovery trace — crash mid-trace, restore, finish --------
+    # the paged+sharing scheduler snapshots every `rv_every` steps while a
+    # `crash_at_step` fault kills it mid-trace; a fresh same-config
+    # scheduler restores the newest intact generation (config fingerprint
+    # + per-leaf crc + KV-page checksums all verified) and finishes the
+    # trace.  Recorded: restore latency (manifest read + integrity verify
+    # + pool upload), stream bit-equality against an uncrashed run, and
+    # zero leaked pages once the prefix directory is dropped — the latter
+    # two are check_bench floors (1.0 means the invariant held).
+    if smoke:
+        (rv_req, rv_prompt, rv_budget, rv_slots, rv_ps, rv_pool,
+         rv_max_len, rv_every, rv_crash) = (4, 48, 16, 2, 8, 64, 96, 2, 3)
+    else:
+        (rv_req, rv_prompt, rv_budget, rv_slots, rv_ps, rv_pool,
+         rv_max_len, rv_every, rv_crash) = (6, 256, 48, 3, 16, 200, 384,
+                                            2, 4)
+    rv_base = _base_tokens(23, rv_req, rv_prompt, cfg.vocab_size)
+    rv_trace = [(rv_base[i, :rv_prompt].tolist(), rv_budget)
+                for i in range(rv_req)]
+    print(f"\nrecovery trace: {rv_req} requests x {rv_prompt}-token prompt, "
+          f"budget {rv_budget}; snapshot every {rv_every} steps, crash at "
+          f"step {rv_crash}")
+
+    def rv_sched(snapshot_dir=None, snapshot_every=0, fault_plan=None):
+        s = serve_lib.Scheduler(
+            model, params, max_batch_slots=rv_slots, max_len=rv_max_len,
+            decode_chunk=chunk, page_size=rv_ps, num_pages=rv_pool,
+            prefix_sharing=True, integrity="checksum",
+            snapshot_dir=snapshot_dir, snapshot_every=snapshot_every,
+            fault_plan=fault_plan)
+        for p, t in rv_trace:
+            s.submit(p, t)
+        return s
+
+    ref_sched = rv_sched()
+    ref_sched.run()
+    rv_ref = ref_sched.results()
+    rv_dir = tempfile.mkdtemp(prefix="bench_recovery_")
+    try:
+        crash_sched = rv_sched(snapshot_dir=rv_dir, snapshot_every=rv_every,
+                               fault_plan=FaultPlan(crash_at_step=rv_crash))
+        try:
+            crash_sched.run()
+            raise AssertionError("crash_at_step never fired mid-trace")
+        except CrashInjected:
+            pass
+        assert crash_sched.n_snapshots >= 1, crash_sched.n_snapshots
+        rv2 = rv_sched(snapshot_dir=rv_dir, snapshot_every=rv_every,
+                       fault_plan=FaultPlan(crash_at_step=rv_crash))
+        t0 = time.time()
+        rv_step = rv2.restore()
+        rv_restore_s = time.time() - t0
+        rv2.run()
+        # run() returns only the tokens emitted after the restore; results()
+        # is the full per-request stream incl. the pre-crash prefix
+        rv_res = rv2.results()
+        rv2.audit()
+    finally:
+        shutil.rmtree(rv_dir, ignore_errors=True)
+    rv_bit = float(rv_res == rv_ref)
+    rv2.clear_prefix_cache()
+    rv_leak = float(rv2.pages_in_use() == 0)
+    print(f"crashed at step {rv_crash}, restored generation {rv_step} in "
+          f"{rv_restore_s * 1e3:.1f}ms; streams bit-identical: "
+          f"{bool(rv_bit)}, leaked pages after directory drop: "
+          f"{rv2.pages_in_use()}")
 
     metrics = {
         "mode": mode,
@@ -957,6 +1038,18 @@ def run(smoke: bool = False):
             "int8_tbt": tbt_k8,
             "4bit_tbt": tbt_k4,
         },
+        "recovery": {
+            "n_requests": rv_req, "prompt_len": rv_prompt,
+            "completion_budget": rv_budget,
+            "slots": rv_slots, "max_len": rv_max_len,
+            "page_size": rv_ps, "pool_pages": rv_pool,
+            "snapshot_every": rv_every, "crash_at_step": rv_crash,
+            "snapshots_taken": crash_sched.n_snapshots,
+            "restored_step": rv_step,
+            "restore_latency_s": round(rv_restore_s, 4),
+            "bit_identical": rv_bit,
+            "no_leaked_pages": rv_leak,
+        },
     }
     with open("BENCH_serving.json", "w") as f:
         json.dump(metrics, f, indent=2, sort_keys=True)
@@ -1009,6 +1102,11 @@ def run(smoke: bool = False):
         f"<= {ov_margin}x ({tps_sp:.1f} vs {tps_rc:.1f} tok/s)")
     assert sp_stats["spills"] >= 1 and sp_stats["restores"] >= 1, sp_stats
     assert rc_sched.n_evictions >= 1, rc_sched.n_evictions
+    # crash recovery must resume bit-identically and leak nothing — these
+    # are invariants, not perf numbers: no smoke tolerance
+    assert rv_bit == 1.0, "restored run diverged from the uncrashed trace"
+    assert rv_leak == 1.0, f"{rv2.pages_in_use()} pages leaked after restore"
+    assert rv_step >= 1, rv_step
     # speculative decoding must verify-and-accept enough drafted tokens on
     # the agent trace to beat the one-token-per-step baseline by the ISSUE
     # bar (>= 1.5x tokens per model step in full mode).  The ratio is a

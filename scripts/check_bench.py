@@ -60,6 +60,13 @@ FLOORS = [
     # wall-clock, so smoke gets the usual shared-runner band.
     ("capacity.resident_kv_token_ratio", 1.7, 1.7),
     ("capacity.tokens_per_sec_ratio", 0.9, 0.6),
+    # crash recovery (PR 10): both are INVARIANTS (1.0 = held), not perf
+    # numbers — a restored scheduler must finish the trace bit-identically
+    # to an uncrashed run and leak zero pages, in smoke and full alike.
+    # Restore latency is recorded (recovery.restore_latency_s) but not
+    # floored: it scales with pool bytes, which differ per box.
+    ("recovery.bit_identical", 1.0, 1.0),
+    ("recovery.no_leaked_pages", 1.0, 1.0),
 ]
 
 # (dotted key path, full-mode ceiling, smoke-mode ceiling) — accuracy jsons

@@ -9,14 +9,15 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 echo "== tier-1 test suite (includes interpret-mode kernel parity) =="
 python -m pytest -x -q
 
-echo "== scheduler fault + speculation suites under per-step invariant audit =="
-# re-runs the spill + fault-injection + speculative-decoding suites with
-# the refcount/page-leak/page-table auditor forced on after EVERY scheduler
-# step (REPRO_AUDIT=1) — chaos sweeps, forced evictions, alloc failures,
-# restore delays, corrupt-then-detect and draft-token page allocation with
-# mid-verify retirement must all pass with zero leaked pages
+echo "== scheduler fault + speculation + recovery suites under per-step invariant audit =="
+# re-runs the spill + fault-injection + speculative-decoding + crash-recovery
+# suites with the refcount/page-leak/page-table auditor forced on after EVERY
+# scheduler step (REPRO_AUDIT=1) — chaos sweeps, forced evictions, alloc
+# failures, restore delays, corrupt-then-detect, draft-token page allocation
+# with mid-verify retirement, snapshot/restore round-trips, KV-page bitflip
+# detection and NaN-request quarantine must all pass with zero leaked pages
 REPRO_AUDIT=1 python -m pytest -x -q tests/test_spill.py tests/test_faults.py \
-    tests/test_speculative.py
+    tests/test_speculative.py tests/test_recovery.py
 
 echo "== kernel + decode benches (parity + pruning probes) =="
 python -m benchmarks.run --only kernel_bench,decode_bench --json BENCH_kernels.json
@@ -42,7 +43,10 @@ echo "   + 4-bit KV capacity at fixed HBM (smoke) =="
 # (agent trace, BENCH_serving.json#speculative: tokens per model step +
 # p50 TBT delta); leg 7 is the KV-capacity smoke (fixed HBM byte budget,
 # kv_bits 4 vs 8, BENCH_serving.json#capacity: resident-KV-token ratio +
-# tokens/sec ratio) — all must not regress vs their baselines
+# tokens/sec ratio); leg 8 is the recovery smoke (crash mid-trace,
+# restore newest snapshot, finish: BENCH_serving.json#recovery —
+# bit-identical streams + zero leaked pages are invariant-gated) — all
+# must not regress vs their baselines
 python -m benchmarks.serving_bench --smoke
 
 echo "== bench-regression gate: recorded speedups vs floors/ceilings =="

@@ -50,18 +50,36 @@ def save(directory: str, step: int, tree: Any, keep: int = 3) -> str:
             store = arr.view(np.uint16 if logical_dtype == "bfloat16"
                              else np.uint8)
         path = os.path.join(tmp, f"leaf_{i:05d}.npy")
-        np.save(path, store)
+        with open(path, "wb") as f:
+            np.save(f, store)
+            f.flush()
+            os.fsync(f.fileno())
         manifest["leaves"].append({
             "i": i, "shape": list(arr.shape), "dtype": logical_dtype,
             "crc": zlib.crc32(store.tobytes()),
         })
     with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
         f.write(msgpack.packb(manifest))
+        f.flush()
+        os.fsync(f.fileno())
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)           # atomic commit
+    # a crash between rename and the directory-entry flush could lose the
+    # rename itself — fsync the parent so the commit is durable too
+    dirfd = os.open(directory, os.O_RDONLY)
+    try:
+        os.fsync(dirfd)
+    finally:
+        os.close(dirfd)
     _gc(directory, keep)
     return final
+
+
+def latest_step(directory: str) -> int:
+    """Newest generation number on disk, or -1 if none exist."""
+    gens = list_generations(directory)
+    return gens[-1] if gens else -1
 
 
 def _gc(directory: str, keep: int):

@@ -15,6 +15,7 @@ training is QAT through the PIM linears with straight-through gradients).
 from __future__ import annotations
 
 import os
+import zlib
 from typing import NamedTuple, Optional
 
 import jax
@@ -256,6 +257,27 @@ def restore_pages(pool: PagedKVCache, pages: jax.Array, data: PagedKVCache,
 
     return PagedKVCache(*[put(getattr(pool, f), getattr(data, f))
                           for f in pool._fields])
+
+
+def page_checksums(pool: PagedKVCache, pages, page_axis: int = 0,
+                   seeds=None) -> np.ndarray:
+    """Host-side crc32 of each listed page's stored bytes, chained across
+    the four pool fields (codes + scale planes).  Works on the live device
+    pool (page ids) and on a fetched host tree (positional indices) alike;
+    the stored-width codes make the crc precision-aware for free.  `seeds`
+    chains onto prior per-page crcs so a multi-pool cache folds every
+    layer's bytes into one checksum per page.
+    """
+    pages = np.asarray(pages, dtype=np.int64)
+    crcs = (np.zeros(pages.shape[0], dtype=np.uint32) if seeds is None
+            else np.asarray(seeds, dtype=np.uint32).copy())
+    for f in pool._fields:
+        leaf = np.asarray(jax.device_get(getattr(pool, f)))
+        taken = np.take(leaf, pages, axis=page_axis)
+        for i in range(pages.shape[0]):
+            page = np.ascontiguousarray(np.take(taken, i, axis=page_axis))
+            crcs[i] = zlib.crc32(page.tobytes(), int(crcs[i])) & 0xFFFFFFFF
+    return crcs
 
 
 def quantize_kv(k: jax.Array, v: jax.Array, cfg: PIMConfig,

@@ -23,6 +23,12 @@ over-depth submits rejected with backpressure).  --speculate drafts up to
 --draft-len tokens per slot by prompt lookup (--draft-mode ngram) and
 verifies them in one ragged multi-token launch per step — greedy outputs
 stay bit-identical and sampling stays distribution-preserving.
+--integrity checksum|paranoid adds per-KV-page crc32 with
+detect-and-recompute (corrupt bytes are never served), --tbt-target-ms
+arms the SLA degradation ladder (disable speculation -> halve prefill
+chunks -> pause admission), and --snapshot-every N / --snapshot-dir D /
+--restore-from D give the scheduler crash snapshot/restore with
+bit-identical continuation streams.
 """
 from __future__ import annotations
 
@@ -128,6 +134,28 @@ def main(argv=None):
     ap.add_argument("--draft-mode", default="ngram", choices=["ngram"],
                     help="draft proposer: 'ngram' = self-speculative "
                          "prompt lookup (no draft model)")
+    ap.add_argument("--integrity", default="off",
+                    choices=["off", "checksum", "paranoid"],
+                    help="KV-page integrity: 'checksum' records per-page "
+                         "crc32 at directory-registration/spill time and "
+                         "verifies on restore (mismatch -> recompute, never "
+                         "served); 'paranoid' additionally verifies on "
+                         "every prefix hit and eviction (requires "
+                         "--page-size)")
+    ap.add_argument("--tbt-target-ms", type=float, default=0.0,
+                    help="p95 time-between-tokens SLA target: enables the "
+                         "degradation ladder (disable speculation -> halve "
+                         "prefill chunks -> pause admission, released in "
+                         "reverse as pressure clears; 0 = off)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="write a crash-recovery scheduler snapshot every N "
+                         "steps (requires --snapshot-dir; 0 = off)")
+    ap.add_argument("--snapshot-dir", default="",
+                    help="directory for scheduler snapshot generations "
+                         "(atomic, checksummed; newest intact wins)")
+    ap.add_argument("--restore-from", default="",
+                    help="resume from the newest intact snapshot in this "
+                         "directory before serving (config must match)")
     args = ap.parse_args(argv)
     if args.page_size and not args.continuous_batching:
         ap.error("--page-size requires --continuous-batching")
@@ -157,6 +185,21 @@ def main(argv=None):
         ap.error("--speculate requires --continuous-batching")
     if args.draft_len < 1:
         ap.error("--draft-len must be >= 1")
+    if args.integrity != "off" and not args.page_size:
+        ap.error("--integrity requires --page-size (checksums are "
+                 "page-granular)")
+    if args.tbt_target_ms < 0:
+        ap.error("--tbt-target-ms must be >= 0")
+    if args.tbt_target_ms and not args.continuous_batching:
+        ap.error("--tbt-target-ms requires --continuous-batching")
+    if args.snapshot_every < 0:
+        ap.error("--snapshot-every must be >= 0")
+    if args.snapshot_every and not args.snapshot_dir:
+        ap.error("--snapshot-every requires --snapshot-dir")
+    if ((args.snapshot_every or args.restore_from)
+            and not args.continuous_batching):
+        ap.error("--snapshot-every/--restore-from require "
+                 "--continuous-batching")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     import dataclasses
@@ -202,7 +245,12 @@ def main(argv=None):
         max_queue=args.max_queue,
         deadline_ms=args.deadline_ms or None,
         speculate=args.speculate, draft_len=args.draft_len,
-        draft_mode=args.draft_mode)
+        draft_mode=args.draft_mode,
+        integrity=args.integrity,
+        tbt_target_ms=args.tbt_target_ms,
+        snapshot_every=args.snapshot_every,
+        snapshot_dir=args.snapshot_dir or None,
+        restore_from=args.restore_from or None)
     jax.block_until_ready(out)
     dt = time.time() - t0
     if args.continuous_batching and eos is not None:

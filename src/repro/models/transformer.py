@@ -417,6 +417,36 @@ def cache_fetch_pages(cache, pages):
     return {k: visit(v, k == "blocks") for k, v in cache.items()}
 
 
+def cache_page_checksums(cache, pages):
+    """Per-page crc32 over EVERY layer's paged pool, chained in a fixed
+    visit order (sorted dict keys, tuple order) so the checksum of page i
+    covers the whole stack's bytes for that physical page.  Accepts the
+    live cache (page ids) or a `cache_fetch_pages` host tree (positional
+    indices; its None leaves are skipped).  Returns uint32[len(pages)].
+    """
+    import numpy as np
+
+    from repro.core.attention import PagedKVCache, page_checksums
+
+    crcs = np.zeros(len(pages), dtype=np.uint32)
+
+    def visit(node, stacked):
+        nonlocal crcs
+        if isinstance(node, PagedKVCache):
+            crcs = page_checksums(node, pages, page_axis=1 if stacked else 0,
+                                  seeds=crcs)
+        elif isinstance(node, dict):
+            for k in sorted(node):
+                visit(node[k], stacked)
+        elif isinstance(node, (tuple, list)) and not hasattr(node, "shape"):
+            for v in node:
+                visit(v, stacked)
+
+    for k in sorted(cache):
+        visit(cache[k], k == "blocks")
+    return crcs
+
+
 def cache_restore_pages(cache, pages, data):
     """Scatter previously fetched pages back into EVERY layer's paged pool:
     pool page `pages[i]` := `data` page i — the inverse of

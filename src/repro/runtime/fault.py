@@ -46,6 +46,15 @@ class FaultPlan:
       * refcount-corrupt — flip a live page's refcount and require
         `Scheduler.audit()` to DETECT it (the corruption is rolled back
         after detection; an undetected corruption raises).
+      * nan-logits    — poison one active slot's logits with NaN for a
+        step (exercises per-slot quarantine: only the poisoned request
+        retires, `status="poisoned"`, neighbors bit-identical).
+      * bitflip-spilled-page — flip one byte in a host-resident spilled
+        KV page (exercises checksum detection + recompute-from-prompt:
+        the corrupt bytes must never reach a served token).
+      * crash-at-step — raise `CrashInjected` at the START of step s,
+        after the periodic snapshot of step s-1 has been written
+        (exercises `Scheduler.snapshot()`/`restore()` crash recovery).
 
     Faults change scheduling, never results: per-request token streams
     must stay bit-identical to a fault-free run (sampling keys are
@@ -64,6 +73,9 @@ class FaultPlan:
     alloc_fail_steps: Tuple[int, ...] = ()
     restore_delay_steps: Tuple[int, ...] = ()
     corrupt_refcount_steps: Tuple[int, ...] = ()
+    nan_logit_steps: Tuple[int, ...] = ()
+    bitflip_spilled_page_steps: Tuple[int, ...] = ()
+    crash_at_step: int = 0        # 0 = never; fires exactly once
     evict_rate: float = 0.0
     alloc_fail_rate: float = 0.0
     restore_delay_rate: float = 0.0
@@ -73,6 +85,13 @@ class FaultPlan:
         return FaultState(self)
 
 
+class CrashInjected(RuntimeError):
+    """Raised by the crash-at-step fault: simulates a process crash at a
+    deterministic scheduler step.  The scheduler is left as-is (no cleanup
+    runs, like a real crash); recovery goes through `Scheduler.restore()`.
+    """
+
+
 class FaultState:
     """Per-run mutable half of a `FaultPlan` (rng stream + fired counts)."""
 
@@ -80,7 +99,8 @@ class FaultState:
         self.plan = plan
         self._rng = np.random.RandomState(plan.seed)
         self.fired: Dict[str, int] = {"evict": 0, "alloc_fail": 0,
-                                      "restore_delay": 0, "corrupt": 0}
+                                      "restore_delay": 0, "corrupt": 0,
+                                      "nan": 0, "bitflip": 0, "crash": 0}
 
     def _fire(self, kind: str, step: int, steps, rate: float) -> bool:
         hit = step in steps
@@ -110,6 +130,22 @@ class FaultState:
     def corrupt_refcount(self, step: int) -> bool:
         return self._fire("corrupt", step, self.plan.corrupt_refcount_steps,
                           0.0)
+
+    def poison_nan(self, step: int) -> bool:
+        return self._fire("nan", step, self.plan.nan_logit_steps, 0.0)
+
+    def bitflip_spilled_page(self, step: int) -> bool:
+        return self._fire("bitflip", step,
+                          self.plan.bitflip_spilled_page_steps, 0.0)
+
+    def should_crash(self, step: int) -> bool:
+        # exact-step, fires once, no rng draw (stream position must match a
+        # plan without the crash so post-restore rate faults line up)
+        if (self.plan.crash_at_step and step == self.plan.crash_at_step
+                and self.fired["crash"] == 0):
+            self.fired["crash"] += 1
+            return True
+        return False
 
 
 @dataclasses.dataclass

@@ -44,6 +44,7 @@ from __future__ import annotations
 import collections
 import functools
 import os
+import pickle
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -57,7 +58,7 @@ from repro.configs.base import ModelConfig
 from repro.core.attention import TRASH_PAGE
 from repro.models import transformer as T
 from repro.models.model_zoo import Model, build_model
-from repro.runtime.fault import FaultPlan
+from repro.runtime.fault import CrashInjected, FaultPlan
 
 
 def kv_bytes_per_token(cfg: ModelConfig) -> int:
@@ -259,16 +260,20 @@ def make_ragged_prefill_fn(model: Model, n: int, pad_len: int, max_len: int,
     row's length is written but never advertised), each row's first token is
     sampled from its LAST VALID position's logits (per-row (rid, index)
     keys), and the sub-batch cache is scatter-inserted into the big cache's
-    free slots.
+    free slots.  The per-row `fin` output flags rows whose logits were all
+    finite; a poisoned (NaN/Inf) row samples -1 and is quarantined by the
+    host (`status="poisoned"`) instead of emitting garbage.
     """
     def prefill(params, tokens, lens, big_cache, slots, rids, gens, base_key):
         sub = model.init_cache(n, max_len, ragged=True)
         offs = jnp.zeros((n,), jnp.int32)
         logits, sub, _ = model.forward_serve(
             params, {"tokens": tokens}, sub, offs, seq_lens=lens)
+        fin = jnp.all(jnp.isfinite(logits), axis=-1)
         tok0 = sample_logits_per_row(logits, _row_keys(base_key, rids, gens),
                                      temperature, top_k, top_p)
-        return T.cache_scatter(big_cache, sub, slots), tok0
+        tok0 = jnp.where(fin, tok0, -1)
+        return T.cache_scatter(big_cache, sub, slots), tok0, fin
 
     return jax.jit(prefill, donate_argnums=(3,))
 
@@ -296,9 +301,11 @@ def make_paged_prefill_fn(model: Model, n: int, pad_len: int,
         logits, big_cache, _ = model.forward_serve(
             params, {"tokens": tokens}, big_cache,
             jnp.asarray(offs, jnp.int32), seq_lens=lens, pages=pages)
+        fin = jnp.all(jnp.isfinite(logits), axis=-1)
         tok0 = sample_logits_per_row(logits, _row_keys(base_key, rids, gens),
                                      temperature, top_k, top_p)
-        return big_cache, tok0
+        tok0 = jnp.where(fin, tok0, -1)
+        return big_cache, tok0, fin
 
     return jax.jit(prefill, donate_argnums=(3,))
 
@@ -362,38 +369,49 @@ def make_ragged_decode_fn(model: Model, chunk: int, temperature: float,
     the (B,) request id per slot and `gens` the per-slot count of tokens
     generated so far, incremented in-scan only while a row stays active.
 
+    Poison handling: `poison` (B,) injects NaN into the named rows' logits
+    at the chunk's first step (the fault hook's seam), and ANY non-finite
+    logit row — injected or model-produced — is quarantined in-scan: it
+    emits nothing, deactivates, and is reported in the `pois` output so the
+    host retires just that request (`status="poisoned"`).  Neighbors' rows
+    never see the poison (logit rows are batch-independent), so their
+    streams stay bit-identical.
+
     Returns decode(params, tok, cache, lengths, active, remaining, rids,
-    gens, base_key[, pages]) -> (tok, cache, lengths, active, remaining,
-    toks (chunk, B), emitted (chunk, B) bool).
+    gens, base_key, poison[, pages]) -> (tok, cache, lengths, active,
+    remaining, toks (chunk, B), emitted (chunk, B) bool, pois (B,) bool).
     """
     eos = -2 if eos_id is None else int(eos_id)   # -2 never matches a token
 
     def decode(params, tok, cache, lengths, active, remaining, rids, gens,
-               base_key, pages=None):
-        def body(carry, _):
-            tok, cache, lengths, active, remaining, gens = carry
+               base_key, poison, pages=None):
+        def body(carry, t):
+            tok, cache, lengths, active, remaining, gens, pois = carry
             act = active.astype(jnp.int32)
             logits, cache, _ = model.forward_serve(
                 params, {"tokens": tok[:, None]}, cache, lengths,
                 seq_lens=act, pages=pages)
+            logits = jnp.where((poison & (t == 0))[:, None], jnp.nan, logits)
+            fin = jnp.all(jnp.isfinite(logits), axis=-1)
             nxt = sample_logits_per_row(logits,
                                         _row_keys(base_key, rids, gens),
                                         temperature, top_k, top_p)
-            nxt = jnp.where(active, nxt, -1)
+            nxt = jnp.where(active & fin, nxt, -1)
             new_len = lengths + act
-            new_active = (active & (nxt != eos) & (remaining > 1)
+            new_active = (active & fin & (nxt != eos) & (remaining > 1)
                           & (new_len < max_len))
             # retired slots advertise length 0 from the NEXT step on: the
             # decode kernel's per-slot early-out then runs zero partitions
             lengths = jnp.where(active & ~new_active, 0, new_len)
             carry = (nxt, cache, lengths, new_active, remaining - act,
-                     gens + act)
-            return carry, (nxt, active)
+                     gens + act, pois | (active & ~fin))
+            return carry, (nxt, active & fin)
 
         carry, (toks, emitted) = jax.lax.scan(
-            body, (tok, cache, lengths, active, remaining, gens), None,
-            length=chunk)
-        return carry[:5] + (toks, emitted)
+            body, (tok, cache, lengths, active, remaining, gens,
+                   jnp.zeros_like(active)),
+            jnp.arange(chunk))
+        return carry[:5] + (toks, emitted, carry[6])
 
     return jax.jit(decode, donate_argnums=(2,))
 
@@ -416,16 +434,21 @@ def make_mixed_step_fn(model: Model, n: int, pad_len: int,
     chunk completed their prompt (their tok0), and discards the rest.
 
     Returns step(params, toks, cache, offs, seq_lens, decode_rows, rids,
-    gens, base_key[, pages]) -> (cache, tok (n,)).
+    gens, base_key, poison[, pages]) -> (cache, tok (n,), fin (n,) bool);
+    `poison` NaN-injects the named rows' logits and `fin` reports which
+    rows stayed finite — the host quarantines ~fin rows (`"poisoned"`).
     """
     def step(params, toks, cache, offs, seq_lens, decode_rows, rids, gens,
-             base_key, pages=None):
+             base_key, poison, pages=None):
         logits, cache, _ = model.forward_serve(
             params, {"tokens": toks}, cache, jnp.asarray(offs, jnp.int32),
             seq_lens=seq_lens, pages=pages, decode_rows=decode_rows)
+        logits = jnp.where(poison[:, None], jnp.nan, logits)
+        fin = jnp.all(jnp.isfinite(logits), axis=-1)
         tok = sample_logits_per_row(logits, _row_keys(base_key, rids, gens),
                                     temperature, top_k, top_p)
-        return cache, tok
+        tok = jnp.where(fin, tok, -1)
+        return cache, tok, fin
 
     return jax.jit(step, donate_argnums=(2,))
 
@@ -530,13 +553,15 @@ def make_spec_step_fn(model: Model, n: int, pad_len: int, verify_len: int,
     padding writes harmless), so later writes overwrite it.
 
     Returns step(params, toks, cache, offs, seq_lens, decode_rows, rids,
-    gens, base_key[, pages]) -> (cache, out (n, verify_len), n_emit (n,))
-    where row b's emitted tokens are out[b, :n_emit[b]].
+    gens, base_key, poison[, pages]) -> (cache, out (n, verify_len),
+    n_emit (n,), fin (n,) bool) where row b's emitted tokens are
+    out[b, :n_emit[b]]; `poison` NaN-injects the named rows' logits and
+    the host discards every token of a ~fin row (quarantine).
     """
     P = int(verify_len)
 
     def step(params, toks, cache, offs, seq_lens, decode_rows, rids, gens,
-             base_key, pages=None):
+             base_key, poison, pages=None):
         sl = jnp.asarray(seq_lens, jnp.int32)
         col = jnp.arange(P, dtype=jnp.int32)
         last = jnp.maximum(sl, 1) - 1
@@ -547,6 +572,8 @@ def make_spec_step_fn(model: Model, n: int, pad_len: int, verify_len: int,
             params, {"tokens": toks}, cache, jnp.asarray(offs, jnp.int32),
             seq_lens=sl, pages=pages, decode_rows=decode_rows,
             logit_positions=pos, verify_len=P)          # (n, P, V)
+        logits = jnp.where(poison[:, None, None], jnp.nan, logits)
+        fin = jnp.all(jnp.isfinite(logits), axis=(1, 2))
         drafts = toks[:, 1:P]                           # (n, P-1)
         valid = decode_rows[:, None] & (col[None, 1:] < sl[:, None])
         if temperature <= 0.0:
@@ -554,7 +581,7 @@ def make_spec_step_fn(model: Model, n: int, pad_len: int, verify_len: int,
             match = (drafts == out[:, : P - 1]) & valid
             acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=-1),
                           axis=-1)
-            return cache, out, acc + 1
+            return cache, out, acc + 1, fin
         keys = _row_key_grid(base_key, rids, gens, P)   # (n, P) keys
         lt = _truncate_logits(logits.astype(jnp.float32) / temperature,
                               top_k, top_p)             # (n, P, V)
@@ -584,7 +611,7 @@ def make_spec_step_fn(model: Model, n: int, pad_len: int, verify_len: int,
         shifted = jnp.concatenate(
             [drafts, jnp.zeros((n, 1), toks.dtype)], axis=1)  # (n, P)
         out = jnp.where(col[None, :] < acc[:, None], shifted, t[:, None])
-        return cache, out.astype(jnp.int32), acc + 1
+        return cache, out.astype(jnp.int32), acc + 1, fin
 
     return jax.jit(step, donate_argnums=(2,))
 
@@ -619,13 +646,14 @@ prefix-directory entries (distinct from None == pool full)."""
 class Request:
     """One generation request tracked by the Scheduler.
 
-    `deadline_ms` / `ttl_steps` are optional staleness bounds checked while
-    the request is QUEUED (admitted work is never killed mid-decode): a
-    queued request older than `ttl_steps` scheduler steps — deterministic,
-    what tests use — or `deadline_ms` wall-clock milliseconds (measured
-    with the scheduler's injectable clock) is shed with
-    `status == "deadline_missed"` and its partial tokens kept.
-    `status` is "queued" -> "done" | "deadline_missed".
+    `deadline_ms` / `ttl_steps` are optional staleness bounds on the
+    request's LIFETIME (from submit), enforced both at the queue and on
+    admitted slots: a request older than `ttl_steps` scheduler steps —
+    deterministic, what tests use — or `deadline_ms` wall-clock
+    milliseconds (measured with the scheduler's injectable clock) is shed
+    (queued) or retired mid-decode (admitted — partial tokens kept, pages
+    freed) with `status == "deadline_missed"`.
+    `status` is "queued" -> "done" | "deadline_missed" | "poisoned".
     """
 
     __slots__ = ("rid", "prompt", "max_new_tokens", "tokens", "done",
@@ -663,17 +691,30 @@ class _SpillRecord:
     so no reclaim can free it before the restore.  `data` is the
     `device_get` of a `make_page_fetch_fn` gather padded to `width`
     (power of two) pages; `n_host` of them are real.  `covered` / `cur_tok`
-    snapshot the slot's kv fill and pending decode input."""
+    snapshot the slot's kv fill and pending decode input.  `crcs` are the
+    spill-time per-host-page checksums (`integrity != "off"`; None
+    otherwise) verified before any restore serves the bytes."""
 
-    __slots__ = ("logical", "n_host", "width", "data", "covered", "cur_tok")
+    __slots__ = ("logical", "n_host", "width", "data", "covered", "cur_tok",
+                 "crcs")
 
-    def __init__(self, logical, n_host, width, data, covered, cur_tok):
+    def __init__(self, logical, n_host, width, data, covered, cur_tok,
+                 crcs=None):
         self.logical = logical
         self.n_host = int(n_host)
         self.width = int(width)
         self.data = data
         self.covered = int(covered)
         self.cur_tok = int(cur_tok)
+        self.crcs = crcs
+
+
+LADDER_RUNGS = ("disable_speculation", "shrink_prefill_chunk",
+                "pause_admission")
+"""SLA degradation ladder, mildest first: each rung sheds speculative /
+prefill / admission load in turn as pressure (queue depth p95, p95 time
+between tokens vs target) persists, and is released in reverse order when
+pressure clears.  Rungs change SCHEDULING only — never stream content."""
 
 
 class Scheduler:
@@ -784,6 +825,46 @@ class Scheduler:
     adaptive k (`Request.spec_k`) grows on fully-accepted steps and
     halves on fully-rejected ones, so slots that stop repeating
     themselves degrade gracefully to ~plain decode.
+
+    **Crash recovery** (`snapshot()` / `restore()`): `snapshot()` writes
+    the ENTIRE serving state — KV pool bytes, every request (queue order,
+    slot assignments, partial streams), page tables/refcounts, prefix
+    directory, victim pool, sampling key, fault-injection rng — through
+    the atomic+checksummed `repro.checkpoint` machinery; `restore()` on a
+    same-config scheduler resumes mid-trace with BIT-IDENTICAL
+    continuation streams (greedy and sampled, dense+paged, sharing /
+    speculation / mixed steps on), because sampling keys are
+    per-(request, token index) and every scheduling input (free-list
+    order, admission stamps, LRU order) round-trips exactly.
+    `snapshot_every` + `snapshot_dir` auto-snapshot at a step cadence;
+    `FaultPlan(crash_at_step=s)` raises `CrashInjected` at step s to
+    exercise the recovery path deterministically.
+
+    **KV-page integrity** (`integrity="checksum"|"paranoid"`, paged mode):
+    per-page crc32 checksums are recorded the moment pages become
+    immutable — prefix-directory registration (copy-on-write keeps shared
+    pages frozen) and victim-pool spill — and verified whenever those
+    bytes come back to serve: victim restore, and snapshot `restore()`
+    (directory pages are re-checksummed against their write-time crcs).
+    A mismatch increments `stats["corruptions_detected"]` and RECOVERS
+    instead of serving corrupt bytes: a bad spill record is dropped and
+    the continuation re-prefilled from its prompt (bit-identical stream);
+    a bad directory page quarantines every prefix entry holding it —
+    quarantined keys can never re-enter the directory (`audit()`
+    asserts).  `"paranoid"` additionally verifies directory pages at
+    every lookup hit and LRU eviction, and the victim pool inside
+    `audit()` (so `REPRO_AUDIT=1` sweeps every record every step).
+
+    **Degradation ladder** (`tbt_target_ms > 0`): a pressure signal —
+    queue-depth p95 over the last 32 steps vs `queue_depth_target`
+    (default 2*slots) OR p95 time-between-tokens vs `tbt_target_ms` —
+    climbs `LADDER_RUNGS` one rung per `ladder_cooldown_steps`:
+    disable_speculation -> shrink_prefill_chunk (budget halved) ->
+    pause_admission (new admissions wait; a fully idle scheduler still
+    admits, so the ladder can never livelock), and steps back down as
+    pressure clears.  Every transition is counted in `stats`
+    (`ladder_transitions` per rung, escalations/deescalations totals).
+    Rungs change scheduling only, so streams stay bit-identical.
     """
 
     def __init__(self, model: Model, params, *, max_batch_slots: int = 8,
@@ -802,6 +883,12 @@ class Scheduler:
                  fault_plan: Optional[FaultPlan] = None,
                  audit_every_step: Optional[bool] = None,
                  kv_bits: int = 0,
+                 integrity: str = "off",
+                 tbt_target_ms: float = 0.0,
+                 queue_depth_target: int = 0,
+                 ladder_cooldown_steps: int = 8,
+                 snapshot_every: int = 0,
+                 snapshot_dir: Optional[str] = None,
                  clock: Callable[[], float] = time.monotonic):
         if kv_bits and kv_bits != model.cfg.kv_bits:
             # rebuild the step closures around the requested KV precision —
@@ -952,6 +1039,49 @@ class Scheduler:
         self.spec_accepted = 0                # draft tokens accepted
         self.spec_rejected = 0                # draft tokens rejected
 
+        # -- integrity: write/spill-time page checksums + quarantine -------
+        if integrity not in ("off", "checksum", "paranoid"):
+            raise ValueError(f"unknown integrity mode {integrity!r} "
+                             "(off | checksum | paranoid)")
+        if integrity != "off" and not self.paged:
+            raise ValueError("integrity checksums are page-granular — "
+                             "they require page_size > 0")
+        self.integrity = str(integrity)
+        # physical page -> crc32 at registration time; keys are always a
+        # subset of the directory-held pages (recorded at _dir_put, dropped
+        # when the last directory hold goes) — slot-private pages are
+        # mutable and never checksummed
+        self.page_crc: Dict[int, int] = {}
+        self.quarantined: set = set()         # prefix keys barred for good
+        self.corruptions_detected = 0
+        self.bitflips_injected = 0
+        self.n_poisoned = 0
+        self._poison_mask = np.zeros(self.B, bool)
+
+        # -- SLA degradation ladder ----------------------------------------
+        self.tbt_target_ms = float(tbt_target_ms)
+        self.queue_depth_target = int(queue_depth_target) or 2 * self.B
+        self.ladder_cooldown_steps = max(1, int(ladder_cooldown_steps))
+        self.ladder_level = 0
+        self.ladder_escalations = 0
+        self.ladder_deescalations = 0
+        self.ladder_paused_steps = 0
+        self.ladder_transitions = {r: 0 for r in LADDER_RUNGS}
+        self._ladder_last_change = 0
+        self._tbt_samples: "collections.deque[float]" = \
+            collections.deque(maxlen=32)
+        self._last_step_time: Optional[float] = None
+
+        # -- snapshot/restore ----------------------------------------------
+        self.snapshot_every = int(snapshot_every)
+        self.snapshot_dir = snapshot_dir
+        if self.snapshot_every and not self.snapshot_dir:
+            raise ValueError("snapshot_every requires snapshot_dir")
+        self.n_snapshots = 0
+        # every request ever submitted, by rid — what snapshot() captures
+        # and results() reads; queue/slots reference these same objects
+        self.requests: Dict[int, Request] = {}
+
     # -- request intake -----------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
                deadline_ms: Optional[float] = None,
@@ -987,6 +1117,7 @@ class Scheduler:
         r.submit_step = self._step_idx
         r.submit_time = self._clock()
         self._next_rid += 1
+        self.requests[r.rid] = r
         self.queue.append(r)
         return r.rid
 
@@ -1000,8 +1131,7 @@ class Scheduler:
         return False
 
     def _shed_stale(self):
-        """Drop queued requests past their deadline/ttl (admitted work is
-        never killed — shedding happens at the queue, where a stale request
+        """Drop queued requests past their deadline/ttl (a stale request
         would only steal capacity from ones that can still make it).  A
         shed spilled continuation also releases its victim-pool record."""
         if not self.queue:
@@ -1017,6 +1147,21 @@ class Scheduler:
             else:
                 kept.append(r)
         self.queue = kept
+
+    def _shed_admitted(self):
+        """Deadline/ttl enforcement for ADMITTED requests: a running (or
+        mid-chunked-prefill) slot whose request's LIFETIME bound expired is
+        retired with `status="deadline_missed"` — partial tokens kept on
+        the request, pages freed immediately (no prefix registration: a
+        prefilling slot's prompt KV may be incomplete, and an SLA miss is
+        not worth pinning pages for).  Without this, one slow resident
+        could hold a slot arbitrarily past its SLA while queued requests
+        that could still make their deadlines starve behind it."""
+        for b in range(self.B):
+            r = self.slot_req[b]
+            if r is not None and self._is_stale(r):
+                self.n_deadline_misses += 1
+                self._retire(b, status="deadline_missed", register=False)
 
     # -- scheduling ---------------------------------------------------------
     def _bucket(self, n: int) -> int:
@@ -1082,9 +1227,19 @@ class Scheduler:
         return len(self._dir_ref)
 
     def _dir_put(self, key: bytes, pages: Sequence[int], covered: int):
+        if key in self.quarantined:
+            # a checksum mismatch poisoned this prefix for good: it must
+            # never re-enter the directory (audit asserts), so later
+            # identical prompts always recompute fresh bytes
+            return
         if key in self.prefix_dir:
             self.prefix_dir.move_to_end(key)
             return
+        # the pages become immutable the moment the directory holds them
+        # (copy-on-write privatizes any future write) — record their
+        # write-time checksums now, the reference every later verify
+        # (restore / paranoid hit / paranoid eviction) compares against
+        self._record_page_crcs(pages)
         for p in pages:
             self.page_ref[p] += 1
             self._dir_ref[p] = self._dir_ref.get(p, 0) + 1
@@ -1094,19 +1249,79 @@ class Scheduler:
                    and self.prefix_dir):
                 self._dir_evict_one()
 
-    def _dir_evict_one(self, key: Optional[bytes] = None):
+    def _dir_evict_one(self, key: Optional[bytes] = None, verify=True):
         if key is None:
-            _, (pages, _) = self.prefix_dir.popitem(last=False)   # LRU
+            key, (pages, _) = self.prefix_dir.popitem(last=False)   # LRU
         else:
             pages, _ = self.prefix_dir.pop(key)
+        if verify and self.integrity == "paranoid":
+            bad = self._verify_pages(pages)
+            if bad:
+                self.corruptions_detected += bad
+                self.quarantined.add(key)
         for p in pages:
             self.page_ref[p] -= 1
             self._dir_ref[p] -= 1
             if self._dir_ref[p] == 0:
                 del self._dir_ref[p]
+                self.page_crc.pop(p, None)
             if self.page_ref[p] == 0:
                 self.free_pages.append(p)
         self.prefix_evictions += 1
+
+    def _quarantine_entry(self, key: bytes):
+        """Bar `key` from the directory for good (and evict its live entry
+        if present) — the detect half of detect-and-recompute: later
+        prompts matching this prefix recompute their KV from scratch."""
+        self.quarantined.add(key)
+        if key in self.prefix_dir:
+            self._dir_evict_one(key, verify=False)
+
+    # -- page checksums (integrity != "off"; host-side crc32) ---------------
+    def _compute_page_crcs(self, pages: Sequence[int]) -> List[int]:
+        """Current crc32 of each listed physical page's pool bytes across
+        every layer (one power-of-two-padded fetch + host checksum)."""
+        width = 1
+        while width < len(pages):
+            width *= 2
+        padded = list(pages) + [TRASH_PAGE] * (width - len(pages))
+        data = jax.device_get(make_page_fetch_fn(self.model)(
+            self.cache, jnp.asarray(padded, jnp.int32)))
+        return [int(c) for c in
+                T.cache_page_checksums(data, list(range(len(pages))))]
+
+    def _record_page_crcs(self, pages: Sequence[int]):
+        if self.integrity == "off":
+            return
+        new = [int(p) for p in pages if int(p) not in self.page_crc]
+        if not new:
+            return
+        for p, c in zip(new, self._compute_page_crcs(new)):
+            self.page_crc[p] = c
+
+    def _verify_pages(self, pages: Sequence[int]) -> int:
+        """Number of listed pages whose CURRENT pool bytes no longer match
+        their write-time checksum (pages without a recorded crc — never
+        directory-registered — are skipped: they are mutable by design)."""
+        if self.integrity == "off":
+            return 0
+        known = [int(p) for p in pages if int(p) in self.page_crc]
+        if not known:
+            return 0
+        crcs = self._compute_page_crcs(known)
+        return sum(1 for p, c in zip(known, crcs) if c != self.page_crc[p])
+
+    def _verify_victim(self, rec: _SpillRecord) -> bool:
+        """Re-checksum a spill record's host pages against its spill-time
+        crcs; counts mismatches in `corruptions_detected`.  False means
+        the bytes must NOT be restored (recompute-from-prompt instead)."""
+        if self.integrity == "off" or rec.crcs is None or not rec.n_host:
+            return True
+        crcs = T.cache_page_checksums(rec.data, list(range(rec.n_host)))
+        bad = sum(1 for a, b in zip(crcs, rec.crcs) if int(a) != int(b))
+        if bad:
+            self.corruptions_detected += bad
+        return bad == 0
 
     def _reclaim(self, need: int):
         """LRU-evict directory entries until `need` pages are free (pages a
@@ -1139,19 +1354,36 @@ class Scheduler:
         """Longest directory match for `prompt`: the exact full prompt
         first (retire->keep entries cover the partial last page too), then
         page-aligned prefixes longest-first.  Returns (pages, covered) or
-        (None, 0).  Matched entries move to MRU."""
+        (None, 0).  Matched entries move to MRU.  `integrity="paranoid"`
+        re-checksums a hit's pages BEFORE mapping them: a corrupt hit is
+        quarantined (never served) and the walk falls through to shorter
+        prefixes / a full recompute."""
         buf = self._prefix_key(prompt)
         hit = self.prefix_dir.get(buf)
         if hit is not None and hit[1] == len(prompt):
-            self.prefix_dir.move_to_end(buf)
-            return hit
+            if self._paranoid_hit_bad(buf, hit):
+                hit = None
+            else:
+                self.prefix_dir.move_to_end(buf)
+                return hit
         for k in range(len(prompt) // self.page_size, 0, -1):
             key = buf[: 4 * k * self.page_size]
             hit = self.prefix_dir.get(key)
             if hit is not None and hit[1] == k * self.page_size:
+                if self._paranoid_hit_bad(key, hit):
+                    continue
                 self.prefix_dir.move_to_end(key)
                 return hit
         return None, 0
+
+    def _paranoid_hit_bad(self, key: bytes, hit) -> bool:
+        if self.integrity != "paranoid":
+            return False
+        bad = self._verify_pages(hit[0])
+        if bad:
+            self.corruptions_detected += bad
+            self._quarantine_entry(key)
+        return bad > 0
 
     def _registration_keys(self, prompt: Sequence[int], exact: bool):
         """The directory keys `_register_prefixes` would insert for this
@@ -1258,6 +1490,7 @@ class Scheduler:
         self.cur_tok[slot] = -1
         self.prefilling[slot] = False
         self._pend[slot] = None
+        self._poison_mask[slot] = False
         self._inflight_keys.pop(slot, None)
         if self.paged and not spilled:
             self._free_slot_pages(slot)
@@ -1286,10 +1519,17 @@ class Scheduler:
         while width < max(n, 1):
             width *= 2
         data = None
+        crcs = None
         if n:
             padded = private + [TRASH_PAGE] * (width - n)
             data = jax.device_get(make_page_fetch_fn(self.model)(
                 self.cache, jnp.asarray(padded, jnp.int32)))
+            if self.integrity != "off":
+                # spill-time checksums over the HOST copy (positional index
+                # into the fetched tree) — verified before any restore maps
+                # these bytes back into the pool
+                crcs = tuple(int(c) for c in T.cache_page_checksums(
+                    data, list(range(n))))
         host_idx = {p: i for i, p in enumerate(private)}
         logical: List[Tuple[str, int]] = []
         for p in alloc:
@@ -1305,7 +1545,7 @@ class Scheduler:
         row[:] = -1
         self._victim[r.rid] = _SpillRecord(
             logical, n, width, data,
-            int(self.lengths[slot]), int(self.cur_tok[slot]))
+            int(self.lengths[slot]), int(self.cur_tok[slot]), crcs)
         self._victim_used += n
         self.n_spills += 1
         self.spilled_pages += n
@@ -1367,18 +1607,26 @@ class Scheduler:
                 if self.page_ref[p] == 0:
                     self.free_pages.append(p)
 
-    def _retire(self, slot: int):
+    def _retire(self, slot: int, status: str = "done",
+                register: bool = True):
+        """Vacate `slot`.  `status` lands on the request (`"done"` for a
+        normal completion; `"deadline_missed"` / `"poisoned"` for forced
+        retirement — partial tokens are KEPT, pages freed).  `register`
+        gates prefix publication: a poisoned request's KV pages must never
+        enter the directory."""
         r = self.slot_req[slot]
         if r is not None:
             r.done = True
+            r.status = status
         self.slot_req[slot] = None
         self.active[slot] = False
         self.lengths[slot] = 0
         self.prefilling[slot] = False
         self._pend[slot] = None
+        self._poison_mask[slot] = False
         self._inflight_keys.pop(slot, None)
         if self.paged:
-            if self.prefix_sharing and r is not None:
+            if self.prefix_sharing and r is not None and register:
                 # retire -> keep: publish the full prompt's pages (incl.
                 # the partial last page — its prompt rows are valid; rows
                 # beyond are this request's decode garbage, never
@@ -1458,6 +1706,13 @@ class Scheduler:
         deferred = False
         while free and self.queue:
             rec = self._victim.get(self.queue[0].rid)
+            if rec is not None and not self._verify_victim(rec):
+                # corrupt spill bytes detected (bitflip while host-resident):
+                # drop the record and fall through to recompute-from-prompt —
+                # the corrupt pages never reach the pool or a served token
+                self._drop_victim(self.queue[0].rid)
+                self.n_recompute_fallbacks += 1
+                rec = None
             if rec is not None:
                 # spilled continuation at the queue head: RESTORE instead
                 # of re-prefilling — the slot resumes decoding immediately
@@ -1542,37 +1797,49 @@ class Scheduler:
                                          self.pages_in_use())
             fn = make_paged_prefill_fn(self.model, n, L, self.temperature,
                                        self.top_k, self.top_p)
-            self.cache, tok0 = fn(self.params, jnp.asarray(toks),
-                                  jnp.asarray(lens), self.cache,
-                                  jnp.asarray(self.page_table[slots]),
-                                  jnp.asarray(offs_a), jnp.asarray(rids),
-                                  jnp.asarray(gens), self.key)
+            self.cache, tok0, fin = fn(self.params, jnp.asarray(toks),
+                                       jnp.asarray(lens), self.cache,
+                                       jnp.asarray(self.page_table[slots]),
+                                       jnp.asarray(offs_a), jnp.asarray(rids),
+                                       jnp.asarray(gens), self.key)
+            fin_a = np.asarray(fin)
             if self.prefix_sharing:
                 # the wave's prompt KV is now fully valid: publish every
                 # page-aligned prefix (the exact-prompt entry waits for
-                # retirement — decode still appends into the partial page)
-                for (s, _), p in zip(wave, prompts):
-                    self._register_prefixes(s, p, exact=False)
+                # retirement — decode still appends into the partial page).
+                # Rows whose logits came back non-finite are NOT published:
+                # their KV is suspect and must never be shared
+                for i, ((s, _), p) in enumerate(zip(wave, prompts)):
+                    if fin_a[i]:
+                        self._register_prefixes(s, p, exact=False)
         else:
             fn = make_ragged_prefill_fn(self.model, n, L, self.max_len,
                                         self.temperature, self.top_k,
                                         self.top_p)
-            self.cache, tok0 = fn(self.params, jnp.asarray(toks),
-                                  jnp.asarray(lens), self.cache,
-                                  jnp.asarray(slots), jnp.asarray(rids),
-                                  jnp.asarray(gens), self.key)
+            self.cache, tok0, fin = fn(self.params, jnp.asarray(toks),
+                                       jnp.asarray(lens), self.cache,
+                                       jnp.asarray(slots), jnp.asarray(rids),
+                                       jnp.asarray(gens), self.key)
+            fin_a = np.asarray(fin)
         tok0 = np.asarray(tok0)
         for i, (s, r) in enumerate(wave):
+            self.slot_req[s] = r
+            self._admit_counter += 1
+            self._admit_seq[s] = self._admit_counter
+            if not fin_a[i]:
+                # non-finite prompt logits: quarantine just this request —
+                # its sentinel token is never emitted, its pages never shared
+                self.n_poisoned += 1
+                self.lengths[s] = full_lens[i]
+                self._retire(s, status="poisoned", register=False)
+                continue
             t0 = int(tok0[i])
             budget_left = r.max_new_tokens - len(r.tokens)
             r.tokens.append(t0)
             emitted.setdefault(r.rid, []).append(t0)
-            self.slot_req[s] = r
             self.lengths[s] = full_lens[i]
             self.cur_tok[s] = t0
             self.remaining[s] = budget_left - 1
-            self._admit_counter += 1
-            self._admit_seq[s] = self._admit_counter
             # capacity counts as done: an eviction continuation re-admitted
             # at exactly max_len tokens just produced its final in-capacity
             # token — decoding further would write past the buffer/table
@@ -1654,12 +1921,13 @@ class Scheduler:
         args = (self.params, jnp.asarray(self.cur_tok), self.cache,
                 jnp.asarray(self.lengths * run), jnp.asarray(run),
                 jnp.asarray(self.remaining), jnp.asarray(rids),
-                jnp.asarray(gens), self.key)
+                jnp.asarray(gens), self.key,
+                jnp.asarray(self._poison_mask & run))
         if self.paged:
             out = fn(*args, jnp.asarray(self.page_table))
         else:
             out = fn(*args)
-        tok, self.cache, lengths, active, remaining, toks, em = out
+        tok, self.cache, lengths, active, remaining, toks, em, pois = out
         stalled = self.active & ~run
         self.cur_tok = np.where(run, np.array(tok), self.cur_tok)
         self.lengths = np.where(run, np.array(lengths), self.lengths)
@@ -1667,6 +1935,7 @@ class Scheduler:
         self.remaining = np.array(remaining)
         toks = np.asarray(toks)                        # (chunk, B)
         em = np.asarray(em)
+        pois = np.asarray(pois)
         for b in range(self.B):
             r = self.slot_req[b]
             if r is None:
@@ -1676,7 +1945,14 @@ class Scheduler:
                 r.tokens.extend(int(t) for t in step_toks)
                 emitted.setdefault(r.rid, []).extend(
                     int(t) for t in step_toks)
-            if not self.active[b] and not self.prefilling[b]:
+            if pois[b]:
+                # non-finite logits hit this row mid-scan: quarantine just
+                # this request (tokens before the poison were emitted and
+                # are kept); neighbors' rows are untouched — batch rows are
+                # independent, so their streams stay bit-identical
+                self.n_poisoned += 1
+                self._retire(b, status="poisoned", register=False)
+            elif not self.active[b] and not self.prefilling[b]:
                 # occupied, not decoding, not mid-chunked-prefill: the scan
                 # just finished it (prefilling slots are not in the scan —
                 # they retire through _finish_prefill's bookkeeping instead)
@@ -1733,8 +2009,9 @@ class Scheduler:
         """This step's prefill chunks as (slot, start, end): the per-step
         `prefill_chunk_budget` handed out FCFS in admission order, each
         chunk cut by `plan_prefill_chunk` (page-aligned interior
-        boundaries)."""
-        budget = self.prefill_chunk_budget
+        boundaries).  The degradation ladder halves the budget at level
+        >= 2 (`_effective_chunk_budget`)."""
+        budget = self._effective_chunk_budget()
         chunks: List[Tuple[int, int, int]] = []
         for b in sorted(np.flatnonzero(self.prefilling),
                         key=lambda b: self._admit_seq[b]):
@@ -1773,16 +2050,21 @@ class Scheduler:
         self.model_steps += 1
         fn = make_paged_prefill_fn(self.model, n, L, self.temperature,
                                    self.top_k, self.top_p)
-        self.cache, tok0 = fn(self.params, jnp.asarray(toks),
-                              jnp.asarray(lens), self.cache,
-                              jnp.asarray(self.page_table[slots]),
-                              jnp.asarray(offs), jnp.asarray(rids),
-                              jnp.asarray(gens), self.key)
+        self.cache, tok0, fin = fn(self.params, jnp.asarray(toks),
+                                   jnp.asarray(lens), self.cache,
+                                   jnp.asarray(self.page_table[slots]),
+                                   jnp.asarray(offs), jnp.asarray(rids),
+                                   jnp.asarray(gens), self.key)
         tok0 = np.asarray(tok0)
+        fin = np.asarray(fin)
         for i, (b, s, e) in enumerate(chunks):
             self.lengths[b] = e
             if e == len(self._pend[b]):
-                self._finish_prefill(b, int(tok0[i]), emitted)
+                if fin[i]:
+                    self._finish_prefill(b, int(tok0[i]), emitted)
+                else:
+                    self.n_poisoned += 1
+                    self._retire(b, status="poisoned", register=False)
 
     def _mixed_step_fused(self, emitted: Dict[int, List[int]]):
         """Fused mixed step: ONE (B, L) dispatch — every decoding slot that
@@ -1815,18 +2097,28 @@ class Scheduler:
                                 self.top_k, self.top_p)
         args = (self.params, jnp.asarray(toks), self.cache,
                 jnp.asarray(offs), jnp.asarray(seq), jnp.asarray(dec),
-                jnp.asarray(rids), jnp.asarray(gens), self.key)
+                jnp.asarray(rids), jnp.asarray(gens), self.key,
+                jnp.asarray(self._poison_mask & (seq > 0)))
         if self.paged:
-            self.cache, tok = fn(*args, jnp.asarray(self.page_table))
+            self.cache, tok, fin = fn(*args, jnp.asarray(self.page_table))
         else:
-            self.cache, tok = fn(*args)
+            self.cache, tok, fin = fn(*args)
         tok = np.asarray(tok)
+        fin = np.asarray(fin)
         for b, s, e in chunks:
             self.lengths[b] = e
             if e == len(self._pend[b]):
-                self._finish_prefill(b, int(tok[b]), emitted)
+                if fin[b]:
+                    self._finish_prefill(b, int(tok[b]), emitted)
+                else:
+                    self.n_poisoned += 1
+                    self._retire(b, status="poisoned", register=False)
         for b in np.flatnonzero(dec):
-            self._post_decode_token(b, int(tok[b]), emitted)
+            if fin[b]:
+                self._post_decode_token(b, int(tok[b]), emitted)
+            else:
+                self.n_poisoned += 1
+                self._retire(b, status="poisoned", register=False)
 
     def _mixed_step(self, emitted: Dict[int, List[int]]):
         """One mixed scheduler step — no slot ever waits for another slot's
@@ -1917,18 +2209,31 @@ class Scheduler:
                                self.top_k, self.top_p)
         args = (self.params, jnp.asarray(toks), self.cache,
                 jnp.asarray(offs), jnp.asarray(seq), jnp.asarray(dec),
-                jnp.asarray(rids), jnp.asarray(gens), self.key)
+                jnp.asarray(rids), jnp.asarray(gens), self.key,
+                jnp.asarray(self._poison_mask & (seq > 0)))
         if self.paged:
-            self.cache, out, n_emit = fn(*args, jnp.asarray(self.page_table))
+            self.cache, out, n_emit, fin = fn(*args,
+                                              jnp.asarray(self.page_table))
         else:
-            self.cache, out, n_emit = fn(*args)
+            self.cache, out, n_emit, fin = fn(*args)
         out = np.asarray(out)
         n_emit = np.asarray(n_emit)
+        fin = np.asarray(fin)
         for b, s, e in chunks:
             self.lengths[b] = e
             if e == len(self._pend[b]):
-                self._finish_prefill(b, int(out[b, 0]), emitted)
+                if fin[b]:
+                    self._finish_prefill(b, int(out[b, 0]), emitted)
+                else:
+                    self.n_poisoned += 1
+                    self._retire(b, status="poisoned", register=False)
         for b in np.flatnonzero(dec):
+            if not fin[b]:
+                # poisoned verify row: nothing from this step is emitted —
+                # the request retires alone, draft accounting untouched
+                self.n_poisoned += 1
+                self._retire(b, status="poisoned", register=False)
+                continue
             r = self.slot_req[b]
             k = int(karr[b])
             m = int(n_emit[b])
@@ -1946,6 +2251,297 @@ class Scheduler:
                 if self.slot_req[b] is None:
                     break      # retired mid-prefix: later tokens discarded
 
+    # -- SLA degradation ladder ---------------------------------------------
+    def _effective_chunk_budget(self) -> int:
+        """Per-step prefill token budget after ladder degradation (level
+        >= 2 halves it — prefill chunks are the widest dispatches on the
+        step critical path, so halving them is the straightest TBT lever
+        short of refusing work)."""
+        if self.ladder_level >= 2:
+            return max(1, self.prefill_chunk_budget // 2)
+        return self.prefill_chunk_budget
+
+    def _under_pressure(self) -> bool:
+        """Either pressure signal over target: queue-depth p95 (last 32
+        steps) above `queue_depth_target`, or p95 time-between-tokens
+        above `tbt_target_ms` (measured with the injectable clock)."""
+        depths = self._queue_depths[-32:]
+        if depths and (float(np.percentile(np.asarray(depths), 95))
+                       > self.queue_depth_target):
+            return True
+        if self._tbt_samples:
+            p95_ms = float(np.percentile(
+                np.asarray(self._tbt_samples), 95)) * 1e3
+            if p95_ms > self.tbt_target_ms:
+                return True
+        return False
+
+    def _ladder_update(self):
+        """Move at most one rung per cooldown window: escalate while the
+        pressure signal holds, release (reverse order) once it clears.
+        Rung effects are applied where the level is READ — speculation
+        dispatch (>=1), `_effective_chunk_budget` (>=2), admission pause
+        (>=3) — so a restore resumes mid-ladder with no extra state."""
+        if self.tbt_target_ms <= 0:
+            return
+        if (self._step_idx - self._ladder_last_change
+                < self.ladder_cooldown_steps):
+            return
+        if self._under_pressure():
+            if self.ladder_level < len(LADDER_RUNGS):
+                self.ladder_transitions[LADDER_RUNGS[self.ladder_level]] += 1
+                self.ladder_level += 1
+                self.ladder_escalations += 1
+                self._ladder_last_change = self._step_idx
+        elif self.ladder_level > 0:
+            self.ladder_level -= 1
+            self.ladder_deescalations += 1
+            self._ladder_last_change = self._step_idx
+
+    def _sample_tbt(self):
+        if self.tbt_target_ms <= 0:
+            return
+        now = self._clock()
+        if self._last_step_time is not None:
+            self._tbt_samples.append(now - self._last_step_time)
+        self._last_step_time = now
+
+    # -- fault hooks with scheduler-side state ------------------------------
+    def _bitflip_victim_page(self):
+        """Fault hook: XOR one byte of the lowest-rid victim record's host
+        bytes (page 0 of its fetched tree's first pool leaf).  The spill
+        crcs no longer match, so the restore-time verify must detect the
+        flip and route the request through recompute-from-prompt — the
+        corrupt bytes never reach the pool."""
+        for rid in sorted(self._victim):
+            rec = self._victim[rid]
+            if rec.n_host and rec.data is not None:
+                leaves, treedef = jax.tree.flatten(rec.data)
+                leaf = np.array(leaves[0])   # writable contiguous copy
+                leaf.view(np.uint8).reshape(-1)[0] ^= 0xFF
+                leaves[0] = leaf
+                rec.data = jax.tree.unflatten(treedef, leaves)
+                self.bitflips_injected += 1
+                return
+
+    # -- crash recovery: snapshot / restore ---------------------------------
+    def _config_fingerprint(self) -> Dict[str, Any]:
+        """Every config knob a snapshot's bit-identical continuation
+        depends on — verified on restore (a mismatched scheduler would
+        resume with silently different streams)."""
+        return {
+            "arch": self.model.cfg.name,
+            "kv_bits": self.model.cfg.kv_bits,
+            "B": self.B, "max_len": self.max_len, "eos_id": self.eos_id,
+            "temperature": self.temperature, "top_k": self.top_k,
+            "top_p": self.top_p, "decode_chunk": self.decode_chunk,
+            "prefill_bucket": self.prefill_bucket,
+            "page_size": self.page_size if self.paged else 0,
+            "num_pages": self.num_pages if self.paged else 0,
+            "prefix_sharing": self.prefix_sharing,
+            "mixed_steps": self.mixed_steps,
+            "mixed_dispatch": self.mixed_dispatch,
+            "speculate": self.speculate, "draft_len": self.draft_len,
+            "draft_mode": self.draft_mode,
+        }
+
+    def snapshot(self, directory: Optional[str] = None) -> str:
+        """Write a restorable snapshot generation (default: snapshot_dir)
+        through the checkpoint machinery (atomic tmp+rename, per-leaf
+        crc32, fsync) and return its path.
+
+        Three leaves: the KV pool bytes (device_get of the live cache
+        tree), the sampling key, and one pickled metadata blob — queue and
+        slot state, page tables/refcounts, prefix directory + quarantine +
+        write-time page checksums, victim records (host bytes included),
+        ladder/fault/counter state, and every Request ever submitted.
+        Called at step END (quiescent: no dispatch in flight), so restore
+        + re-drive continues every stream bit-identically."""
+        from repro.checkpoint import checkpoint as ckpt
+        directory = directory or self.snapshot_dir
+        if not directory:
+            raise ValueError("snapshot() needs a directory "
+                             "(snapshot_dir or an explicit argument)")
+        meta: Dict[str, Any] = {
+            "config": self._config_fingerprint(),
+            "step_idx": self._step_idx,
+            "next_rid": self._next_rid,
+            "requests": self.requests,
+            "queue": [r.rid for r in self.queue],
+            "slot_req": [None if r is None else r.rid
+                         for r in self.slot_req],
+            "lengths": self.lengths, "active": self.active,
+            "remaining": self.remaining, "cur_tok": self.cur_tok,
+            "prefilling": self.prefilling, "pend": self._pend,
+            "inflight_keys": self._inflight_keys,
+            "admit_seq": self._admit_seq,
+            "admit_counter": self._admit_counter,
+            "victim": self._victim, "victim_used": self._victim_used,
+            "queue_depths": self._queue_depths,
+            "counters": {
+                "n_evictions": self.n_evictions, "n_spills": self.n_spills,
+                "n_restores": self.n_restores,
+                "spilled_pages": self.spilled_pages,
+                "spill_bytes": self.spill_bytes,
+                "n_recompute_fallbacks": self.n_recompute_fallbacks,
+                "n_deadline_misses": self.n_deadline_misses,
+                "n_rejections": self.n_rejections,
+                "n_reclaim_stalls": self.n_reclaim_stalls,
+                "refcount_corruptions_detected":
+                    self.refcount_corruptions_detected,
+                "model_steps": self.model_steps,
+                "n_spec_steps": self.n_spec_steps,
+                "spec_proposed": self.spec_proposed,
+                "spec_accepted": self.spec_accepted,
+                "spec_rejected": self.spec_rejected,
+                "prefix_hits": self.prefix_hits,
+                "prefix_hit_tokens": self.prefix_hit_tokens,
+                "prefill_tokens_computed": self.prefill_tokens_computed,
+                "n_cow_copies": self.n_cow_copies,
+                "prefix_evictions": self.prefix_evictions,
+                "corruptions_detected": self.corruptions_detected,
+                "bitflips_injected": self.bitflips_injected,
+                "n_poisoned": self.n_poisoned,
+                "n_snapshots": self.n_snapshots,
+            },
+            "ladder": {
+                "level": self.ladder_level,
+                "escalations": self.ladder_escalations,
+                "deescalations": self.ladder_deescalations,
+                "paused_steps": self.ladder_paused_steps,
+                "transitions": dict(self.ladder_transitions),
+                "last_change": self._ladder_last_change,
+            },
+            "integrity": {
+                "page_crc": dict(self.page_crc),
+                "quarantined": set(self.quarantined),
+                "poison_mask": self._poison_mask.copy(),
+            },
+            "faults": (None if self._faults is None else
+                       (dict(self._faults.fired),
+                        self._faults._rng.get_state())),
+        }
+        if self.paged:
+            meta["paged"] = {
+                "page_table": self.page_table,
+                "page_ref": self.page_ref,
+                "free_pages": list(self.free_pages),
+                "prefix_dir": self.prefix_dir,
+                "dir_ref": dict(self._dir_ref),
+                "peak_pages_in_use": self.peak_pages_in_use,
+            }
+        tree = {"cache": jax.device_get(self.cache),
+                "meta": np.frombuffer(pickle.dumps(meta), np.uint8),
+                "rng": np.asarray(self.key)}
+        path = ckpt.save(directory, self._step_idx, tree)
+        self.n_snapshots += 1
+        return path
+
+    def restore(self, directory: Optional[str] = None) -> int:
+        """Load the newest intact snapshot generation into THIS scheduler
+        (constructed with the SAME config — the fingerprint is verified)
+        and return the restored step index.  `run()` afterwards continues
+        every in-flight stream bit-identically to an uncrashed run.
+
+        Integrity (`!= "off"`): directory-held pages are re-checksummed
+        against their write-time crcs after the pool bytes land — a
+        mismatch (corruption that predates the snapshot) quarantines every
+        holding prefix entry; victim records are verified lazily at
+        re-admission, falling back to recompute-from-prompt."""
+        from repro.checkpoint import checkpoint as ckpt
+        directory = directory or self.snapshot_dir
+        if not directory:
+            raise ValueError("restore() needs a directory "
+                             "(snapshot_dir or an explicit argument)")
+        like = {"cache": self.cache, "meta": np.zeros(0, np.uint8),
+                "rng": np.asarray(self.key)}
+        tree, step = ckpt.restore_latest(directory, like)
+        if tree is None:
+            raise FileNotFoundError(
+                f"no restorable snapshot generation in {directory}")
+        meta = pickle.loads(tree["meta"].tobytes())
+        mine = self._config_fingerprint()
+        if meta["config"] != mine:
+            diff = {k: (meta["config"].get(k), mine.get(k))
+                    for k in set(meta["config"]) | set(mine)
+                    if meta["config"].get(k) != mine.get(k)}
+            raise ValueError(
+                f"snapshot config mismatch (snapshot vs this): {diff}")
+        self.cache = jax.tree.map(jnp.asarray, tree["cache"])
+        self.key = jnp.asarray(tree["rng"])
+        self._step_idx = int(meta["step_idx"])
+        self._next_rid = int(meta["next_rid"])
+        self.requests = meta["requests"]
+        self.queue = collections.deque(
+            self.requests[rid] for rid in meta["queue"])
+        self.slot_req = [None if rid is None else self.requests[rid]
+                         for rid in meta["slot_req"]]
+        self.lengths = np.asarray(meta["lengths"], np.int32).copy()
+        self.active = np.asarray(meta["active"], bool).copy()
+        self.remaining = np.asarray(meta["remaining"], np.int32).copy()
+        self.cur_tok = np.asarray(meta["cur_tok"], np.int32).copy()
+        self.prefilling = np.asarray(meta["prefilling"], bool).copy()
+        self._pend = list(meta["pend"])
+        self._inflight_keys = dict(meta["inflight_keys"])
+        self._admit_seq = np.asarray(meta["admit_seq"], np.int64).copy()
+        self._admit_counter = int(meta["admit_counter"])
+        self._victim = dict(meta["victim"])
+        self._victim_used = int(meta["victim_used"])
+        self._queue_depths = list(meta["queue_depths"])
+        for k, v in meta["counters"].items():
+            setattr(self, k, v)
+        lad = meta["ladder"]
+        self.ladder_level = int(lad["level"])
+        self.ladder_escalations = int(lad["escalations"])
+        self.ladder_deescalations = int(lad["deescalations"])
+        self.ladder_paused_steps = int(lad["paused_steps"])
+        self.ladder_transitions = dict(lad["transitions"])
+        self._ladder_last_change = int(lad["last_change"])
+        # wall-clock TBT samples do not survive a crash meaningfully
+        self._tbt_samples.clear()
+        self._last_step_time = None
+        self.page_crc = dict(meta["integrity"]["page_crc"])
+        self.quarantined = set(meta["integrity"]["quarantined"])
+        # the sticky poison mark survives the crash: a victim tagged but
+        # not yet retired at snapshot time still retires after restore
+        self._poison_mask[:] = np.asarray(
+            meta["integrity"]["poison_mask"], bool)
+        if self.paged:
+            pg = meta["paged"]
+            self.page_table = np.asarray(pg["page_table"], np.int32).copy()
+            self.page_ref = np.asarray(pg["page_ref"], np.int32).copy()
+            self.free_pages = list(pg["free_pages"])
+            self.prefix_dir = collections.OrderedDict(pg["prefix_dir"])
+            self._dir_ref = dict(pg["dir_ref"])
+            self.peak_pages_in_use = int(pg["peak_pages_in_use"])
+        if self._faults is not None:
+            if meta["faults"] is not None:
+                fired, rng_state = meta["faults"]
+                self._faults.fired = dict(fired)
+                self._faults._rng.set_state(rng_state)
+            if self._faults.plan.crash_at_step:
+                # a restore means the crash already happened: a plan that
+                # still carries crash_at_step must never fire again (loop)
+                self._faults.fired["crash"] = max(
+                    1, self._faults.fired.get("crash", 0))
+        if self.integrity != "off" and self.page_crc:
+            pages = sorted(self.page_crc)
+            crcs = self._compute_page_crcs(pages)
+            bad = {p for p, c in zip(pages, crcs) if c != self.page_crc[p]}
+            if bad:
+                self.corruptions_detected += len(bad)
+                doomed = [k for k, (pp, _) in self.prefix_dir.items()
+                          if bad & set(pp)]
+                for key in doomed:
+                    self._quarantine_entry(key)
+        return int(step)
+
+    def results(self) -> Dict[int, List[int]]:
+        """Full per-request token stream for every request ever submitted
+        (done or not) — what crash-recovery tests diff against a run that
+        never crashed."""
+        return {rid: list(r.tokens) for rid, r in self.requests.items()}
+
     def step(self) -> Dict[int, List[int]]:
         """One scheduling round: shed stale queued requests, admit (and
         restore spilled continuations), then either one mixed
@@ -1956,13 +2552,44 @@ class Scheduler:
         `audit_every_step=True`) run here."""
         emitted: Dict[int, List[int]] = {}
         self._step_idx += 1
+        if (self._faults is not None
+                and self._faults.should_crash(self._step_idx)):
+            # before any work this step — the last periodic snapshot is the
+            # newest durable state, exactly like a real mid-trace crash
+            raise CrashInjected(f"injected crash at step {self._step_idx}")
         self._shed_stale()
+        self._shed_admitted()
         self._queue_depths.append(len(self.queue))
-        self._admit(emitted)
+        self._ladder_update()
+        if (self.ladder_level >= 3
+                and any(r is not None for r in self.slot_req)):
+            # deepest rung: pause admission while residents drain.  Never
+            # with ALL slots empty — then admission must run or nothing
+            # would ever drain the queue (livelock)
+            self.ladder_paused_steps += 1
+        else:
+            self._admit(emitted)
         if (self._faults is not None and self.active.any()
                 and self._faults.force_evict(self._step_idx)):
             self._evict(self._eviction_victim())
-        if self.speculate:
+        if (self._faults is not None and self._victim
+                and self._faults.bitflip_spilled_page(self._step_idx)):
+            self._bitflip_victim_page()
+        occupied = self.active | self.prefilling
+        if (self._faults is not None and occupied.any()
+                and self._faults.poison_nan(self._step_idx)):
+            # poison the occupied slot with the lowest rid — deterministic
+            # across runs, so the chaos suite can diff against a run
+            # without that request.  Mid-prefill slots count (mixed-steps
+            # chunking keeps them `prefilling`, not `active`, for several
+            # steps) and the mark is STICKY (cleared only when the slot is
+            # vacated): a victim whose logits nothing samples at the fault
+            # step retires at its next sampled logits instead of silently
+            # shrugging the fault off
+            victim = min((int(b) for b in np.flatnonzero(occupied)),
+                         key=lambda b: self.slot_req[b].rid)
+            self._poison_mask[victim] = True
+        if self.speculate and self.ladder_level < 1:
             if (self.mixed_steps and self.prefilling.any()
                     and self.mixed_dispatch == "paired"):
                 self._chunk_prefill_wave(emitted)
@@ -1983,6 +2610,10 @@ class Scheduler:
             self._corrupt_and_detect()
         if self._audit_every:
             self.audit()
+        if (self.snapshot_every
+                and self._step_idx % self.snapshot_every == 0):
+            self.snapshot()
+        self._sample_tbt()
         return emitted
 
     # -- invariant audit ----------------------------------------------------
@@ -2067,6 +2698,31 @@ class Scheduler:
             if dir_ref != self._dir_ref:
                 errs.append("directory page refcounts (_dir_ref) out of "
                             "sync with the directory's entries")
+            # integrity invariants: a quarantined prefix must never
+            # re-enter the directory, and recorded write-time checksums
+            # only ever cover directory-held (CoW-immutable) pages
+            for key in self.quarantined:
+                if key in self.prefix_dir:
+                    errs.append("quarantined prefix key re-entered the "
+                                "directory")
+            for p in self.page_crc:
+                if p not in self._dir_ref:
+                    errs.append(f"page {p}: write-time checksum recorded "
+                                "but page is not directory-held")
+            if self.integrity == "paranoid":
+                # paranoid mode extends the audit to victim-pool BYTES:
+                # every spilled record's host pages must still match their
+                # spill-time checksums (host-side hash, no device traffic)
+                for rid, rec in self._victim.items():
+                    if rec.crcs is None or not rec.n_host:
+                        continue
+                    crcs = T.cache_page_checksums(
+                        rec.data, list(range(rec.n_host)))
+                    if any(int(a) != int(b)
+                           for a, b in zip(crcs, rec.crcs)):
+                        errs.append(
+                            f"victim record {rid}: host page bytes no "
+                            "longer match their spill-time checksums")
             used = 0
             for rid, rec in self._victim.items():
                 used += rec.n_host
@@ -2128,6 +2784,21 @@ class Scheduler:
             "victim_pool_pages_used": self._victim_used,
             "queue_depth_p50": float(np.percentile(depths, 50)),
             "queue_depth_p95": float(np.percentile(depths, 95)),
+            # integrity + recovery
+            "corruptions_detected": self.corruptions_detected,
+            "bitflips_injected": self.bitflips_injected,
+            "poisoned": self.n_poisoned,
+            "quarantined_prefixes": len(self.quarantined),
+            "snapshots": self.n_snapshots,
+            # degradation ladder
+            "ladder_level": self.ladder_level,
+            "ladder_escalations": self.ladder_escalations,
+            "ladder_deescalations": self.ladder_deescalations,
+            "ladder_paused_steps": self.ladder_paused_steps,
+            "ladder_transitions": dict(self.ladder_transitions),
+            "tbt_p95_ms": (float(np.percentile(
+                np.asarray(self._tbt_samples), 95)) * 1e3
+                if self._tbt_samples else 0.0),
         }
 
     def run(self, on_tokens: Optional[Callable[[int, List[int]], None]] = None
@@ -2168,7 +2839,12 @@ def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
              deadline_ms: Optional[float] = None,
              ttl_steps: Optional[int] = None,
              fault_plan: Optional[FaultPlan] = None,
-             kv_bits: int = 0) -> jax.Array:
+             kv_bits: int = 0,
+             integrity: str = "off",
+             tbt_target_ms: float = 0.0,
+             snapshot_every: int = 0,
+             snapshot_dir: Optional[str] = None,
+             restore_from: Optional[str] = None) -> jax.Array:
     """Batched generation. Returns (B, max_new_tokens) generated ids.
 
     Default: equal-length prefill + scan-fused decode (the paper's token
@@ -2198,6 +2874,12 @@ def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
     `kv_bits` (0 = keep the model's config) overrides KV-cache storage
     precision for this run — 4 packs two dynamic-map codes per byte,
     halving cache bytes/token.
+
+    Recovery & integrity (continuous batching only): `integrity` enables
+    per-page checksums ("checksum" | "paranoid"), `tbt_target_ms` the SLA
+    degradation ladder, `snapshot_every`/`snapshot_dir` periodic crash
+    snapshots, and `restore_from` resumes from the newest snapshot in a
+    directory before submitting this batch — see `Scheduler`.
     """
     if kv_bits and kv_bits != model.cfg.kv_bits:
         model = build_model(dataclasses.replace(model.cfg,
@@ -2208,6 +2890,11 @@ def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
         raise ValueError("speculate requires continuous_batching=True "
                          "(drafts are verified by the scheduler's ragged "
                          "decode rows)")
+    if not continuous_batching and (integrity != "off" or tbt_target_ms > 0
+                                    or snapshot_every or restore_from):
+        raise ValueError("integrity / tbt_target_ms / snapshot_every / "
+                         "restore_from require continuous_batching=True "
+                         "(they are Scheduler features)")
     if continuous_batching:
         sched = Scheduler(model, params,
                           max_batch_slots=max_batch_slots or B,
@@ -2223,7 +2910,12 @@ def generate(model: Model, params, prompt_batch: Dict[str, jax.Array],
                           victim_pool_pages=victim_pool_pages,
                           max_queue=max_queue, speculate=speculate,
                           draft_len=draft_len, draft_mode=draft_mode,
-                          fault_plan=fault_plan)
+                          fault_plan=fault_plan,
+                          integrity=integrity, tbt_target_ms=tbt_target_ms,
+                          snapshot_every=snapshot_every,
+                          snapshot_dir=snapshot_dir)
+        if restore_from:
+            sched.restore(restore_from)
         tokens = np.asarray(prompt_batch["tokens"])
         rids = []
         for b in range(B):

@@ -1,0 +1,475 @@
+"""Crash recovery & data integrity (ISSUE 10).
+
+  * `Scheduler.snapshot()` / `restore()` round-trips resume mid-trace with
+    BIT-IDENTICAL continuation streams under every feature-flag
+    combination: dense, paged, paged+prefix-sharing, mixed steps,
+    speculative decoding, kv_bits=4 — greedy and temperature > 0,
+    behavioral and kernel attention paths
+  * the `crash_at_step` fault raises `CrashInjected` mid-trace; a fresh
+    same-config scheduler restores the newest snapshot generation and
+    finishes the trace exactly as an uncrashed run would
+  * a config-fingerprint mismatch refuses to restore
+  * KV-page integrity: spill-time checksums detect an injected bitflip in
+    a host-resident victim page (`corruptions_detected > 0`) and recover
+    through recompute-from-prompt — the corrupt bytes never reach a
+    served token; quarantined prefix keys never re-enter the directory
+  * `integrity="paranoid"` extends `audit()` to victim-pool bytes: a
+    manually flipped byte fails the audit
+  * NaN-poisoned logits retire ONLY the offending request
+    (`status="poisoned"`); neighbors stay bit-identical to a run without
+    the poison
+  * admitted-deadline enforcement: a running slot past its ttl retires
+    with `status="deadline_missed"`, partial tokens kept, pages freed
+  * the SLA degradation ladder escalates under pressure (transitions
+    counted in `stats`) and releases when it clears — streams stay
+    bit-identical to an unladdered run
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs import get_config
+from repro.models.model_zoo import build_model
+from repro.runtime.fault import CrashInjected, FaultPlan
+from repro.runtime.serve_lib import Scheduler
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def kernel_model():
+    cfg = dataclasses.replace(get_config("internlm2-1.8b", smoke=True),
+                              attn_impl="kernel")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+PROMPTS = [[1, 2, 3, 4, 5], [7, 8, 9], [2, 4, 6, 8, 10, 12], [3, 1, 4],
+           [9, 9, 9, 9], [5, 4, 3, 2, 1, 6, 7]]
+
+
+def _sched(model, params, snapshot_dir=None, snapshot_every=0,
+           fault_plan=None, n_req=4, budget=8, **kw):
+    kw.setdefault("max_batch_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("decode_chunk", 4)
+    s = Scheduler(model, params, audit_every_step=True,
+                  snapshot_dir=snapshot_dir, snapshot_every=snapshot_every,
+                  fault_plan=fault_plan, **kw)
+    for p in PROMPTS[:n_req]:
+        s.submit(p, budget)
+    return s
+
+
+def _crash_restore_roundtrip(model, params, tmp_path, crash_at=3, **kw):
+    """Baseline run; crash run (same flags + snapshots); fresh restore +
+    finish.  Returns (baseline scheduler, restored scheduler)."""
+    ref = _sched(model, params, **kw)
+    ref.run()
+    d = str(tmp_path / "snap")
+    crash = _sched(model, params, snapshot_dir=d, snapshot_every=2,
+                   fault_plan=FaultPlan(crash_at_step=crash_at), **kw)
+    with pytest.raises(CrashInjected):
+        crash.run()
+    assert crash._faults.fired["crash"] == 1
+    s2 = _sched(model, params, snapshot_dir=d, snapshot_every=2,
+                fault_plan=FaultPlan(crash_at_step=crash_at), **kw)
+    step = s2.restore()
+    assert step == ckpt.latest_step(d) >= 1
+    s2.run()
+    assert s2.results() == ref.results()
+    s2.audit()
+    return ref, s2
+
+
+# ---------------------------------------------------------------------------
+# snapshot/restore round-trips across the feature matrix
+# ---------------------------------------------------------------------------
+def test_roundtrip_dense_greedy(smoke_model, tmp_path):
+    _, model, params = smoke_model
+    _crash_restore_roundtrip(model, params, tmp_path)
+
+
+def test_roundtrip_paged(smoke_model, tmp_path):
+    _, model, params = smoke_model
+    ref, s2 = _crash_restore_roundtrip(model, params, tmp_path,
+                                       page_size=8, num_pages=40)
+    s2.clear_prefix_cache()
+    assert s2.pages_in_use() == 0      # zero leaked pages after the trace
+
+
+def test_roundtrip_paged_sharing_sampled(smoke_model, tmp_path):
+    _, model, params = smoke_model
+    _crash_restore_roundtrip(
+        model, params, tmp_path,
+        page_size=8, num_pages=40, prefix_sharing=True,
+        integrity="checksum",
+        temperature=0.7, rng=jax.random.PRNGKey(7))
+
+
+def test_roundtrip_mixed_steps(smoke_model, tmp_path):
+    _, model, params = smoke_model
+    _crash_restore_roundtrip(
+        model, params, tmp_path,
+        page_size=8, num_pages=40, prefix_sharing=True,
+        mixed_steps=True, prefill_chunk_budget=4, n_req=6, budget=10)
+
+
+def test_roundtrip_speculative(smoke_model, tmp_path):
+    _, model, params = smoke_model
+    _crash_restore_roundtrip(model, params, tmp_path,
+                             speculate=True, draft_len=3,
+                             n_req=6, budget=10)
+
+
+def test_roundtrip_kv4(smoke_model, tmp_path):
+    _, model, params = smoke_model
+    _crash_restore_roundtrip(model, params, tmp_path,
+                             page_size=8, num_pages=40, kv_bits=4)
+
+
+def test_roundtrip_kernel_path(kernel_model, tmp_path):
+    _, model, params = kernel_model
+    _crash_restore_roundtrip(
+        model, params, tmp_path,
+        page_size=8, num_pages=40, prefix_sharing=True,
+        temperature=0.7, rng=jax.random.PRNGKey(11))
+
+
+def test_roundtrip_mid_spill(smoke_model, tmp_path):
+    """A snapshot taken while a victim-pool record is live round-trips the
+    spilled host bytes too: the restored run still resumes the evicted
+    continuation from its record (no recompute divergence)."""
+    _, model, params = smoke_model
+    kw = dict(page_size=8, num_pages=24, victim_pool_pages=16,
+              integrity="checksum", n_req=3, budget=10)
+    ref = _sched(model, params,
+                 fault_plan=FaultPlan(evict_steps=(2,)), **kw)
+    ref.run()
+    d = str(tmp_path / "snap")
+    crash = _sched(model, params, snapshot_dir=d, snapshot_every=1,
+                   fault_plan=FaultPlan(evict_steps=(2,), crash_at_step=3),
+                   **kw)
+    with pytest.raises(CrashInjected):
+        crash.run()
+    assert crash.n_spills >= 1         # the snapshot really held a record
+    s2 = _sched(model, params, snapshot_dir=d, snapshot_every=1,
+                fault_plan=FaultPlan(evict_steps=(2,), crash_at_step=3),
+                **kw)
+    s2.restore()
+    assert s2._victim                  # record survived the round-trip
+    s2.run()
+    assert s2.results() == ref.results()
+    s2.audit()
+
+
+def test_restore_refuses_config_mismatch(smoke_model, tmp_path):
+    _, model, params = smoke_model
+    d = str(tmp_path / "snap")
+    s = _sched(model, params, snapshot_dir=d, page_size=8, num_pages=40)
+    s.step()
+    s.snapshot()
+    other = _sched(model, params, snapshot_dir=d,
+                   page_size=8, num_pages=40, temperature=0.5)
+    with pytest.raises(ValueError, match="config mismatch"):
+        other.restore()
+    with pytest.raises(FileNotFoundError):
+        _sched(model, params).restore(str(tmp_path / "empty"))
+
+
+def test_snapshot_requires_dir(smoke_model):
+    _, model, params = smoke_model
+    with pytest.raises(ValueError, match="snapshot_every requires"):
+        Scheduler(model, params, snapshot_every=2)
+    s = _sched(model, params)
+    with pytest.raises(ValueError, match="needs a directory"):
+        s.snapshot()
+
+
+# ---------------------------------------------------------------------------
+# KV-page integrity: checksums, bitflips, quarantine
+# ---------------------------------------------------------------------------
+def _spill_sched(model, params, **kw):
+    kw.setdefault("audit_every_step", True)
+    s = Scheduler(model, params, max_batch_slots=2, max_len=64,
+                  decode_chunk=4,
+                  page_size=8, num_pages=24, victim_pool_pages=16,
+                  temperature=0.7, rng=jax.random.PRNGKey(3), **kw)
+    for p in [[1, 2, 3, 4, 5, 6, 7, 8, 9, 10], [7, 8, 9, 10, 11, 12],
+              [2, 4, 6]]:
+        s.submit(p, 10)
+    return s
+
+
+def test_bitflip_detected_and_recovered(smoke_model):
+    """An injected bitflip in a spilled page is DETECTED at re-admission
+    and the request recovers via recompute-from-prompt: streams are
+    bit-identical to the same eviction schedule without the flip."""
+    _, model, params = smoke_model
+    base = _spill_sched(model, params,
+                        integrity="checksum",
+                        fault_plan=FaultPlan(evict_steps=(2,))).run()
+    s = _spill_sched(model, params,
+                     integrity="checksum",
+                     fault_plan=FaultPlan(evict_steps=(2,),
+                                          bitflip_spilled_page_steps=(2,)))
+    res = s.run()
+    s.audit()
+    assert s.n_spills >= 1 and s.bitflips_injected == 1
+    assert s.corruptions_detected > 0
+    assert s.stats["corruptions_detected"] > 0
+    assert res == base                  # no corrupt token ever served
+    # without integrity the same flip goes UNDETECTED — proof the
+    # checksums (not luck) are what catches it
+    s0 = _spill_sched(model, params,
+                      fault_plan=FaultPlan(evict_steps=(2,),
+                                           bitflip_spilled_page_steps=(2,)))
+    s0.run()
+    assert s0.corruptions_detected == 0
+
+
+def test_paranoid_audit_catches_victim_flip(smoke_model):
+    _, model, params = smoke_model
+    s = _spill_sched(model, params, integrity="paranoid",
+                     fault_plan=FaultPlan(evict_steps=(2,)),
+                     audit_every_step=False)
+    # drive until something is spilled, then flip a byte by hand
+    while not s._victim and (s.queue or any(s.slot_req)):
+        s.step()
+    assert s._victim
+    s.audit()                           # clean before the flip
+    s._bitflip_victim_page()
+    with pytest.raises(AssertionError, match="spill-time checksums"):
+        s.audit()
+
+
+def test_quarantined_prefix_never_reenters(smoke_model):
+    """A quarantined prefix key is barred from `_dir_put` forever: later
+    identical prompts recompute fresh bytes, and `audit()` enforces the
+    invariant."""
+    _, model, params = smoke_model
+    s = Scheduler(model, params, max_batch_slots=2, max_len=64,
+                  decode_chunk=4, audit_every_step=True,
+                  page_size=8, num_pages=48, prefix_sharing=True,
+                  integrity="paranoid")
+    shared = list(range(1, 17))         # two full pages, page-aligned
+    s.submit(shared + [30], 6)
+    s.run()
+    assert s.prefix_dir
+    key = next(iter(s.prefix_dir))
+    s._quarantine_entry(key)
+    assert key not in s.prefix_dir
+    s.audit()
+    # the same prompt again: must re-prefill (no hit) and must NOT
+    # re-register the quarantined key
+    hits_before = s.prefix_hits
+    s.submit(shared + [31], 6)
+    s.run()
+    assert key not in s.prefix_dir
+    assert key in s.quarantined
+    s.audit()
+    # a directory entry re-added for a DIFFERENT key is still fine
+    assert s.prefix_hits >= hits_before
+
+
+def test_integrity_requires_paged(smoke_model):
+    _, model, params = smoke_model
+    with pytest.raises(ValueError, match="page-granular|page_size"):
+        Scheduler(model, params, integrity="checksum")
+    with pytest.raises(ValueError, match="unknown integrity"):
+        Scheduler(model, params, page_size=8, integrity="bogus")
+
+
+# ---------------------------------------------------------------------------
+# poisoned-request quarantine
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("flags", [
+    {},                                                      # fused decode
+    {"page_size": 8, "num_pages": 40},                       # paged
+    {"speculate": True, "draft_len": 3},                     # speculative
+    {"page_size": 8, "num_pages": 40, "prefix_sharing": True,
+     "mixed_steps": True, "prefill_chunk_budget": 4},        # mixed
+])
+def test_nan_quarantine_isolates_one_request(smoke_model, flags):
+    _, model, params = smoke_model
+    def mk(with_fault):
+        s = Scheduler(model, params, max_batch_slots=3, max_len=64,
+                      decode_chunk=4, audit_every_step=True,
+                      temperature=0.7, rng=jax.random.PRNGKey(5),
+                      fault_plan=(FaultPlan(nan_logit_steps=(2,))
+                                  if with_fault else None), **flags)
+        for p in PROMPTS[:3]:
+            s.submit(p, 8)
+        return s
+
+    base = mk(False)
+    base.run()
+    s = mk(True)
+    s.run()
+    s.audit()
+    st = {r.rid: r.status for r in s.requests.values()}
+    assert st[0] == "poisoned"          # lowest active rid is the victim
+    assert st[1] == "done" and st[2] == "done"
+    assert s.n_poisoned == 1 and s.stats["poisoned"] == 1
+    ref = base.results()
+    got = s.results()
+    # neighbors bit-identical to the fault-free run (per-rid sampling
+    # keys make streams independent of the poisoned slot's fate)
+    assert got[1] == ref[1] and got[2] == ref[2]
+    # the poisoned stream keeps its pre-poison prefix and no sentinel
+    assert got[0] == ref[0][: len(got[0])]
+    assert all(t >= 0 for t in got[0])
+
+
+# ---------------------------------------------------------------------------
+# admitted-deadline enforcement
+# ---------------------------------------------------------------------------
+def test_admitted_ttl_retires_running_slot(smoke_model):
+    _, model, params = smoke_model
+    s = Scheduler(model, params, max_batch_slots=2, max_len=64,
+                  decode_chunk=2, audit_every_step=True,
+                  page_size=8, num_pages=40)
+    slow = s.submit([1, 2, 3, 4], 40, ttl_steps=3)    # cannot finish in 3
+    ok = s.submit([5, 6, 7], 4)
+    s.run()
+    rs = s.requests[slow]
+    assert rs.status == "deadline_missed"
+    assert 0 < len(rs.tokens) < 40      # partial tokens kept
+    assert s.requests[ok].status == "done"
+    assert s.n_deadline_misses >= 1
+    assert s.pages_in_use() == s.directory_pages()    # slot pages freed
+    s.audit()
+
+
+def test_admitted_deadline_ms_clock(smoke_model):
+    _, model, params = smoke_model
+    t = [0.0]
+    s = Scheduler(model, params, max_batch_slots=2, max_len=64,
+                  decode_chunk=2, audit_every_step=True,
+                  clock=lambda: t[0])
+    rid = s.submit([1, 2, 3], 40, deadline_ms=50.0)
+    s.step()
+    t[0] = 0.2                          # 200 ms later: way past deadline
+    s.step()
+    assert s.requests[rid].status == "deadline_missed"
+    assert not any(r is not None for r in s.slot_req)
+
+
+# ---------------------------------------------------------------------------
+# SLA degradation ladder
+# ---------------------------------------------------------------------------
+def test_ladder_escalates_and_releases(smoke_model):
+    _, model, params = smoke_model
+    t = [0.0]
+    dt = [0.2]                          # 200 ms/step >> 5 ms target
+
+    def clock():
+        t[0] += dt[0]
+        return t[0]
+
+    s = Scheduler(model, params, max_batch_slots=2, max_len=64,
+                  decode_chunk=2, audit_every_step=True,
+                  speculate=True, draft_len=3,
+                  mixed_steps=True, prefill_chunk_budget=8,
+                  page_size=8, num_pages=80, mixed_dispatch="paired",
+                  tbt_target_ms=5.0, ladder_cooldown_steps=1,
+                  clock=clock)
+    for p in PROMPTS:
+        s.submit(p, 24)
+    seen_levels = set()
+    while s.queue or any(r is not None for r in s.slot_req):
+        s.step()
+        seen_levels.add(s.ladder_level)
+        if s.ladder_level == 3:
+            break
+    assert 3 in seen_levels             # climbed the whole ladder
+    assert s.ladder_escalations >= 3
+    tr = s.stats["ladder_transitions"]
+    assert tr["disable_speculation"] >= 1
+    assert tr["shrink_prefill_chunk"] >= 1
+    assert tr["pause_admission"] >= 1
+    assert s._effective_chunk_budget() == 4       # halved at level >= 2
+    # pressure clears -> the ladder releases rung by rung
+    dt[0] = 0.0001
+    s.run()
+    assert s.ladder_level < 3
+    assert s.ladder_deescalations >= 1
+    assert s.stats["ladder_paused_steps"] >= 0
+    s.audit()
+
+
+def test_ladder_streams_bit_identical(smoke_model):
+    """Ladder rungs change SCHEDULING only: a heavily degraded run's
+    per-request streams match a run with the ladder off.  Two pairings:
+    greedy WITH speculation (the disable-speculation rung preserves the
+    argmax chain — spec greedy is bit-identical to plain greedy) and
+    sampled WITHOUT it (shrink-chunk and pause-admission rungs preserve
+    the per-(rid, token-index) keyed streams; a temp>0 spec toggle would
+    legitimately re-route rejected drafts through the residual sampler)."""
+    _, model, params = smoke_model
+
+    def run_pair(**base_kw):
+        def mk(**kw):
+            s = Scheduler(model, params, max_batch_slots=2, max_len=64,
+                          decode_chunk=4, audit_every_step=True,
+                          **base_kw, **kw)
+            for p in PROMPTS[:4]:
+                s.submit(p, 10)
+            return s
+
+        base = mk().run()
+        t = [0.0]
+
+        def slow_clock():
+            t[0] += 0.5
+            return t[0]
+
+        lad = mk(tbt_target_ms=1.0, ladder_cooldown_steps=1,
+                 clock=slow_clock)
+        res = lad.run()
+        assert lad.ladder_escalations >= 1  # it really degraded
+        assert res == base
+
+    run_pair(speculate=True, draft_len=3)
+    run_pair(temperature=0.7, rng=jax.random.PRNGKey(9),
+             mixed_steps=True, prefill_chunk_budget=8,
+             page_size=8, num_pages=60)
+
+
+def test_ladder_off_by_default(smoke_model):
+    _, model, params = smoke_model
+    s = _sched(model, params)
+    s.run()
+    assert s.ladder_level == 0 and s.ladder_escalations == 0
+    assert s.stats["tbt_p95_ms"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# chaos determinism: the new faults fire deterministically
+# ---------------------------------------------------------------------------
+def test_new_faults_fire_deterministically(smoke_model):
+    _, model, params = smoke_model
+
+    def counts():
+        s = _spill_sched(model, params, integrity="checksum",
+                         fault_plan=FaultPlan(
+                             evict_steps=(2,),
+                             bitflip_spilled_page_steps=(2,),
+                             nan_logit_steps=(4,)))
+        s.run()
+        s.audit()
+        return (dict(s._faults.fired), s.n_poisoned,
+                s.bitflips_injected, s.corruptions_detected,
+                s.results())
+
+    assert counts() == counts()
